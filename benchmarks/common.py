@@ -1,0 +1,44 @@
+"""Shared benchmark harness utilities.
+
+Each benchmark module exposes ``run(quick: bool) -> list[dict]`` and prints
+a ``name,us_per_call,derived`` CSV block; ``benchmarks/run.py`` drives them
+all (one per paper table/figure — see DESIGN.md §7 for the index).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (jit-compiled fn)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(rows: List[Dict], name: str):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    print(f"# wrote {path}")
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = {k: v for k, v in r.items()
+                   if k not in ("name", "us_per_call")}
+        print(f"{r.get('name', name)},{us},{json.dumps(derived, default=str)}")

@@ -1,0 +1,41 @@
+"""Paper §A.1 / Fig. 8 Monte-Carlo: victim metric u of a normal token after
+smoothing, vs the number of rotated spike tokens in the activation.
+
+Expected pattern (paper): u is benign at 1 spike token, WORST around 2
+("two tokens cannot cover the whole channel"), and improves as more spike
+tokens stack to a consistent scale."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax
+
+from repro.core import outliers
+from benchmarks.common import emit
+
+
+def run(quick: bool = False):
+    n_seeds = 4 if quick else 16
+    k = 2048 if quick else 4096
+    rows = []
+    for ntok in (1, 2, 4, 8, 16):
+        for rot in (True, False):
+            us = [float(outliers.victim_u_monte_carlo(
+                jax.random.PRNGKey(s), k=k, n_tokens=64,
+                n_spike_tokens=ntok, spikes_per_token=2,
+                spike_scale=1000.0, rotate_first=rot))
+                for s in range(n_seeds)]
+            rows.append({"name": f"{'rot' if rot else 'raw'}/{ntok}tok",
+                         "rotated": rot, "spike_tokens": ntok,
+                         "u_mean": round(float(np.mean(us)), 3),
+                         "u_p90": round(float(np.percentile(us, 90)), 3)})
+    for r in rows:
+        print(f"  {r['name']:12s} u={r['u_mean']:.3f} p90={r['u_p90']:.3f}",
+              flush=True)
+    emit(rows, "fig8_victims")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark; JSON artifacts land
+in benchmarks/results/.  Table 3 (SpinQuant) is a training-based baseline
+the paper *beats*; out of scope per DESIGN.md §7 (noted, not silently
+dropped).  The roofline/dry-run tables are produced by
+``repro.launch.dryrun`` (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_smoothness, fig6_kernel, fig8_victims,
+                            fig9_outlier_removal, table1_ppl,
+                            table4_group_size)
+    suite = {
+        "table1_ppl": table1_ppl.run,
+        "table2_acc": lambda quick: print(
+            "  (folded into table1_ppl — acc column)"),
+        "table3_spinquant": lambda quick: print(
+            "  (skipped: training-based baseline, DESIGN.md §7)"),
+        "table4_group_size": table4_group_size.run,
+        "fig2_smoothness": fig2_smoothness.run,
+        "fig6_kernel": fig6_kernel.run,
+        "fig8_victims": fig8_victims.run,
+        "fig9_outlier_removal": fig9_outlier_removal.run,
+    }
+    failures = 0
+    for name, fn in suite.items():
+        if args.only and name != args.only:
+            continue
+        print(f"== {name} ==", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"== {name} done in {time.time() - t0:.1f}s ==", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Merge dry-run result JSONs (later files win per cell) and print the
+EXPERIMENTS.md §Roofline markdown table.
+
+    PYTHONPATH=src python -m benchmarks.summarize_dryrun \
+        benchmarks/results/dryrun_all.json benchmarks/results/dryrun_moe*.json
+"""
+import glob
+import json
+import sys
+
+
+def fmt_t(sec):
+    if sec == 0:
+        return "~0"
+    if sec < 1e-4:
+        return f"{sec * 1e6:.0f}us"
+    if sec < 1.0:
+        return f"{sec * 1e3:.2f}ms"
+    return f"{sec:.2f}s"
+
+
+def main(paths):
+    cells = {}
+    for p in paths:
+        for rec in json.load(open(p)):
+            cells[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    rows = [r for r in cells.values()
+            if "error" not in r and "skipped" not in r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | t_comp | t_mem | t_coll | dominant "
+          "| MFU@bound | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        gb = (r.get("bytes_per_device") or 0) / 1e9
+        over = " **(>16!)**" if gb > 16 else ""
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_t(r['t_comp'])} | {fmt_t(r['t_mem'])} "
+              f"| {fmt_t(r['t_coll'])} | {r['dominant']} "
+              f"| {r['mfu_bound']:.3f} | {gb:.1f}{over} |")
+    skips = [r for r in cells.values() if "skipped" in r]
+    errs = [r for r in cells.values() if "error" in r]
+    print(f"\ncompiled={len(rows)} skipped={len(skips)} errors={len(errs)}")
+    for r in errs:
+        print("ERROR:", r["arch"], r["shape"], r["mesh"],
+              r["error"][:100])
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or sorted(
+        glob.glob("benchmarks/results/dryrun_*.json"))
+    main(paths)

@@ -1,0 +1,40 @@
+"""Paper Table 4: group-size ablation of the runtime smoothing scale.
+
+RS degrades sharply as the group grows (victims from grouped scales under
+spikes); RRS stays flat because rotation homogenizes the scales — this is
+the paper's justification for the fused g=128 kernel.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+from repro.configs.base import QuantConfig
+from repro.core import outliers
+from benchmarks.common import emit
+from benchmarks.table1_ppl import eval_ppl_acc, get_trained_params
+
+GROUPS = [1, 32, 64, 128, 256]
+
+
+def run(quick: bool = False):
+    model, params, pipeline = get_trained_params(quick=quick)
+    params = outliers.inject_model_outliers(params, jax.random.PRNGKey(17),
+                                            n_channels=12, scale=40.0)
+    rows = []
+    for method in ("rs", "rrs"):
+        for g in GROUPS:
+            qcfg = QuantConfig(4, 4, 16, method=method, group_size=g,
+                               w_quantizer="rtn")
+            ppl, _ = eval_ppl_acc(model, params, pipeline, qcfg,
+                                  n_batches=2)
+            rows.append({"name": f"{method}/g{g}", "method": method,
+                         "group": g, "ppl": round(ppl, 3)})
+            print(f"  {method:4s} g={g:4d} ppl={ppl:10.3f}", flush=True)
+    emit(rows, "table4_group_size")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

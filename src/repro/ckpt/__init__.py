@@ -1,0 +1,3 @@
+"""Checkpointing: atomic sharded saves, async writer, elastic restore."""
+from repro.ckpt.checkpoint import AsyncSaver, restore, save
+from repro.ckpt.manager import CheckpointManager

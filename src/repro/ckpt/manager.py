@@ -1,0 +1,69 @@
+"""Checkpoint manager: retention, auto-resume, corruption fallback.
+
+``latest_valid()`` walks checkpoints newest-first and returns the first one
+that loads cleanly — a node that died mid-write leaves only a ``.tmp``
+directory (ignored), and a corrupted commit is skipped via checksums.
+This is the restart path after preemption / node failure.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.ckpt import checkpoint as ckpt
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._saver = ckpt.AsyncSaver()
+        # sweep tmp dirs left by crashed writers (startup only — a live
+        # async writer owns its tmp dir until the atomic rename)
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None,
+             async_: bool = True):
+        path = self.path_for(step)
+        if async_:
+            self._saver.save_async(path, tree, step, extra)
+        else:
+            ckpt.save(path, tree, step, extra)
+        self._gc()
+
+    def wait(self):
+        self._saver.wait()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.path_for(s), ignore_errors=True)
+
+    def latest_valid(self, target_tree, shardings=None
+                     ) -> Optional[Tuple[Any, Dict]]:
+        """Newest checkpoint that restores cleanly, else None."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            try:
+                return ckpt.restore(self.path_for(step), target_tree,
+                                    shardings)
+            except BaseException:
+                continue
+        return None

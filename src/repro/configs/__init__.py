@@ -1,0 +1,41 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+llama3-8b).  `get_config(name)` returns the FULL assignment config;
+`get_smoke_config(name)` returns the reduced same-family config used by CPU
+smoke tests."""
+from repro.configs.base import (ALL_SHAPES, SHAPES_BY_NAME, MeshConfig,
+                                MLAConfig, ModelConfig, MoEConfig,
+                                QuantConfig, ShapeConfig, SSMConfig,
+                                TrainConfig)
+
+_REGISTRY = {}
+
+
+def register(name: str, full, smoke):
+    _REGISTRY[name] = (full, smoke)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (deepseek_v3_671b, granite_34b,  # noqa: F401
+                               h2o_danube_1_8b, llama3_8b,
+                               llama32_vision_11b, mamba2_370m, minicpm_2b,
+                               moonshot_v1_16b_a3b, smollm_135m, whisper_base,
+                               zamba2_7b)
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name][0]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name][1]

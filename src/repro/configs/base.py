@@ -1,0 +1,339 @@
+"""Configuration dataclasses for the RRS framework.
+
+Everything in the system is driven by three configs:
+
+* :class:`ModelConfig`   — architecture definition (family + dims).
+* :class:`QuantConfig`   — the paper's quantization scheme (A/W/KV bits,
+  smoothing method, group size, rotation options).
+* :class:`ShapeConfig`   — an (input-shape × step-kind) cell from the
+  assignment (train_4k / prefill_32k / decode_32k / long_500k).
+
+Configs are plain frozen dataclasses so they hash (usable as jit static
+args) and serialize to/from JSON for checkpoint metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+METHODS = ("none", "rtn", "gptq", "smoothquant", "rs", "quarot", "rrs")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Paper §4.1 settings.
+
+    a_bits/w_bits/kv_bits of 16 mean "leave in bf16".  The paper's headline
+    schemes map to:
+      A4W4KV4  -> QuantConfig(4, 4, 4, method=...)
+      A4W4KV16 -> QuantConfig(4, 4, 16, method=...)
+      A4W16KV16-> QuantConfig(4, 16, 16, method=...)
+    """
+
+    a_bits: int = 16
+    w_bits: int = 16
+    kv_bits: int = 16
+    method: str = "none"          # one of METHODS
+    group_size: int = 128         # runtime-smooth group == GEMM K-block
+    kv_group_size: int = 128      # paper: sub-channel KV, g=128
+    w_quantizer: str = "rtn"      # "rtn" | "gptq"
+    reorder: bool = True          # paper Fig.4 step 1 (channel reorder)
+    static_reorder: bool = False  # freeze reorder indices (cheaper variant)
+    rotate_block: int = 0         # 0 => full-K rotation; >0 => block-diag
+    act_sym: bool = True          # symmetric activation quant (paper)
+    exec_path: str = "fake"       # "fake" (QDQ bf16) | "kernel" (int8 pallas)
+    kv_storage: str = "fake"      # "fake" (QDQ bf16 cache) | "int8"
+                                  # (codes+scales at rest — halves decode
+                                  # HBM traffic; beyond-paper §Perf)
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; want {METHODS}")
+        if self.a_bits not in (4, 8, 16) or self.w_bits not in (4, 8, 16):
+            raise ValueError("a_bits/w_bits must be 4, 8 or 16")
+        if self.kv_bits not in (4, 8, 16):
+            raise ValueError("kv_bits must be 4, 8 or 16")
+
+    @property
+    def quantize_acts(self) -> bool:
+        return self.a_bits < 16 and self.method != "none"
+
+    @property
+    def quantize_weights(self) -> bool:
+        return self.w_bits < 16 and self.method != "none"
+
+    @property
+    def uses_rotation(self) -> bool:
+        return self.method in ("quarot", "rrs")
+
+    @property
+    def uses_runtime_smooth(self) -> bool:
+        return self.method in ("rs", "rrs")
+
+
+FP16 = QuantConfig()
+A4W4KV4_RRS = QuantConfig(4, 4, 4, method="rrs", w_quantizer="gptq")
+A4W4KV16_RRS = QuantConfig(4, 4, 16, method="rrs", w_quantizer="gptq")
+A4W16KV16_RS = QuantConfig(4, 16, 16, method="rs")
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0           # per-expert hidden dim
+    router_aux_loss: float = 0.001
+    moe_layer_start: int = 0       # dense layers before MoE kicks in (dsv3: 3)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD dims."""
+    state_dim: int = 128          # N (ssm_state)
+    head_dim: int = 64            # P
+    num_heads: int = 0            # derived: d_inner // head_dim if 0
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256         # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # FAMILIES
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 512
+    head_dim: int = 0              # 0 => d_model // num_heads
+    max_seq_len: int = 4096
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    sliding_window: int = 0        # 0 => full attention (h2o-danube: 4096)
+    attention_bias: bool = False
+    # MoE / MLA / SSM sub-configs (None for plain dense)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): attention block shared + inserted every k mamba blocks
+    hybrid_attn_every: int = 0     # 0 => no interleaved attention
+    hybrid_shared_attn: bool = False
+    # vlm: cross-attention layers (llama-3.2-vision style)
+    cross_attn_layers: Tuple[int, ...] = ()
+    vision_tokens: int = 0         # stub frontend: #patch embeddings
+    vision_dim: int = 0
+    # audio (whisper): encoder-decoder
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0       # frame embeddings from stub conv frontend
+    # numerics
+    dtype: str = "bfloat16"
+    # muP-ish scaling knobs (MiniCPM: scale_emb=12, depth-scaled residual,
+    # logits divided by d_model/dim_model_base)
+    emb_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_scale: float = 1.0
+    # which projector names get quantized (paper: all linear layers)
+    quantize_projs: Tuple[str, ...] = (
+        "qkv", "o", "gate", "up", "down", "router_dense")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if long-context decode is admissible (SSM/hybrid/SWA)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path (enc-dec incl.)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n = V * d  # embed
+        if not self.tie_embeddings:
+            n += V * d
+        if self.family == "ssm" or self.family == "hybrid":
+            ssm = self.ssm or SSMConfig()
+            d_in = ssm.expand * d
+            nheads = ssm.num_heads or d_in // ssm.head_dim
+            per = (d * (2 * d_in + 2 * ssm.state_dim * 0 + nheads)  # in_proj-ish
+                   + d_in * d)
+            # in_proj: d -> 2*d_in + 2*n_groups*state + nheads (z,x,B,C,dt)
+            per = d * (2 * d_in + 2 * ssm.state_dim + nheads) + d_in * d
+            per += ssm.conv_width * (d_in + 2 * ssm.state_dim)
+            per += 2 * nheads  # A, D
+            n += L * per
+            if self.family == "hybrid" and self.hybrid_attn_every:
+                n_attn = max(1, L // self.hybrid_attn_every)
+                if self.hybrid_shared_attn:
+                    n_attn = 1  # shared weights
+                attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + \
+                    self.num_heads * hd * d + 3 * d * self.d_ff
+                n += n_attn * attn
+            return n
+        # attention
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) \
+            + self.num_heads * hd * d
+        if self.mla is not None:
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_hd
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * self.num_heads *
+                    (m.qk_nope_head_dim + m.v_head_dim)
+                    + self.num_heads * m.v_head_dim * d)
+        if self.moe is not None and self.moe.num_experts:
+            e = self.moe
+            dense_ffn = 3 * d * self.d_ff
+            expert_ffn = 3 * d * e.expert_d_ff
+            moe_ffn = (e.num_experts + e.num_shared_experts) * expert_ffn \
+                + d * e.num_experts  # router
+            n_dense_layers = min(e.moe_layer_start, L)
+            n += n_dense_layers * (attn + dense_ffn)
+            n += (L - n_dense_layers) * (attn + moe_ffn)
+        else:
+            ffn = 3 * d * self.d_ff
+            n += L * (attn + ffn)
+        if self.is_encoder_decoder:
+            # encoder blocks + cross attention in decoder
+            enc = self.encoder_layers * (attn + 3 * d * self.d_ff)
+            xattn = L * (attn)  # cross-attn per decoder layer
+            n += enc + xattn
+        if self.cross_attn_layers:
+            n += len(self.cross_attn_layers) * (
+                d * hd * (self.num_heads + 2 * self.num_kv_heads)
+                + self.num_heads * hd * d)
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only routed top-k)."""
+        if self.moe is None or not self.moe.num_experts:
+            return self.param_count()
+        e = self.moe
+        d, L = self.d_model, self.num_layers
+        full = self.param_count()
+        expert_ffn = 3 * d * e.expert_d_ff
+        n_moe_layers = L - min(e.moe_layer_start, L)
+        inactive = n_moe_layers * (e.num_experts - e.experts_per_token) \
+            * expert_ffn
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assignment cells)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # "cosine" | "wsd" | "linear" | "const"
+    wsd_stable_frac: float = 0.8      # minicpm-style WSD
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"          # "adamw" | "adafactor"
+    microbatches: int = 1             # grad-accumulation factor
+    remat: str = "dots"               # "none" | "dots" | "full"
+    grad_compression: str = "none"    # "none" | "int8_ef"
+    seed: int = 0
+    zero_shard_optimizer: bool = True
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (1, 1)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Serialization helpers
+# ---------------------------------------------------------------------------
+
+def _to_jsonable(obj: Any) -> Any:
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {k: _to_jsonable(v) for k, v in dataclasses.asdict(obj).items()}
+    if isinstance(obj, (list, tuple)):
+        return [_to_jsonable(v) for v in obj]
+    return obj
+
+
+def config_to_json(cfg: Any) -> str:
+    return json.dumps(_to_jsonable(cfg), sort_keys=True)
+
+
+def model_config_from_dict(d: Dict[str, Any]) -> ModelConfig:
+    d = dict(d)
+    for key, cls in (("moe", MoEConfig), ("mla", MLAConfig), ("ssm", SSMConfig)):
+        if d.get(key) is not None and isinstance(d[key], dict):
+            d[key] = cls(**d[key])
+    for key in ("cross_attn_layers", "quantize_projs"):
+        if key in d and isinstance(d[key], list):
+            d[key] = tuple(d[key])
+    return ModelConfig(**d)

@@ -1,0 +1,29 @@
+"""deepseek-v3-671b — MLA + fine-grained MoE (1 shared + 256 routed top-8)
+[arXiv:2412.19437].  Assigned: 61L d_model=7168 128H d_ff=2048
+vocab=129280, MoE 256e top-8.  First 3 layers dense (DSv3); MLA dims from
+the paper (q_lora 1536, kv_lora 512, qk 128+64 rope, v 128).  MTP noted in
+DESIGN.md (training-side extra head, out of serving scope)."""
+from repro.configs import register
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128,
+    d_ff=2048, vocab_size=129280, max_seq_len=32768, rope_theta=10000.0,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64,
+                  v_head_dim=128),
+    moe=MoEConfig(num_experts=256, experts_per_token=8,
+                  num_shared_experts=1, expert_d_ff=2048,
+                  moe_layer_start=3),
+)
+SMOKE = ModelConfig(
+    name="deepseek-smoke", family="moe",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=96, vocab_size=512, max_seq_len=256,
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                  qk_rope_head_dim=8, v_head_dim=16),
+    moe=MoEConfig(num_experts=8, experts_per_token=2,
+                  num_shared_experts=1, expert_d_ff=96, moe_layer_start=1),
+)
+register("deepseek-v3-671b", FULL, SMOKE)

@@ -1,0 +1,17 @@
+"""granite-34b — IBM Granite Code 34B, llama-arch MQA [arXiv:2405.04324].
+Assigned: 88L d_model=6144 48H (GQA kv=1 = MQA) d_ff=24576 vocab=49152."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-34b", family="dense",
+    num_layers=88, d_model=6144, num_heads=48, num_kv_heads=1,
+    head_dim=128, d_ff=24576, vocab_size=49152, max_seq_len=32768,
+    rope_theta=10000.0,
+)
+SMOKE = ModelConfig(
+    name="granite-smoke", family="dense",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=256, vocab_size=512, max_seq_len=512,
+)
+register("granite-34b", FULL, SMOKE)

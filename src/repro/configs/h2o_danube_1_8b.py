@@ -1,0 +1,19 @@
+"""h2o-danube-1.8b — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818].  Assigned: 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000, SWA.  head_dim 80; window 4096 -> runs long_500k with the
+ring cache."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="h2o-danube-1.8b", family="dense",
+    num_layers=24, d_model=2560, num_heads=32, num_kv_heads=8,
+    head_dim=80, d_ff=6912, vocab_size=32000, max_seq_len=1048576,
+    sliding_window=4096, rope_theta=10000.0,
+)
+SMOKE = ModelConfig(
+    name="danube-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=128, vocab_size=512, max_seq_len=512, sliding_window=32,
+)
+register("h2o-danube-1.8b", FULL, SMOKE)

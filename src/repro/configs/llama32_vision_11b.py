@@ -1,0 +1,23 @@
+"""llama-3.2-vision-11b — text backbone with cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].  Assigned: 40L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=128256.  8 cross-attn layers (every 5th);
+vision tower is a STUB -> input_specs feeds (B, 1601, 1280) patch
+embeddings through a linear projector."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=128256, max_seq_len=32768,
+    rope_theta=500000.0,
+    cross_attn_layers=(4, 9, 14, 19, 24, 29, 34, 39),
+    vision_tokens=1601, vision_dim=1280,
+)
+SMOKE = ModelConfig(
+    name="llama-vision-smoke", family="vlm",
+    num_layers=6, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, max_seq_len=512,
+    cross_attn_layers=(2, 5), vision_tokens=16, vision_dim=32,
+)
+register("llama-3.2-vision-11b", FULL, SMOKE)

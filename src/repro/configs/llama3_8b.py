@@ -1,0 +1,18 @@
+"""llama3-8b — the paper's own evaluation family (Table 1/2 heart).  Not
+part of the assigned 10; included as the paper-faithful reference arch:
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="llama3-8b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=128256, max_seq_len=32768,
+    rope_theta=500000.0,
+)
+SMOKE = ModelConfig(
+    name="llama3-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, max_seq_len=512,
+)
+register("llama3-8b", FULL, SMOKE)

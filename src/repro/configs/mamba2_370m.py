@@ -1,0 +1,21 @@
+"""mamba2-370m — SSD state-space model [arXiv:2405.21060].  Assigned: 48L
+d_model=1024 (attn-free) vocab=50280, ssm_state=128.  d_inner = 2*d_model,
+head_dim 64 -> 32 SSD heads.  Runs long_500k (O(1) decode state)."""
+from repro.configs import register
+from repro.configs.base import ModelConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    num_layers=48, d_model=1024, num_heads=1, num_kv_heads=1, d_ff=0,
+    vocab_size=50280, max_seq_len=1048576, tie_embeddings=True,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256),
+)
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm",
+    num_layers=3, d_model=64, num_heads=1, num_kv_heads=1, d_ff=0,
+    vocab_size=512, max_seq_len=512, tie_embeddings=True,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4,
+                  chunk_size=16),
+)
+register("mamba2-370m", FULL, SMOKE)

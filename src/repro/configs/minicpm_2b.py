@@ -1,0 +1,25 @@
+"""minicpm-2b — MiniCPM with WSD schedule + muP-style scaling
+[arXiv:2404.06395].  Assigned: 40L d_model=2304 36H (kv=36) d_ff=5760
+vocab=122753.  scale_emb=12, depth-scaled residual 1.4/sqrt(L), logits
+divided by d_model/256; WSD is the training schedule (TrainConfig)."""
+import math
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+_L = 40
+FULL = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=_L, d_model=2304, num_heads=36, num_kv_heads=36,
+    head_dim=64, d_ff=5760, vocab_size=122753, max_seq_len=32768,
+    tie_embeddings=True, rope_theta=10000.0,
+    emb_scale=12.0, residual_scale=1.4 / math.sqrt(_L),
+    logit_scale=256.0 / 2304.0,
+)
+SMOKE = ModelConfig(
+    name="minicpm-smoke", family="dense",
+    num_layers=3, d_model=96, num_heads=6, num_kv_heads=6, head_dim=16,
+    d_ff=256, vocab_size=511, max_seq_len=512, tie_embeddings=True,
+    emb_scale=12.0, residual_scale=1.4 / math.sqrt(3),
+    logit_scale=256.0 / 96.0,
+)
+register("minicpm-2b", FULL, SMOKE)

@@ -1,0 +1,25 @@
+"""moonshot-v1-16b-a3b — Kimi/Moonlight MoE, 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B].  Assigned: 48L d_model=2048 16H (GQA
+kv=16) d_ff=1408 vocab=163840, MoE 64e top-6.  Moonlight follows the
+DeepSeek-V3 recipe (first layer dense); shared experts not in the
+assignment line -> 0."""
+from repro.configs import register
+from repro.configs.base import ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+    head_dim=128, d_ff=1408, vocab_size=163840, max_seq_len=32768,
+    rope_theta=50000.0,
+    moe=MoEConfig(num_experts=64, experts_per_token=6,
+                  num_shared_experts=0, expert_d_ff=1408,
+                  moe_layer_start=1),
+)
+SMOKE = ModelConfig(
+    name="moonshot-smoke", family="moe",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=96, vocab_size=512, max_seq_len=256,
+    moe=MoEConfig(num_experts=8, experts_per_token=2,
+                  num_shared_experts=0, expert_d_ff=96, moe_layer_start=1),
+)
+register("moonshot-v1-16b-a3b", FULL, SMOKE)

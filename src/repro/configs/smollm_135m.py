@@ -1,0 +1,18 @@
+"""smollm-135m — HuggingFace SmolLM-135M, small llama-arch
+[hf:HuggingFaceTB/SmolLM-135M].  Assigned: 30L d_model=576 9H (GQA kv=3)
+d_ff=1536 vocab=49152.  head_dim 64, tied embeddings."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    head_dim=64, d_ff=1536, vocab_size=49152, max_seq_len=32768,
+    tie_embeddings=True, rope_theta=10000.0,
+)
+SMOKE = ModelConfig(
+    name="smollm-smoke", family="dense",
+    num_layers=3, d_model=72, num_heads=3, num_kv_heads=3, head_dim=24,
+    d_ff=192, vocab_size=512, max_seq_len=512, tie_embeddings=True,
+)
+register("smollm-135m", FULL, SMOKE)

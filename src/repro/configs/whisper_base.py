@@ -1,0 +1,22 @@
+"""whisper-base — encoder-decoder audio backbone [arXiv:2212.04356].
+Assigned: 6L d_model=512 8H d_ff=2048 vocab=51865.  Conv frontend is a
+STUB: input_specs feeds precomputed (B, S_enc, 512) frame embeddings.
+6 encoder + 6 decoder layers (whisper-base).  The assignment's 32k shapes
+exercise the backbone well beyond the checkpoint's 448-token decoder
+context — noted in DESIGN.md §5."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    head_dim=64, d_ff=2048, vocab_size=51865, max_seq_len=32768,
+    is_encoder_decoder=True, encoder_layers=6, encoder_seq_len=1500,
+)
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, max_seq_len=256,
+    is_encoder_decoder=True, encoder_layers=2, encoder_seq_len=32,
+)
+register("whisper-base", FULL, SMOKE)

@@ -1,0 +1,24 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].  Assigned: 81L d_model=3584 32H (kv=32) d_ff=14336
+vocab=32000, ssm_state=64.  One shared attn+MLP block applied every 6
+Mamba2 layers (13 applications + 3-layer tail).  Runs long_500k."""
+from repro.configs import register
+from repro.configs.base import ModelConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    head_dim=112, d_ff=14336, vocab_size=32000, max_seq_len=1048576,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256),
+    hybrid_attn_every=6, hybrid_shared_attn=True,
+)
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid",
+    num_layers=7, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, max_seq_len=512,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4,
+                  chunk_size=16),
+    hybrid_attn_every=3, hybrid_shared_attn=True,
+)
+register("zamba2-7b", FULL, SMOKE)

@@ -1,0 +1,246 @@
+"""Hadamard rotations (paper §2.3, §3.3 and QuaRot-style plumbing).
+
+The rotation matrix used throughout is the normalized Hadamard
+``R = H_K / sqrt(K)`` with entries ±1/√K, orthogonal (R Rᵀ = I).  Applying it
+to a token spreads a spike outlier O_i into ±O_i/√K across all channels
+(paper Eq. 4) — the mechanism that frees the "victims".
+
+Implementation notes (TPU adaptation, DESIGN.md §3):
+
+* K = 2^m           → in-place fast Walsh–Hadamard transform, O(K log K).
+* K = 2^m · b, b ∈ {12, 20, 28, 40} → Kronecker H_{2^m} ⊗ H_b with a known
+  base Hadamard (same trick as QuaRot's `get_hadK`).
+* anything else / sharded-K layers → **block-diagonal** Hadamard: rotate
+  contiguous blocks of size `block` (largest admissible divisor by default).
+  Still orthogonal, zero cross-device collectives under tensor parallelism.
+
+All transforms are linear involutions up to normalization: applying
+``hadamard_transform`` twice returns the input (H² = K·I, and we normalize
+by 1/√K each time).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# base Hadamard matrices for non-power-of-2 sizes (Paley / known constructions)
+# ---------------------------------------------------------------------------
+
+
+def _jacobsthal(q: int) -> np.ndarray:
+    """Jacobsthal matrix Q[i,j] = chi(i-j) for prime q."""
+    residues = set((i * i) % q for i in range(1, q))
+
+    def chi(a):
+        a %= q
+        if a == 0:
+            return 0
+        return 1 if a in residues else -1
+
+    return np.array([[chi(i - j) for j in range(q)] for i in range(q)],
+                    dtype=np.int64)
+
+
+def _paley1_hadamard(q: int) -> np.ndarray:
+    """Paley construction I: Hadamard of order q+1 for prime q ≡ 3 mod 4."""
+    n = q + 1
+    Q = _jacobsthal(q)
+    H = np.ones((n, n), dtype=np.int64)
+    H[1:, 1:] = Q + np.eye(q, dtype=np.int64)
+    H[1:, 0] = -1
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all(), \
+        f"Paley I failed for q={q}"
+    return H.astype(np.float32)
+
+
+def _paley2_hadamard(q: int) -> np.ndarray:
+    """Paley construction II: Hadamard of order 2(q+1), prime q ≡ 1 mod 4."""
+    n = 2 * (q + 1)
+    Q = _jacobsthal(q)
+    # symmetric conference matrix C of order q+1
+    C = np.ones((q + 1, q + 1), dtype=np.int64)
+    C[0, 0] = 0
+    C[1:, 1:] = Q
+    # H = C ⊗ [[1,1],[1,-1]] + I ⊗ [[1,-1],[-1,-1]]
+    A = np.array([[1, 1], [1, -1]], dtype=np.int64)
+    B = np.array([[1, -1], [-1, -1]], dtype=np.int64)
+    H = np.kron(C, A) + np.kron(np.eye(q + 1, dtype=np.int64), B)
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all(), \
+        f"Paley II failed for q={q}"
+    return H.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def base_hadamard(n: int) -> np.ndarray:
+    """Known Hadamard matrix of order n (n=1,2 or n≡0 mod 4, small)."""
+    if n == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    if n == 2:
+        return np.array([[1, 1], [1, -1]], dtype=np.float32)
+    if n % 4 != 0:
+        raise ValueError(f"No Hadamard matrix of order {n}")
+    if _is_prime(n - 1) and (n - 1) % 4 == 3:
+        return _paley1_hadamard(n - 1)
+    if n % 2 == 0 and _is_prime(n // 2 - 1) and (n // 2 - 1) % 4 == 1:
+        return _paley2_hadamard(n // 2 - 1)
+    # Sylvester doubling from a smaller base
+    if n % 2 == 0:
+        try:
+            h = base_hadamard(n // 2)
+            return np.block([[h, h], [h, -h]]).astype(np.float32)
+        except ValueError:
+            pass
+    raise ValueError(f"No construction for Hadamard order {n}")
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in range(2, int(n ** 0.5) + 1):
+        if n % p == 0:
+            return False
+    return True
+
+
+def _factor_pow2(k: int) -> Tuple[int, int]:
+    """k = 2^m * b with b odd -> (2^m, b)."""
+    m = 0
+    while k % 2 == 0:
+        k //= 2
+        m += 1
+    return 2 ** m, k
+
+
+def supported_full_size(k: int) -> bool:
+    """Can we build a full-K Hadamard for this K?"""
+    p2, b = _factor_pow2(k)
+    if b == 1:
+        return True
+    try:
+        base_hadamard(b * _small_pow2_for_base(b, p2))
+        return True
+    except ValueError:
+        return False
+
+
+def _small_pow2_for_base(b: int, p2: int) -> int:
+    # need b*2^j ≡ 0 mod 4 construction; try to find known order b*2^j
+    for j in (0, 1, 2):
+        if (b * (2 ** j)) % 4 == 0 or b * (2 ** j) in (1, 2):
+            if p2 >= 2 ** j:
+                return 2 ** j
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# fast Walsh–Hadamard transform (power-of-2), pure jnp
+# ---------------------------------------------------------------------------
+
+def fwht(x: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """FWHT along the last axis. Last axis must be a power of 2.
+
+    Uses reshape-butterflies: log2(K) passes of (a+b, a-b) — XLA fuses this
+    into a handful of elementwise ops; on TPU it is bandwidth-bound as the
+    paper's online rotation should be.
+    """
+    k = x.shape[-1]
+    if k & (k - 1):
+        raise ValueError(f"fwht needs power-of-2 size, got {k}")
+    orig_shape = x.shape
+    h = 1
+    y = x.reshape(-1, k)
+    while h < k:
+        y = y.reshape(-1, k // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        y = y.reshape(-1, k)
+        h *= 2
+    if normalize:
+        y = y * (1.0 / np.sqrt(k)).astype(np.float32)
+    return y.reshape(orig_shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# general rotation
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(k: int) -> np.ndarray:
+    """Full normalized K×K Hadamard (for small K / weights offline)."""
+    p2, b = _factor_pow2(k)
+    if b == 1:
+        h: np.ndarray = np.array([[1.0]], dtype=np.float32)
+        while h.shape[0] < k:
+            h = np.block([[h, h], [h, -h]])
+        return (h / np.sqrt(k)).astype(np.float32)
+    j = _small_pow2_for_base(b, p2)
+    hb = base_hadamard(b * j)
+    rem = p2 // j
+    if rem * j * b != k:
+        raise ValueError(f"cannot factor Hadamard order {k}")
+    h2: np.ndarray = np.array([[1.0]], dtype=np.float32)
+    while h2.shape[0] < rem:
+        h2 = np.block([[h2, h2], [h2, -h2]])
+    return (np.kron(h2, hb) / np.sqrt(k)).astype(np.float32)
+
+
+def largest_pow2_divisor(k: int) -> int:
+    return k & (-k)
+
+
+def pick_rotate_block(k: int, max_block: int = 0) -> int:
+    """Choose the rotation block size for dimension K.
+
+    0 return value means "full K" (K itself is constructible).  Otherwise the
+    largest power-of-2 divisor (capped by max_block if given) — the
+    block-diagonal TPU-native mode.
+    """
+    cap = max_block or k
+    if k <= cap and supported_full_size(k):
+        return 0
+    b = min(largest_pow2_divisor(k), cap)
+    # block-diagonal blocks must be power of 2 for fwht
+    while b & (b - 1):
+        b //= 2
+    return max(b, 1)
+
+
+def rotate(x: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """Apply the normalized Hadamard rotation along the last axis.
+
+    block=0   → full-K rotation (FWHT if K=2^m else matmul with H_K)
+    block=b>0 → block-diagonal: reshape to (..., K//b, b), FWHT each block.
+    The transform is orthogonal in all modes, so (X R)(Rᵀ Wᵀ) == X Wᵀ.
+    """
+    k = x.shape[-1]
+    if block in (0, k):
+        if k & (k - 1) == 0:
+            return fwht(x)
+        h = jnp.asarray(hadamard_matrix(k), dtype=x.dtype)
+        return (x.astype(jnp.float32) @ h.astype(jnp.float32)).astype(x.dtype)
+    if k % block != 0:
+        raise ValueError(f"K={k} not divisible by rotate block {block}")
+    *lead, _ = x.shape
+    xb = x.reshape(*lead, k // block, block)
+    return fwht(xb).reshape(*lead, k)
+
+
+def rotate_weight_in(w: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """Rotate weight along its input(K) axis: W' = W Rᵀ... for Y=(XR)(W R)ᵀ.
+
+    With symmetric H (Hᵀ = H for Sylvester/Kronecker-symmetric bases we use),
+    rotating W rows by the same transform keeps X Wᵀ invariant:
+    (X R)(W R)ᵀ = X R Rᵀ Wᵀ = X Wᵀ.  `w` is (M, K); we rotate the last axis.
+    """
+    return rotate(w, block=block)
+
+
+def rotation_is_exact(k: int, block: int = 0) -> bool:
+    """True when rotate() composed with itself is the identity (orthogonal)."""
+    return True  # all provided modes are orthogonal by construction

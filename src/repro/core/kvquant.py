@@ -1,0 +1,52 @@
+"""KV-cache quantization (paper §4.1): sub-channel symmetric RTN, g=128.
+
+Applied along the head_dim axis of K and V tensors.  Beyond-paper: the same
+scheme is reused for the DeepSeek MLA latent cache (rank axis) and for
+Mamba2 SSM state snapshots (state axis) — flagged in DESIGN.md §8.5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class QuantizedKV(NamedTuple):
+    codes: jnp.ndarray     # int8 codes, same shape as the fp tensor
+    scales: jnp.ndarray    # (..., groups, 1) f32
+
+
+def kv_quantize(kv: jnp.ndarray, bits: int = 4,
+                group: int = 128) -> QuantizedKV:
+    """Quantize along the last axis in groups (last axis = head_dim or a
+    flattened (heads*head_dim) lane, padded by the caller if needed)."""
+    if bits >= 16:
+        raise ValueError("kv_quantize called with >=16 bits")
+    g = min(group, kv.shape[-1])
+    if kv.shape[-1] % g:
+        g = kv.shape[-1]  # degenerate: one group per row
+    codes, scales = quant.quantize_group(kv, bits, g)
+    return QuantizedKV(codes, scales)
+
+
+def kv_dequantize(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jnp.ndarray:
+    codes, scales = qkv
+    *lead, K = codes.shape
+    groups = scales.shape[-2]
+    g = K // groups
+    cg = codes.reshape(*lead, groups, g)
+    return quant.dequantize(cg, scales, dtype).reshape(*lead, K)
+
+
+def kv_fakequant(kv: jnp.ndarray, bits: int = 4, group: int = 128
+                 ) -> jnp.ndarray:
+    """QDQ path used inside attention for accuracy experiments/lowering."""
+    if bits >= 16:
+        return kv
+    g = min(group, kv.shape[-1])
+    if kv.shape[-1] % g:
+        g = kv.shape[-1]
+    return quant.fake_quant_group(kv, bits, g)

@@ -1,0 +1,240 @@
+"""Outlier laboratory (paper Fig. 1/2/7/8/9, §A.1–A.2).
+
+Utilities to (a) synthesize activations with the two outlier classes the
+paper identifies — channel-wise and spike — matched to the LLaMA3-8B
+statistics of Fig. 7 (spikes 100–1000× the token median), and (b) measure
+smoothness/victim metrics for each smoothing method.
+
+These drive the Monte-Carlo benchmarks (fig2/fig8) and let us validate the
+paper's *mechanisms* offline, without the original checkpoints.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard, quant, smooth
+
+
+# ---------------------------------------------------------------------------
+# synthesis
+# ---------------------------------------------------------------------------
+
+def make_activation(key: jax.Array, n: int, k: int,
+                    channel_outliers: int = 0,
+                    channel_scale: float = 50.0,
+                    spike_tokens: int = 0,
+                    spikes_per_token: int = 1,
+                    spike_scale: float = 1000.0,
+                    direction_outliers: int = 0,
+                    direction_scale: float = 80.0,
+                    base_std: float = 1.0) -> jnp.ndarray:
+    """Gaussian activation (n tokens × k channels) + injected outliers.
+
+    * channel_outliers: #channels persistently scaled by channel_scale
+      (the SmoothQuant-style outlier class, Fig. 1a).
+    * direction_outliers: tokens share one sparse dominant direction
+      (Fig. 2c: "a collection of vectors with the same direction") — the
+      channel-consistent structure that SURVIVES rotation, which is why
+      RRS beats pure QuaRot.
+    * spike_tokens / spikes_per_token / spike_scale: isolated huge entries
+      (Fig. 7: down_proj spikes are ~100–1000× the median).
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    x = jax.random.normal(k1, (n, k), dtype=jnp.float32) * base_std
+    if channel_outliers > 0:
+        ch = jax.random.choice(k2, k, (channel_outliers,), replace=False)
+        mult = jnp.ones((k,)).at[ch].set(channel_scale)
+        x = x * mult[None, :]
+    if direction_outliers > 0:
+        ka, kb, kc = jax.random.split(k5, 3)
+        ch = jax.random.choice(ka, k, (direction_outliers,), replace=False)
+        sign = jnp.where(jax.random.bernoulli(
+            kb, shape=(direction_outliers,)), 1.0, -1.0)
+        mag = jax.random.uniform(kc, (direction_outliers,),
+                                 minval=direction_scale / 3,
+                                 maxval=direction_scale)
+        v = jnp.zeros((k,)).at[ch].set(sign * mag)
+        amp = 1.0 + 0.5 * jax.random.normal(jax.random.fold_in(kc, 1),
+                                            (n, 1))
+        x = x + amp * v[None, :]
+    if spike_tokens > 0:
+        rows = jax.random.choice(k3, n, (spike_tokens,), replace=False)
+        for i in range(spike_tokens):
+            cols = jax.random.choice(
+                jax.random.fold_in(k4, i), k, (spikes_per_token,),
+                replace=False)
+            sign = jnp.where(
+                jax.random.bernoulli(jax.random.fold_in(k4, 1000 + i),
+                                     shape=(spikes_per_token,)), 1.0, -1.0)
+            # Fig. 7: spike magnitudes span ~100x-1000x the median; draw
+            # log-uniform in [spike_scale/10, spike_scale]
+            logm = jax.random.uniform(
+                jax.random.fold_in(k4, 2000 + i), (spikes_per_token,),
+                minval=jnp.log(spike_scale / 10.0),
+                maxval=jnp.log(spike_scale))
+            x = x.at[rows[i], cols].set(jnp.exp(logm) * sign)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def smoothness_mu(x: jnp.ndarray, kind: str = "rms") -> jnp.ndarray:
+    """Per-token μ = absmax/RMS (paper Fig. 2b) or absmax/L2 (Fig. 9)."""
+    return smooth.token_mu(x, kind=kind)
+
+
+def prob_less_smooth_after_rotation(x: jnp.ndarray,
+                                    block: int = 0) -> jnp.ndarray:
+    """Fig. 2b: fraction of tokens whose μ increases after rotation."""
+    mu0 = smoothness_mu(x)
+    mu1 = smoothness_mu(hadamard.rotate(x, block=block))
+    return jnp.mean((mu1 > mu0).astype(jnp.float32))
+
+
+def method_mu(x: jnp.ndarray, method: str, group: int = 128,
+              rotate_block: int = 0) -> jnp.ndarray:
+    """μ per token after each smoothing method (Fig. 9's X/R/RS/RRS)."""
+    if method == "X":
+        y = x
+    elif method == "R":
+        y = hadamard.rotate(x, block=rotate_block)
+    elif method == "RS":
+        y, _, _ = smooth.smooth(x, group=group)
+    elif method == "RRS":
+        xr = hadamard.rotate(x, block=rotate_block)
+        y, _, _ = smooth.smooth(xr, group=group)
+    else:
+        raise ValueError(method)
+    return smoothness_mu(y, kind="l2")
+
+
+def victim_u_monte_carlo(key: jax.Array, k: int, n_tokens: int,
+                         n_spike_tokens: int, spikes_per_token: int,
+                         spike_scale: float, rotate_first: bool,
+                         block: int = 0) -> jnp.ndarray:
+    """Paper §A.1 Eq. 8–10: u of a normal (all-ones) token after smoothing
+    with scales induced by rotated/unrotated spike tokens."""
+    x = make_activation(key, n_tokens, k, spike_tokens=n_spike_tokens,
+                        spikes_per_token=spikes_per_token,
+                        spike_scale=spike_scale)
+    # normal token = ones (Eq. 8)
+    x = x.at[0, :].set(1.0)
+    if rotate_first:
+        x = hadamard.rotate(x, block=block)
+    s = smooth.runtime_scales(x)
+    scale = jnp.maximum(s, 1.0)                     # Eq. 9 absmax(1, ·)
+    x_smooth = 1.0 / scale                          # Eq. 10
+    return smooth.token_mu(x_smooth[None, :])[0]
+
+
+def victim_rate(x: jnp.ndarray, bits: int = 4, group: int = 128,
+                rotate_first: bool = False, block: int = 0,
+                normal_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fraction of *normal* entries that quantize to exactly 0 ("victims",
+    paper §2.2) after (rotate) -> runtime smooth -> per-token int quant.
+
+    A normal entry rounding to 0 means the abnormal smoothing scale crushed
+    it below half an LSB — the paper's victim effect, measured directly.
+    """
+    if rotate_first:
+        x = hadamard.rotate(x, block=block)
+        normal_mask = None  # rotation mixes channels; all entries count
+    x_sm, _, perm = smooth.smooth(x, group=group, reorder=group > 1)
+    if normal_mask is not None and perm is not None:
+        normal_mask = jnp.take(normal_mask, perm, axis=-1)
+    q, _ = quant.quantize_per_channel(x_sm, bits, axis=-1)
+    zeros = (q == 0).astype(jnp.float32)
+    if normal_mask is None:
+        normal_mask = jnp.ones_like(zeros)
+    else:
+        normal_mask = normal_mask.astype(jnp.float32)
+    return jnp.sum(zeros * normal_mask) / jnp.maximum(
+        jnp.sum(normal_mask), 1.0)
+
+
+def inject_model_outliers(params, key: jax.Array, n_channels: int = 8,
+                          scale: float = 30.0):
+    """Function-preserving outlier surgery on a trained dense-transformer
+    param tree (benchmarks): scale `n_channels` rows of every w_up by
+    `scale` and the matching w_down columns by 1/scale.  The model's
+    function is EXACTLY unchanged (h_i is linear in w_up row i), but the
+    down_proj input now has channel-wise outliers + SwiGLU spikes — the
+    paper's Fig. 7/9 regime — so PTQ methods separate like Table 1.
+    """
+    def walk(tree, key):
+        if isinstance(tree, dict):
+            out = dict(tree)
+            if "w_up" in tree and "w_down" in tree:
+                # d_ff outliers: w_up rows ×α, w_down cols ÷α (EXACT)
+                k1, key = jax.random.split(key)
+                f = tree["w_up"].shape[-2]
+                ch = jax.random.choice(k1, f, (min(n_channels, f),),
+                                       replace=False)
+                mult = jnp.ones((f,)).at[ch].set(scale)
+                out["w_up"] = (tree["w_up"].astype(jnp.float32)
+                               * mult[..., :, None]).astype(
+                    tree["w_up"].dtype)
+                out["w_down"] = (tree["w_down"].astype(jnp.float32)
+                                 / mult[..., None, :]).astype(
+                    tree["w_down"].dtype)
+                return out
+            if "ln1" in tree and "attn" in tree and "ln2" in tree \
+                    and "mlp" in tree and "wq" in tree.get("attn", {}):
+                # residual-stream outliers at the POST-NORM activations
+                # (the quantized qkv/gate/up inputs): ln gain ×α, consumer
+                # weight columns ÷α — EXACT (rmsnorm is gain-linear)
+                k1, k2, key = jax.random.split(key, 3)
+                d = tree["ln1"].shape[-1]
+                attn = dict(tree["attn"])
+                mlp = dict(tree["mlp"])
+                for kk, ln_name, consumers, holder in (
+                        (k1, "ln1", ("wq", "wk", "wv"), attn),
+                        (k2, "ln2", ("w_gate", "w_up"), mlp)):
+                    ka, kb = jax.random.split(kk)
+                    ch = jax.random.choice(ka, d, (min(n_channels, d),),
+                                           replace=False)
+                    mag = jax.random.uniform(kb, ch.shape,
+                                             minval=scale / 3,
+                                             maxval=scale)
+                    mult = jnp.ones((d,)).at[ch].set(mag)
+                    out[ln_name] = (tree[ln_name].astype(jnp.float32)
+                                    * mult).astype(tree[ln_name].dtype)
+                    for cname in consumers:
+                        if cname in holder:
+                            holder[cname] = (
+                                holder[cname].astype(jnp.float32)
+                                / mult[..., None, :]).astype(
+                                holder[cname].dtype)
+                out["attn"] = walk(attn, jax.random.fold_in(key, 1))
+                out["mlp"] = walk(mlp, jax.random.fold_in(key, 2))
+                for name in tree:
+                    if name not in ("ln1", "ln2", "attn", "mlp"):
+                        out[name] = tree[name]
+                return out
+            for name, sub in tree.items():
+                key, k2 = jax.random.split(key)
+                out[name] = walk(sub, k2)
+            return out
+        return tree
+
+    return walk(params, key)
+
+
+def quant_error_by_method(x: jnp.ndarray, w: jnp.ndarray, bits: int,
+                          method: str, group: int = 128) -> jnp.ndarray:
+    """Relative GEMM-output error vs FP for one smoothing method."""
+    from repro.core import rrs as rrs_mod
+    from repro.configs.base import QuantConfig
+    cfg = QuantConfig(a_bits=bits, w_bits=bits, method=method,
+                      group_size=group, w_quantizer="rtn")
+    y_ref = x @ w.T
+    y_q = rrs_mod.rrs_linear(x, w, cfg)
+    num = jnp.linalg.norm((y_ref - y_q).astype(jnp.float32))
+    den = jnp.linalg.norm(y_ref.astype(jnp.float32)) + 1e-12
+    return num / den

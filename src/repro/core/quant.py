@@ -1,0 +1,169 @@
+"""Symmetric round-to-nearest quantization primitives (paper §2.1).
+
+The paper's settings, all reproduced here:
+
+* activations: per-channel (= per-token row of the GEMM input) symmetric RTN
+* weights:     per-channel (= per-output-row) symmetric RTN or GPTQ
+* KV cache:    sub-channel symmetric RTN, group size 128
+
+Two representations:
+
+* ``fake_quant_*``  — quantize→dequantize in floating point.  Bit-exact in
+  values with the integer path, used for accuracy experiments and for
+  lowering the big-mesh graphs (XLA sees plain bf16/f32 math).
+* ``quantize_*``    — returns integer codes + scales for the Pallas kernels.
+
+All functions are pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# int4 symmetric grid: [-7, 7] (paper uses symmetric; -8 unused keeps the
+# grid symmetric around 0 which is what RTN symmetric means in the paper)
+INT_QMAX = {4: 7, 8: 127}
+
+
+def qmax(bits: int) -> int:
+    return INT_QMAX[bits]
+
+
+# ---------------------------------------------------------------------------
+# scales
+# ---------------------------------------------------------------------------
+
+def _safe_scale(absmax: jnp.ndarray, bits: int, eps: float = 1e-8) -> jnp.ndarray:
+    """alpha = absmax / qmax with zero-protection, in f32."""
+    return jnp.maximum(absmax.astype(jnp.float32), eps) / qmax(bits)
+
+
+def per_tensor_scale(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return _safe_scale(jnp.max(jnp.abs(x)), bits)
+
+
+def per_channel_scale(x: jnp.ndarray, bits: int, axis: int = -1) -> jnp.ndarray:
+    """One scale per row: reduce over `axis` (the contraction/K axis)."""
+    return _safe_scale(jnp.max(jnp.abs(x), axis=axis, keepdims=True), bits)
+
+
+def group_scale(x: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Sub-channel: split last axis into groups of `group`, scale per group.
+
+    Returns shape (..., K//group, 1) broadcastable against
+    x.reshape(..., K//group, group).
+    """
+    *lead, K = x.shape
+    if K % group != 0:
+        raise ValueError(f"K={K} not divisible by group={group}")
+    xg = x.reshape(*lead, K // group, group)
+    return _safe_scale(jnp.max(jnp.abs(xg), axis=-1, keepdims=True), bits)
+
+
+# ---------------------------------------------------------------------------
+# integer path
+# ---------------------------------------------------------------------------
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Round x/scale to the signed integer grid, return int8 codes."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    q = jnp.clip(q, -qmax(bits), qmax(bits))
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_per_channel(x: jnp.ndarray, bits: int,
+                         axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = per_channel_scale(x, bits, axis=axis)
+    return quantize(x, s, bits), s
+
+
+def quantize_per_tensor(x: jnp.ndarray, bits: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = per_tensor_scale(x, bits)
+    return quantize(x, s, bits), s
+
+
+def quantize_group(x: jnp.ndarray, bits: int, group: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sub-channel quant. Returns codes with x's shape and group scales."""
+    *lead, K = x.shape
+    s = group_scale(x, bits, group)
+    xg = x.reshape(*lead, K // group, group)
+    q = quantize(xg, s, bits).reshape(*lead, K)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# fake-quant (QDQ) path — value-identical to integer path
+# ---------------------------------------------------------------------------
+
+def fake_quant_per_channel(x: jnp.ndarray, bits: int, axis: int = -1
+                           ) -> jnp.ndarray:
+    if bits >= 16:
+        return x
+    s = per_channel_scale(x, bits, axis=axis)
+    return dequantize(quantize(x, s, bits), s, x.dtype)
+
+
+def fake_quant_per_tensor(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits >= 16:
+        return x
+    s = per_tensor_scale(x, bits)
+    return dequantize(quantize(x, s, bits), s, x.dtype)
+
+
+def fake_quant_group(x: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    if bits >= 16:
+        return x
+    *lead, K = x.shape
+    s = group_scale(x, bits, group)
+    xg = x.reshape(*lead, K // group, group)
+    return dequantize(quantize(xg, s, bits), s, x.dtype).reshape(*lead, K)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (TPU adaptation: 2 nibbles / byte for HBM traffic)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 codes in [-8,7] pairwise along the last axis into uint8.
+
+    Layout: byte b = (q[2i+1] & 0xF) << 4 | (q[2i] & 0xF); last axis halves.
+    """
+    if q.shape[-1] % 2 != 0:
+        raise ValueError("last axis must be even to pack int4")
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = q[..., 1::2].astype(jnp.uint8) & 0xF
+    return (hi << 4) | lo
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_int4 -> int8 codes (sign-extended)."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = (p >> 4).astype(jnp.int8)
+
+    def sext(v):
+        return jnp.where(v >= 8, v - 16, v).astype(jnp.int8)
+
+    lo, hi = sext(lo), sext(hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# quantization error metric
+# ---------------------------------------------------------------------------
+
+def qerror(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    """Relative L2 quantization error ||x - xq|| / ||x||."""
+    num = jnp.linalg.norm((x - xq).astype(jnp.float32).reshape(-1))
+    den = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1)) + 1e-12
+    return num / den

@@ -1,0 +1,116 @@
+"""Rotated Runtime Smooth (paper §3.3) — the paper's headline contribution.
+
+Pipeline for a linear layer Y = X Wᵀ:
+
+  offline:  W_rot = W R            (rotate weight K axis; R = Hadamard/√K)
+            Ŵ     = GPTQ/RTN(W_rot)  per-output-channel int4
+  online:   X_rot = X R            (FWHT — fused kernel in repro/kernels)
+            X̂, s  = RuntimeSmooth+Quant(X_rot)   (group = GEMM K-block)
+            Y     = Σ_g s_g · (X̂_g Ŵ_gᵀ) · α_x α_w
+
+Output equivalence: (X R)(W R)ᵀ = X R Rᵀ Wᵀ = X Wᵀ for orthogonal R, so in
+exact arithmetic RRS is a no-op; in int4 it removes both outlier classes.
+
+This module provides the float ("fake-quant") execution path used by the
+model zoo for accuracy experiments and big-mesh lowering.  The integer
+kernel path lives in repro/kernels (rrs_gemm) and matches this one
+numerically (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hadamard, quant, smooth
+from repro.configs.base import QuantConfig
+
+
+class PreparedWeight(NamedTuple):
+    """Offline-prepared weight for a quantized linear layer."""
+    w_dq: jnp.ndarray            # fake-quant (already dequantized) weight (M, K)
+    rotated: bool                # K axis rotated?
+    rotate_block: int            # 0 = full K
+    sq_scale: Optional[jnp.ndarray]  # SmoothQuant per-channel s merged in (K,)
+
+
+def prepare_weight(w: jnp.ndarray, cfg: QuantConfig,
+                   sq_scale: Optional[jnp.ndarray] = None,
+                   calib_x: Optional[jnp.ndarray] = None) -> PreparedWeight:
+    """Offline weight pipeline: (rotate) -> (smoothquant merge) -> quantize.
+
+    ``calib_x`` (rotated consistently with the weight) enables GPTQ; without
+    it GPTQ falls back to RTN (tests use both).
+    """
+    rotated = False
+    block = 0
+    if cfg.uses_rotation:
+        block = hadamard.pick_rotate_block(w.shape[-1], cfg.rotate_block)
+        w = hadamard.rotate_weight_in(w, block=block)
+        rotated = True
+    if cfg.method == "smoothquant" and sq_scale is None:
+        from repro.core import smoothquant as sq_mod
+        calib = calib_x if calib_x is not None else jnp.ones_like(w[:1])
+        sq_scale = sq_mod.smoothquant_scales(calib, w)
+    if cfg.method == "smoothquant" and sq_scale is not None:
+        w = w * sq_scale[None, :]
+    if not cfg.quantize_weights:
+        return PreparedWeight(w, rotated, block, sq_scale)
+    if cfg.w_quantizer == "gptq" and calib_x is not None:
+        from repro.core import gptq
+        if rotated:
+            calib_x = hadamard.rotate(calib_x, block=block)
+        if cfg.method == "smoothquant" and sq_scale is not None:
+            calib_x = calib_x / sq_scale
+        w_dq = gptq.gptq_fakequant(w, calib_x, cfg.w_bits)
+    else:
+        w_dq = quant.fake_quant_per_channel(w, cfg.w_bits, axis=-1)
+    return PreparedWeight(w_dq, rotated, block, sq_scale)
+
+
+def quantized_matmul(x: jnp.ndarray, pw: PreparedWeight,
+                     cfg: QuantConfig) -> jnp.ndarray:
+    """Online path: dispatch on cfg.method.  x: (..., K) -> (..., M)."""
+    w = pw.w_dq
+    if cfg.method == "none" or not cfg.quantize_acts:
+        # weight-only (A16) path: e.g. A4W16 has quantize_acts True; A16W4
+        # lands here with quantized w already folded in.
+        if cfg.method in ("quarot", "rrs") and pw.rotated:
+            x = hadamard.rotate(x, block=pw.rotate_block)
+        return x @ w.T.astype(x.dtype)
+
+    if cfg.method in ("rtn", "gptq"):
+        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        return x_q @ w.T.astype(x.dtype)
+
+    if cfg.method == "smoothquant":
+        if pw.sq_scale is not None:
+            x = x / pw.sq_scale.astype(x.dtype)
+        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        return x_q @ w.T.astype(x.dtype)
+
+    if cfg.method == "rs":
+        return smooth.rs_gemm_fakequant(
+            x, w, cfg.a_bits, 16, group=cfg.group_size,
+            reorder=cfg.reorder, w_q=w)
+
+    if cfg.method == "quarot":
+        x_rot = hadamard.rotate(x, block=pw.rotate_block)
+        x_q = quant.fake_quant_per_channel(x_rot, cfg.a_bits, axis=-1)
+        return x_q @ w.T.astype(x.dtype)
+
+    if cfg.method == "rrs":
+        x_rot = hadamard.rotate(x, block=pw.rotate_block)
+        return smooth.rs_gemm_fakequant(
+            x_rot, w, cfg.a_bits, 16, group=cfg.group_size,
+            reorder=cfg.reorder, w_q=w)
+
+    raise ValueError(f"unhandled method {cfg.method}")
+
+
+def rrs_linear(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig,
+               calib_x: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One-shot convenience: prepare + matmul (used by tests/benchmarks)."""
+    pw = prepare_weight(w, cfg, calib_x=calib_x)
+    return quantized_matmul(x, pw, cfg)

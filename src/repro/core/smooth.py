@@ -1,0 +1,137 @@
+"""Runtime Smooth (paper §3.1–3.2).
+
+Given the GEMM ``Y = X Wᵀ`` with X: (N, K), W: (M, K):
+
+  1. runtime smoothing scale   s_j = max_n |X[n, j]|            (Eq. 1)
+  2. smooth + quantize         X̂ = Quant(X / s), Ŵ = Quant(W)   (Eq. 2)
+  3. fold scales in the GEMM   Y = Σ_j X̂_j Ŵ_jᵀ · s_j           (Eq. 3)
+
+Grouped / fused variant (paper Fig. 4): reorder channels by s, group into
+K-blocks of ``group`` (the GEMM block), use the *group max* as one shared
+scale per block, so the inner loop becomes ``s_g · dot(x_block, w_blockᵀ)``.
+
+The scale `s` never touches the weights — that is the whole point vs
+SmoothQuant (no outlier migration, no calibration mismatch).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class SmoothedActivation(NamedTuple):
+    """Everything the fused GEMM kernel needs."""
+    x_q: jnp.ndarray          # int8 codes of X/s (per-token quantized)
+    act_scale: jnp.ndarray    # per-token quant scale alpha (N, 1) f32
+    smooth_scale: jnp.ndarray  # per-group runtime smooth scale (K//g,) f32
+    perm: Optional[jnp.ndarray]  # channel permutation applied (or None)
+
+
+def runtime_scales(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Eq. 1: per-channel absmax over every leading (token) axis."""
+    red = tuple(range(x.ndim - 1))
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red)
+    return jnp.maximum(s, eps)
+
+
+def group_smooth_scales(s: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Group max of (already reordered) channel scales -> (K//group,)."""
+    k = s.shape[-1]
+    if group <= 1:
+        return s
+    if k % group != 0:
+        raise ValueError(f"K={k} not divisible by group={group}")
+    return jnp.max(s.reshape(k // group, group), axis=-1)
+
+
+def reorder_indices(s: jnp.ndarray) -> jnp.ndarray:
+    """Paper Fig.4 step 1: sort channels by scale magnitude (descending).
+
+    Gathers outliers together so a group max is tight for its members.
+    """
+    return jnp.argsort(-s)
+
+
+def smooth(x: jnp.ndarray, group: int = 1, reorder: bool = True,
+           perm: Optional[jnp.ndarray] = None,
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Divide x by (grouped) runtime scales.
+
+    Returns (x_smoothed, group_scales, perm).  If ``reorder``, channels of
+    the *returned* x are permuted by descending scale and ``perm`` is the
+    permutation (apply the same permutation to W's K axis before the GEMM).
+    A precomputed ``perm`` (static_reorder mode) skips the argsort.
+    """
+    s = runtime_scales(x)
+    if reorder and group > 1:
+        if perm is None:
+            perm = reorder_indices(s)
+        x = jnp.take(x, perm, axis=-1)
+        s = jnp.take(s, perm, axis=-1)
+    else:
+        perm = None
+    sg = group_smooth_scales(s, group)
+    expand = jnp.repeat(sg, group) if group > 1 else sg
+    x_sm = x.astype(jnp.float32) / expand
+    return x_sm.astype(x.dtype), sg, perm
+
+
+def smooth_quantize(x: jnp.ndarray, bits: int, group: int = 1,
+                    reorder: bool = True,
+                    perm: Optional[jnp.ndarray] = None) -> SmoothedActivation:
+    """smooth() + per-token symmetric quantization of the smoothed X."""
+    x_sm, sg, perm = smooth(x, group=group, reorder=reorder, perm=perm)
+    x_q, alpha = quant.quantize_per_channel(x_sm, bits, axis=-1)
+    return SmoothedActivation(x_q, alpha, sg, perm)
+
+
+def rs_gemm_fakequant(x: jnp.ndarray, w: jnp.ndarray, a_bits: int,
+                      w_bits: int, group: int = 1, reorder: bool = True,
+                      w_q: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference float path of the fused pipeline (Eq. 3 / Fig. 4).
+
+    x: (..., K), w: (M, K) -> (..., M).  ``w_q`` lets the caller pass an
+    offline-quantized (fake-quant, already dequantized) weight, e.g. GPTQ.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    x_sm, sg, perm = smooth(x2, group=group, reorder=reorder)
+    x_dq = quant.fake_quant_per_channel(x_sm, a_bits, axis=-1)
+    wq = w_q if w_q is not None else quant.fake_quant_per_channel(
+        w, w_bits, axis=-1)
+    if perm is not None:
+        wq = jnp.take(wq, perm, axis=-1)
+    expand = jnp.repeat(sg, group) if group > 1 else sg
+    # fold the smooth scale back per contraction channel (Eq. 3)
+    y = (x_dq.astype(jnp.float32) * expand) @ wq.astype(jnp.float32).T
+    return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# victim metric (paper §2.2 / Eq. 10)
+# ---------------------------------------------------------------------------
+
+def token_mu(t: jnp.ndarray, kind: str = "rms") -> jnp.ndarray:
+    """Outlier level of one token (last axis): μ = absmax / RMS (Fig. 2b)
+    or absmax / L2 (Fig. 9: kind="l2")."""
+    a = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    if kind == "rms":
+        d = jnp.sqrt(jnp.mean(t.astype(jnp.float32) ** 2, axis=-1) + 1e-12)
+    elif kind == "l2":
+        d = jnp.linalg.norm(t.astype(jnp.float32), axis=-1) + 1e-12
+    else:
+        raise ValueError(kind)
+    return a / d
+
+
+def victim_mu(x: jnp.ndarray, group: int = 1, reorder: bool = True
+              ) -> jnp.ndarray:
+    """u of normal tokens *after* smoothing (Eq. 10): how badly the runtime
+    scales crush normal values.  Large u ⇒ victims ⇒ quantization error."""
+    x_sm, _, _ = smooth(x, group=group, reorder=reorder)
+    return token_mu(x_sm)

@@ -1,0 +1,28 @@
+"""SmoothQuant baseline (Xiao et al. 2023) — paper §2.2.
+
+Offline, calibration-based: s_j = max|X_j|^α / max|W_j|^(1-α); activations
+are divided by s at runtime and s is merged into the weights *before* weight
+quantization.  Reproduced faithfully so Table 1's failure mode under A4W4
+(outlier migration makes W hard to quantize + calibration mismatch) is
+visible in our benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def smoothquant_scales(calib_x: jnp.ndarray, w: jnp.ndarray,
+                       alpha: float = 0.5, eps: float = 1e-6) -> jnp.ndarray:
+    """s_j = max|X_j|^alpha / max|W_j|^(1-alpha)  (per input channel j).
+
+    calib_x: (N, K) calibration activations; w: (M, K).
+    """
+    ax = jnp.maximum(
+        jnp.max(jnp.abs(calib_x.astype(jnp.float32)),
+                axis=tuple(range(calib_x.ndim - 1))), eps)
+    aw = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0), eps)
+    s = ax ** alpha / aw ** (1.0 - alpha)
+    return jnp.maximum(s, eps)

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic resumable token pipeline + tokenizer."""
+from repro.data.pipeline import DataConfig, TokenPipeline

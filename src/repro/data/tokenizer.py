@@ -1,0 +1,23 @@
+"""Byte-level tokenizer with reserved specials.
+
+Offline-friendly: no vocab files.  ids = byte + N_SPECIAL; models with
+larger vocabs simply don't use the upper ids (token stream stays valid for
+any vocab_size ≥ 260).
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+N_SPECIAL = 4
+VOCAB_SIZE = 256 + N_SPECIAL
+
+
+def encode(text: str) -> List[int]:
+    return [b + N_SPECIAL for b in text.encode("utf-8", errors="replace")]
+
+
+def decode(ids) -> str:
+    bs = bytes(int(i) - N_SPECIAL for i in ids
+               if int(i) >= N_SPECIAL)
+    return bs.decode("utf-8", errors="replace")

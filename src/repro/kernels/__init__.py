@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  rrs_gemm  — fused runtime-smooth INT4 GEMM (paper Fig. 4), packed-int4
+              weights, int8 MXU compute, per-K-block smooth scales.
+  act_quant — fused smooth+quantize of rotated activations.
+  fwht      — MXU-native factorized online Hadamard rotation.
+
+ops.py exposes jit'd wrappers + the end-to-end fused RRS linear;
+ref.py holds the pure-jnp oracles used by the allclose sweep tests.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,81 @@
+"""Online Hadamard rotation kernel — MXU-native factorized FWHT.
+
+QuaRot's online rotation is a memory-bound elementwise butterfly on GPU.
+On TPU the natural formulation is *matmul form*: factor H_K = H_a ⊗ H_b
+(a·b = K, a,b ≤ 256) and evaluate
+
+    X·H_K = reshape( Hb-pass( Ha-pass( reshape(X, (·, a, b)) ) ) )
+
+where each pass is a small dense matmul against a 2^m Hadamard — this keeps
+the rotation on the MXU (systolic array) instead of the VPU, and the
+constant H tiles live in VMEM.  One grid step processes ``bn`` rows.
+
+For K that is not a power of two the model uses the Kronecker/block modes in
+``repro.core.hadamard`` (plain XLA einsum — already MXU-shaped); this kernel
+covers the hot power-of-two path used by every assigned arch's d_model.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hadamard
+
+
+def _split_pow2(k: int, cap: int = 256):
+    """k = a*b with a,b powers of two, both ≤ cap (k ≤ cap² = 65536)."""
+    a = 1
+    while k // a > cap:
+        a *= 2
+    if a > cap:
+        raise ValueError(f"K={k} too large for two-factor FWHT")
+    return a, k // a
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)        # (bn, K)
+    bn, k = x.shape
+    a = ha_ref.shape[0]
+    b = hb_ref.shape[0]
+    # right-multiply by H_a ⊗ H_b:  X (bn, a, b):  out = Haᵀ · X · Hb per row
+    x3 = x.reshape(bn * a, b) @ hb_ref[...]               # Hb pass (MXU)
+    x3 = x3.reshape(bn, a, b)
+    x3 = jax.lax.dot_general(                             # Ha pass (MXU)
+        x3, ha_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())))       # (bn, b, a)
+    x3 = jnp.transpose(x3, (0, 2, 1))                     # (bn, a, b)
+    o_ref[...] = x3.reshape(bn, k).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fwht_rotate(x: jnp.ndarray, *, bn: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """X @ (H_K/√K) for power-of-two K, blocked over rows."""
+    n, k = x.shape
+    if k & (k - 1):
+        raise ValueError(f"fwht_rotate needs power-of-2 K, got {k}")
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    a, b = _split_pow2(k)
+    ha = jnp.asarray(hadamard.hadamard_matrix(a), jnp.float32)
+    hb = jnp.asarray(hadamard.hadamard_matrix(b), jnp.float32)
+    # normalization: H_K/√K = (H_a/√a) ⊗ (H_b/√b); hadamard_matrix is
+    # already normalized per factor.
+    kernel = pl.pallas_call(
+        _fwht_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )
+    return kernel(x, ha, hb)

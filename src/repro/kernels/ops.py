@@ -1,0 +1,144 @@
+"""Public jit'd wrappers around the Pallas kernels + the end-to-end fused
+RRS linear (rotate → smooth → quantize → int4 GEMM) integer pipeline.
+
+``interpret`` defaults to True off-TPU (the kernels execute in Python on
+CPU for validation); on a real TPU backend it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hadamard, quant, smooth
+from repro.kernels import ref as kref
+from repro.kernels.act_quant import act_smooth_quant
+from repro.kernels.fwht import fwht_rotate
+from repro.kernels.rrs_gemm import rrs_gemm
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_int4_kblocks(w_q: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """Block-local nibble packing (jnp version of the ref oracle)."""
+    m, k = w_q.shape
+    if k % bk or bk % 2:
+        raise ValueError(f"K={k} bk={bk} invalid for packing")
+    blocks = w_q.reshape(m, k // bk, bk)
+    lo = blocks[..., : bk // 2].astype(jnp.uint8) & 0xF
+    hi = blocks[..., bk // 2:].astype(jnp.uint8) & 0xF
+    return ((hi << 4) | lo).reshape(m, k // 2)
+
+
+class RRSWeights:
+    """Offline-prepared integer weights for the fused serving path.
+
+    ``calib_x``: optional calibration activations enabling STATIC channel
+    reorder (paper Fig. 4 step 1, Qserve-style): the permutation is frozen
+    from the calibration batch's rotated channel scales and folded into
+    the packed weights, so the runtime cost is one activation gather.
+    The smoothing *scales* stay runtime (the paper's key property).
+    """
+
+    def __init__(self, w: jnp.ndarray, group: int = 128,
+                 rotate_block: int = 0, w_bits: int = 4,
+                 calib_x: Optional[jnp.ndarray] = None):
+        k = w.shape[-1]
+        self.group = group
+        self.rotate_block = hadamard.pick_rotate_block(k, rotate_block)
+        w_rot = hadamard.rotate_weight_in(w, block=self.rotate_block)
+        self.perm = None
+        if calib_x is not None:
+            xc = hadamard.rotate(calib_x.reshape(-1, k).astype(jnp.float32),
+                                 block=self.rotate_block)
+            self.perm = smooth.reorder_indices(smooth.runtime_scales(xc))
+            w_rot = jnp.take(w_rot, self.perm, axis=-1)
+        w_codes, w_scale = quant.quantize_per_channel(w_rot, w_bits, axis=-1)
+        self.w_packed = pack_int4_kblocks(w_codes, group)
+        self.w_codes = w_codes          # kept for the oracle/tests
+        self.w_scale = w_scale.reshape(-1)
+        self.m, self.k = w.shape
+
+
+def rrs_linear_fused(x: jnp.ndarray, weights: RRSWeights, *,
+                     reorder: bool = False,
+                     interpret: Optional[bool] = None,
+                     out_dtype=jnp.float32) -> jnp.ndarray:
+    """End-to-end integer RRS linear: the deployable serving path.
+
+    x: (..., K) bf16/f32 activation. Note: `reorder` requires re-permuting
+    the packed weights per call; the paper's fused pipeline uses rotation +
+    grouped scales and reserves reorder for the RS-only mode, so the fused
+    default is reorder=False (rotation already homogenizes the scales).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    n = x2.shape[0]
+    # pad rows to a block multiple
+    bn = 128 if n >= 128 else _pow2_floor(n)
+    pad = (-n) % bn
+    if pad:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
+    # 1. online rotation
+    if weights.rotate_block in (0, k) and not (k & (k - 1)):
+        x_rot = fwht_rotate(x2.astype(jnp.float32), bn=bn,
+                            interpret=interpret)
+    else:
+        x_rot = hadamard.rotate(x2.astype(jnp.float32),
+                                block=weights.rotate_block)
+    if weights.perm is not None:
+        x_rot = jnp.take(x_rot, weights.perm, axis=-1)
+    # 2. runtime smoothing scales (channel absmax -> group max)
+    s = smooth.runtime_scales(x_rot)
+    s_g = smooth.group_smooth_scales(s, weights.group)
+    # 3. fused smooth+quantize
+    x_q, a_scale = act_smooth_quant(x_rot, s_g, bn=bn, interpret=interpret)
+    # 4. fused int4 GEMM with runtime scales in the epilogue chain
+    bm = 128 if weights.m % 128 == 0 else _largest_div_pow2(weights.m, 128)
+    y = rrs_gemm(x_q, weights.w_packed, s_g, a_scale, weights.w_scale,
+                 bn=bn, bm=bm, bk=weights.group, out_dtype=out_dtype,
+                 interpret=interpret)
+    if pad:
+        y = y[:n]
+    return y.reshape(*lead, weights.m)
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _largest_div_pow2(m: int, cap: int) -> int:
+    b = 1
+    while b * 2 <= cap and m % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def rrs_linear_fused_ref(x: jnp.ndarray, weights: RRSWeights,
+                         out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the full fused pipeline (pure jnp, same integer math)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    x_rot = hadamard.rotate(x2, block=weights.rotate_block)
+    if weights.perm is not None:
+        x_rot = jnp.take(x_rot, weights.perm, axis=-1)
+    s = smooth.runtime_scales(x_rot)
+    s_g = smooth.group_smooth_scales(s, weights.group)
+    x_q, a_scale = kref.act_smooth_quant_ref(x_rot, s_g)
+    y = kref.rrs_gemm_ref(x_q, weights.w_codes, s_g, a_scale,
+                          weights.w_scale, bk=weights.group,
+                          out_dtype=out_dtype)
+    return y.reshape(*lead, weights.m)

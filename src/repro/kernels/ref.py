@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-faithful integer math).
+
+tests/test_kernels.py sweeps shapes/dtypes and asserts the kernels
+(interpret=True on CPU) match these references exactly (integer outputs)
+or to float tolerance (f32 epilogues).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard
+
+QMAX = 7.0
+
+
+# ---------------------------------------------------------------------------
+# rrs_gemm oracle
+# ---------------------------------------------------------------------------
+
+def pack_int4_kblocks_ref(w_q: np.ndarray, bk: int) -> np.ndarray:
+    """Block-local nibble packing (see kernels/rrs_gemm.py docstring).
+
+    Within each K-block of bk columns: low nibbles = cols [0, bk/2),
+    high nibbles = cols [bk/2, bk).
+    """
+    m, k = w_q.shape
+    assert k % bk == 0 and bk % 2 == 0
+    blocks = w_q.reshape(m, k // bk, bk)
+    lo = blocks[..., : bk // 2].astype(np.uint8) & 0xF
+    hi = blocks[..., bk // 2:].astype(np.uint8) & 0xF
+    packed = (hi << 4) | lo                      # (m, k//bk, bk//2)
+    return packed.reshape(m, k // 2)
+
+
+def rrs_gemm_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, s_g: jnp.ndarray,
+                 a_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                 bk: int, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Y = α_x α_w Σ_g s_g (Xq_g Wq_gᵀ) with *unpacked* int8 weights."""
+    n, k = x_q.shape
+    m = w_q.shape[0]
+    ng = k // bk
+    xg = x_q.astype(jnp.int32).reshape(n, ng, bk)
+    wg = w_q.astype(jnp.int32).reshape(m, ng, bk)
+    # per-group integer partial products: (ng, n, m)
+    part = jnp.einsum("ngk,mgk->gnm", xg, wg).astype(jnp.float32)
+    acc = jnp.einsum("g,gnm->nm", s_g.astype(jnp.float32), part)
+    y = acc * a_scale.reshape(n, 1) * w_scale.reshape(1, m)
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# act_quant oracle
+# ---------------------------------------------------------------------------
+
+def act_smooth_quant_ref(x: jnp.ndarray, s_g: jnp.ndarray):
+    n, k = x.shape
+    g = k // s_g.shape[0]
+    s = jnp.repeat(s_g.astype(jnp.float32), g)
+    x_sm = x.astype(jnp.float32) / s[None, :]
+    absmax = jnp.max(jnp.abs(x_sm), axis=-1, keepdims=True)
+    alpha = jnp.maximum(absmax, 1e-8) / QMAX
+    q = jnp.clip(jnp.round(x_sm / alpha), -QMAX, QMAX).astype(jnp.int8)
+    return q, alpha
+
+
+# ---------------------------------------------------------------------------
+# fwht oracle
+# ---------------------------------------------------------------------------
+
+def fwht_rotate_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return hadamard.fwht(x)

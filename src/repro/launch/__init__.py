@@ -1,0 +1,2 @@
+"""Launchers: production meshes, multi-pod dry-run, roofline analysis,
+training/serving entry points."""

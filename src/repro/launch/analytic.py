@@ -1,0 +1,247 @@
+"""Analytic step-cost model (FLOPs / HBM bytes / collective wire bytes).
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts while/scan loop
+*bodies once* — a 61-layer scanned model reports ~1/61 of its FLOPs
+(verified; see EXPERIMENTS.md §Dry-run caveats).  The roofline therefore
+uses this closed-form model, cross-checked against the HLO numbers
+(hlo_flops × trip counts ≈ analytic, spot-checked), with the HLO-parsed
+collective inventory kept as the structural diagnostic.
+
+All formulas follow the implementation, not the idealized algorithm —
+e.g. chunked causal attention computes the full S×S rectangle (a known
+perf-iteration target), SWA computes S×(window+chunk), decode reads the
+whole (quantized) cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class MeshInfo:
+    chips: int
+    dp: int          # data-parallel ways (pod × data)
+    tp: int          # model ways
+    batch_sharded: bool  # False for long_500k (seq sharded instead)
+
+
+def _attn_flops_full(b, s_q, s_kv, h, hd_qk, hd_v) -> float:
+    return 2.0 * b * s_q * s_kv * h * (hd_qk + hd_v)
+
+
+def _layer_attn_flops(cfg: ModelConfig, b: int, s: int, kind: str,
+                      s_cache: int) -> float:
+    """Per *attention layer* flops for this step kind."""
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        if kind == "decode":
+            # absorbed: q_abs + scores/out against the latent cache
+            r = m.kv_lora_rank
+            return (2.0 * b * h * m.qk_nope_head_dim * r
+                    + 2.0 * b * s_cache * h * (r + m.qk_rope_head_dim)
+                    + 2.0 * b * s_cache * h * r
+                    + 2.0 * b * h * m.v_head_dim * r)
+        return _attn_flops_full(b, s, s, h, qk, m.v_head_dim)
+    if kind == "decode":
+        eff = min(s_cache, cfg.sliding_window) if cfg.sliding_window \
+            else s_cache
+        return _attn_flops_full(b, 1, eff, h, hd, hd)
+    if cfg.sliding_window:
+        eff = min(s, cfg.sliding_window + 1024)   # chunked SWA slice
+        return _attn_flops_full(b, s, eff, h, hd, hd)
+    return _attn_flops_full(b, s, s, h, hd, hd)   # full rectangle (impl)
+
+
+def _ssm_layer_flops(cfg: ModelConfig, b: int, s: int, kind: str) -> float:
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    h = ssm.num_heads or d_in // ssm.head_dim
+    p, n, cs = ssm.head_dim, ssm.state_dim, ssm.chunk_size
+    if kind == "decode":
+        return 2.0 * b * h * p * n * 3
+    return 2.0 * b * s * (cs * (n + h * p) + 3.0 * h * p * n)
+
+
+def _counts(cfg: ModelConfig):
+    """(#attention layers, #ssm layers, #cross layers, #encoder layers)."""
+    if cfg.family == "ssm":
+        return 0, cfg.num_layers, 0, 0
+    if cfg.family == "hybrid":
+        g = cfg.hybrid_attn_every or 6
+        return cfg.num_layers // g, cfg.num_layers, 0, 0
+    if cfg.family == "vlm":
+        return cfg.num_layers, 0, len(cfg.cross_attn_layers), 0
+    if cfg.family == "audio":
+        return cfg.num_layers, 0, cfg.num_layers, cfg.encoder_layers
+    return cfg.num_layers, 0, 0, 0
+
+
+def _param_groups(cfg: ModelConfig) -> Dict[str, float]:
+    """Parameter counts by sharding behaviour (bytes = ×2 bf16)."""
+    total = cfg.param_count()
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    experts = 0.0
+    if cfg.moe is not None and cfg.moe.num_experts:
+        e = cfg.moe
+        per_expert = 3 * cfg.d_model * e.expert_d_ff
+        n_moe_layers = cfg.num_layers - min(e.moe_layer_start,
+                                            cfg.num_layers)
+        experts = float(n_moe_layers * e.num_experts * per_expert)
+    dense = float(total) - embed - experts
+    active = float(cfg.active_param_count()) - embed
+    return {"total": float(total), "embed": float(embed),
+            "experts": experts, "dense": dense,
+            "active_nonembed": active}
+
+
+def analytic_costs(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshInfo,
+                   microbatches: int = 1, remat_full: bool = True,
+                   w_bytes: float = 2.0, kv_bytes: float = 2.0) -> Dict:
+    """Returns flops (global + per-device), HBM bytes/device, collective
+    wire bytes/device for one step of this cell."""
+    kind = shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    d, v = cfg.d_model, cfg.vocab_size
+    tokens = b * (1 if kind == "decode" else s)
+    n_attn, n_ssm, n_cross, n_enc = _counts(cfg)
+    pg = _param_groups(cfg)
+
+    # ---------------- FLOPs (global) ----------------
+    matmul = 2.0 * pg["active_nonembed"] * tokens
+    head_tokens = tokens if kind == "train" else b
+    head = 2.0 * head_tokens * d * v
+    attn = n_attn * _layer_attn_flops(cfg, b, s, kind, s_cache=s)
+    if cfg.family == "audio":
+        # encoder bidirectional full + decoder cross-attn
+        s_enc = cfg.encoder_seq_len or s
+        if kind != "decode":
+            attn += n_enc * _attn_flops_full(b, s_enc, s_enc,
+                                             cfg.num_heads,
+                                             cfg.resolved_head_dim,
+                                             cfg.resolved_head_dim)
+            attn += n_cross * _attn_flops_full(b, s, s_enc, cfg.num_heads,
+                                               cfg.resolved_head_dim,
+                                               cfg.resolved_head_dim)
+        else:
+            attn += n_cross * _attn_flops_full(b, 1, s_enc, cfg.num_heads,
+                                               cfg.resolved_head_dim,
+                                               cfg.resolved_head_dim)
+    if cfg.family == "vlm" and kind != "decode":
+        attn += n_cross * _attn_flops_full(b, s, cfg.vision_tokens,
+                                           cfg.num_heads,
+                                           cfg.resolved_head_dim,
+                                           cfg.resolved_head_dim)
+    ssm = n_ssm * _ssm_layer_flops(cfg, b, s, kind) if n_ssm else 0.0
+    fwd = matmul + head + attn + ssm
+    if kind == "train":
+        mult = 4.0 if remat_full else 3.0    # fwd + 2×bwd (+1 recompute)
+        flops_global = fwd * mult
+    else:
+        flops_global = fwd
+    flops_pd = flops_global / mesh.chips
+
+    # ---------------- HBM bytes per device ----------------
+    pb = pg["total"] * w_bytes
+    # resting shards: dense params /tp; experts /(tp·dp) (expert_ffn FSDP)
+    dense_pd = (pg["dense"] + pg["embed"]) * w_bytes / mesh.tp
+    if kind == "train":
+        experts_pd = pg["experts"] * w_bytes / (mesh.tp * mesh.dp)
+        # weights: fwd read + bwd read + recompute read per µbatch; grad
+        # write + optimizer read/write once
+        w_traffic = (dense_pd + pg["experts"] * w_bytes / mesh.tp) \
+            * microbatches * (3 + (1 if remat_full else 0))
+        opt_traffic = (dense_pd + experts_pd) * (2 + 8)  # grads f32 + m,v
+        t_pd = tokens / (mesh.dp if mesh.batch_sharded else 1)
+        act_traffic = 10.0 * t_pd * d * 2.0 * \
+            (n_attn + n_ssm + n_cross + n_enc)
+        bytes_pd = w_traffic + opt_traffic + act_traffic
+    elif kind == "prefill":
+        active_pd = (pg["active_nonembed"] + pg["embed"]) * w_bytes \
+            / mesh.tp
+        t_pd = tokens / mesh.dp
+        act_traffic = 8.0 * t_pd * d * 2.0 * (n_attn + n_ssm + n_cross
+                                              + n_enc)
+        cache_write = _cache_bytes(cfg, b, s, kv_bytes) / mesh.chips
+        bytes_pd = active_pd + act_traffic + cache_write
+    else:  # decode
+        # every resident weight is touched (batch≥#experts·topk routes)
+        experts_pd = pg["experts"] * w_bytes / mesh.chips
+        cache_pd = _cache_bytes(cfg, b, s, kv_bytes) / mesh.chips
+        bytes_pd = dense_pd + pg["embed"] * w_bytes / mesh.tp \
+            + experts_pd + cache_pd
+    # ---------------- collective wire bytes per device ----------------
+    act_b = 2.0
+    layers = n_attn + n_ssm + n_cross + n_enc
+    if kind == "train":
+        # DP grad ring-AR over grads sharded /tp
+        coll = 2.0 * (pg["dense"] + pg["embed"]) * 4.0 / mesh.tp \
+            * (mesh.dp - 1) / max(mesh.dp, 1)
+        # expert grads reduce among the EP group replicas: already fully
+        # sharded over the mesh (multi-axis EP) -> negligible AR
+        # EP dispatch/return a2a per MoE layer (tokens sharded per chip):
+        if cfg.moe is not None and cfg.moe.num_experts:
+            e = cfg.moe
+            moe_layers = cfg.num_layers - min(e.moe_layer_start,
+                                              cfg.num_layers)
+            coll += 3 * moe_layers * 2.0 * (tokens / mesh.chips) \
+                * e.experts_per_token * 1.25 * d * act_b
+        # TP activation ARs: 2 per layer per pass
+        t_pd = tokens / (mesh.dp if mesh.batch_sharded else 1)
+        coll += 2.0 * layers * 3 * (2.0 * t_pd * d * act_b) \
+            * (mesh.tp - 1) / max(mesh.tp, 1)
+    elif kind == "prefill":
+        t_pd = tokens / mesh.dp
+        coll = 2.0 * layers * (2.0 * t_pd * d * act_b) \
+            * (mesh.tp - 1) / max(mesh.tp, 1)
+        coll += _cache_bytes(cfg, b, s, kv_bytes) / mesh.chips  # reshard
+    else:
+        b_pd = b / (mesh.dp if mesh.batch_sharded else 1)
+        # TP ARs on the residual + softmax partial ARs + EP combine psum
+        coll = 2.0 * layers * (2.0 * b_pd * d * act_b) \
+            * (mesh.tp - 1) / max(mesh.tp, 1)
+        if cfg.moe is not None and cfg.moe.num_experts:
+            e = cfg.moe
+            cap = max(int(b * e.experts_per_token * 1.25
+                          / e.num_experts), 1)
+            moe_layers = cfg.num_layers - min(e.moe_layer_start,
+                                              cfg.num_layers)
+            coll += 2.0 * moe_layers * e.num_experts * cap * d * act_b
+        coll += layers * b_pd * cfg.num_heads * 3 * 4.0  # softmax stats
+    return {
+        "analytic_flops_global": flops_global,
+        "analytic_flops_pd": flops_pd,
+        "analytic_bytes_pd": bytes_pd,
+        "analytic_coll_wire_pd": coll,
+        "analytic_fwd_flops_global": fwd,
+        "analytic_attn_flops_global": attn,
+    }
+
+
+def _cache_bytes(cfg: ModelConfig, b: int, s: int, kv_bytes: float
+                 ) -> float:
+    n_attn, n_ssm, n_cross, n_enc = _counts(cfg)
+    if cfg.mla is not None:
+        m = cfg.mla
+        per_tok = (m.kv_lora_rank + m.qk_rope_head_dim)
+        return float(cfg.num_layers) * b * s * per_tok * kv_bytes
+    hd = cfg.resolved_head_dim
+    eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    cache = n_attn * 2.0 * b * eff * cfg.num_kv_heads * hd * kv_bytes
+    if cfg.family == "audio":
+        s_enc = cfg.encoder_seq_len or s
+        cache += n_cross * 2.0 * b * s_enc * cfg.num_kv_heads * hd \
+            * kv_bytes
+    if n_ssm and cfg.ssm is not None:
+        ssm = cfg.ssm
+        d_in = ssm.expand * cfg.d_model
+        h = ssm.num_heads or d_in // ssm.head_dim
+        cache += n_ssm * b * (h * ssm.head_dim * ssm.state_dim * 4.0
+                              + (ssm.conv_width - 1)
+                              * (d_in + 2 * ssm.state_dim) * 2.0)
+    return cache

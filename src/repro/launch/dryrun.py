@@ -1,0 +1,461 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           ).strip()
+
+"""Multi-pod dry-run (deliverable e): ``lower().compile()`` every
+(architecture × input shape) on the production meshes and extract the
+roofline terms (deliverable g).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out benchmarks/results/dryrun.json
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init.  Nothing here allocates device memory: params
+and caches are jax.eval_shape'd ShapeDtypeStructs; the cost/memory numbers
+come from the AOT-compiled executable.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import (QuantConfig, ShapeConfig, SHAPES_BY_NAME,
+                                TrainConfig)
+from repro.dist import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models import layers as mlayers
+from repro.train.train_step import init_train_state, make_train_step
+
+SERVE_QCFG = QuantConfig(4, 4, 4, method="rrs", group_size=128,
+                         w_quantizer="rtn", exec_path="fake")
+
+# per-arch training overrides (memory-driven; DESIGN.md §6)
+TRAIN_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "deepseek-v3-671b": dict(optimizer="adafactor", microbatches=16),
+    "granite-34b": dict(microbatches=16),
+    "llama-3.2-vision-11b": dict(microbatches=8),
+    "zamba2-7b": dict(microbatches=8),
+    "moonshot-v1-16b-a3b": dict(microbatches=8),
+    "minicpm-2b": dict(schedule="wsd", microbatches=4),
+}
+
+
+def train_config_for(arch: str) -> TrainConfig:
+    kw: Dict[str, Any] = dict(remat="full", microbatches=4,
+                              zero_shard_optimizer=True)
+    kw.update(TRAIN_OVERRIDES.get(arch, {}))
+    return TrainConfig(**kw)
+
+
+def skip_reason(cfg, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("pure full attention (no SWA/SSM) — long_500k needs "
+                "sub-quadratic attention; skipped per assignment")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def _adapt_cfg(cfg, shape: ShapeConfig):
+    """Per-cell config tweaks (e.g. whisper encoder length = seq_len)."""
+    if cfg.family == "audio":
+        cfg = dataclasses.replace(cfg, encoder_seq_len=shape.seq_len,
+                                  max_seq_len=max(cfg.max_seq_len,
+                                                  shape.seq_len))
+    return cfg
+
+
+def input_specs(cfg, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for this cell (train batch / serve request batch)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len + 1),
+                                                jnp.int32)}
+        s_in = shape.seq_len
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len),
+                                                jnp.int32)}
+        s_in = shape.seq_len
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        s_in = shape.seq_len
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s_in, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _abstract_init(model, with_axes=True):
+    side = []
+
+    def f(k):
+        p, a = model.init(k)
+        side.append(a)
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, (side[0] if side else None)
+
+
+def _abstract_cache(model, batch, max_len, kv_storage="fake"):
+    side = []
+
+    def f():
+        c, a = model.init_cache(batch, max_len, kv_storage=kv_storage)
+        side.append(a)
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, side[0]
+
+
+def _shardings_from_axes(axes_tree, shapes_tree, mesh, rules,
+                         zero_shard=False):
+    def one(axes, shp):
+        if zero_shard:
+            spec = shd.zero_shard_spec(tuple(axes), shp.shape, mesh, rules)
+        else:
+            spec = shd.logical_to_spec(tuple(axes), rules, mesh,
+                                       shape=tuple(shp.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, axes_tree, shapes_tree)
+
+
+def _batch_shardings(specs, mesh, rules):
+    def one(s):
+        spec = shd.logical_to_spec(("batch",) + (None,) * (len(s.shape) - 1),
+                                   rules, mesh, shape=tuple(s.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, specs)
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _opt_shardings(opt_shapes, param_axes, mesh, rules):
+    """AdamW mu/nu mirror params (ZeRO-sharded); Adafactor vr/vc use the
+    param axes minus the reduced dim; scalars replicated."""
+    from repro.optim.optimizers import AdamWState, AdafactorState
+    if isinstance(opt_shapes, AdamWState):
+        mu = _shardings_from_axes(param_axes, opt_shapes.mu, mesh, rules,
+                                  zero_shard=True)
+        nu = _shardings_from_axes(param_axes, opt_shapes.nu, mesh, rules,
+                                  zero_shard=True)
+        return AdamWState(NamedSharding(mesh, P()), mu, nu)
+    if isinstance(opt_shapes, AdafactorState):
+        def vr_sh(axes, shp):
+            spec = shd.logical_to_spec(tuple(axes)[:-1], rules, mesh,
+                                       shape=tuple(shp.shape)) \
+                if len(shp.shape) >= 1 else P()
+            return NamedSharding(mesh, spec)
+
+        def vc_sh(axes, shp):
+            ax = tuple(axes)
+            spec = shd.logical_to_spec(ax[:-2] + ax[-1:], rules, mesh,
+                                       shape=tuple(shp.shape)) \
+                if len(ax) >= 2 and len(shp.shape) >= 1 else P()
+            return NamedSharding(mesh, spec)
+
+        vr = jax.tree.map(vr_sh, param_axes, opt_shapes.vr)
+        vc = jax.tree.map(vc_sh, param_axes, opt_shapes.vc)
+        return AdafactorState(NamedSharding(mesh, P()), vr, vc)
+    raise TypeError(type(opt_shapes))
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, kv_storage: str = "fake",
+             rule_overrides: Optional[Dict] = None,
+             microbatch_override: Optional[int] = None) -> Dict:
+    t0 = time.time()
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = _adapt_cfg(configs.get_config(arch), shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "kv_storage": kv_storage}
+    if rule_overrides:
+        rec["rule_overrides"] = {k: str(v) for k, v in
+                                 rule_overrides.items()}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["skipped"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    data_size = mesh.devices.shape[list(mesh.axis_names).index("data")]
+    model = build_model(cfg)
+    kind = {"train": "train", "prefill": "prefill",
+            "decode": "decode"}[shape.kind]
+    rules = shd.make_rules(kind, multi_pod=multi_pod,
+                           batch_small=shape.global_batch < data_size,
+                           **(rule_overrides or {}))
+
+    with shd.use_rules(mesh, rules):
+        param_shapes, param_axes = _abstract_init(model)
+        batch_specs = input_specs(cfg, shape)
+        batch_sh = _batch_shardings(batch_specs, mesh, rules)
+        param_sh = _shardings_from_axes(param_axes, param_shapes, mesh,
+                                        rules)
+
+        if shape.kind == "train":
+            tc = train_config_for(arch)
+            if microbatch_override:
+                tc = dataclasses.replace(tc,
+                                         microbatches=microbatch_override)
+            step_fn = make_train_step(model, tc, QuantConfig())
+            state_shapes = jax.eval_shape(
+                lambda k: init_train_state(model, tc, k)[0],
+                jax.random.PRNGKey(0))
+            opt_sh = _opt_shardings(state_shapes.opt_state, param_axes,
+                                    mesh, rules)
+            from repro.train.train_step import TrainState
+            state_sh = TrainState(param_sh, opt_sh, None,
+                                  NamedSharding(mesh, P()))
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_specs)
+        else:
+            mlayers.set_block_remat("none")
+            cache_shapes, cache_axes = _abstract_cache(
+                model, shape.global_batch, shape.seq_len,
+                kv_storage=kv_storage)
+            cache_sh = _shardings_from_axes(cache_axes, cache_shapes, mesh,
+                                            rules)
+            extra_names = []
+            if cfg.family == "vlm" and shape.kind != "decode":
+                extra_names.append("patches")
+            if cfg.family == "audio" and shape.kind != "decode":
+                extra_names.append("frames")
+            extra_vals = [batch_specs[k] for k in extra_names]
+            extra_sh = [batch_sh[k] for k in extra_names]
+
+            def serve_step(params, tokens, cache, *ex):
+                kw = dict(zip(extra_names, ex))
+                return model.step(params, tokens, cache, SERVE_QCFG,
+                                  prepared=True, **kw)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, batch_sh["tokens"], cache_sh,
+                              *extra_sh),
+                donate_argnums=(2,))   # serving updates the cache in place
+            lowered = jitted.lower(param_shapes, batch_specs["tokens"],
+                                   cache_shapes, *extra_vals)
+
+        compiled = lowered.compile()
+
+    # --- extract analysis ------------------------------------------------
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops_pd = float(ca.get("flops", 0.0))
+    bytes_pd = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        mem_pd = float(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                       + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        mem_pd = None
+    stats = rl.parse_collectives(compiled.as_text(), chips)
+    from repro.launch.analytic import MeshInfo, analytic_costs
+    tp = mesh.devices.shape[list(mesh.axis_names).index("model")]
+    dp = max(chips // tp, 1)
+    mb = (microbatch_override or train_config_for(arch).microbatches) \
+        if shape.kind == "train" else 1
+    tp_eff = tp
+    if rule_overrides and rule_overrides.get("ffn", "model") is None:
+        tp_eff = 1  # pure-DP override (small-model perf iteration)
+    ac = analytic_costs(cfg, shape,
+                        MeshInfo(chips=chips,
+                                 dp=chips // tp_eff,
+                                 tp=tp_eff,
+                                 batch_sharded=shape.global_batch >= dp),
+                        microbatches=mb, remat_full=True,
+                        kv_bytes=1.0 if kv_storage == "int8" else 2.0)
+    r = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=ac["analytic_flops_pd"],
+        hlo_bytes=ac["analytic_bytes_pd"],
+        collective_operand_bytes=stats.total_operand_bytes,
+        collective_wire_bytes=ac["analytic_coll_wire_pd"],
+        collective_counts=stats.counts,
+        model_flops=rl.analytic_model_flops(cfg, shape,
+                                            shape.kind == "train"),
+        bytes_per_device=mem_pd,
+    )
+    rec.update(r.to_dict())
+    rec.update(ac)
+    # raw HLO numbers kept as diagnostics (loop bodies counted ONCE by
+    # XLA cost analysis — see analytic.py docstring)
+    rec["hlo_flops_pd_looponce"] = flops_pd
+    rec["hlo_bytes_pd_looponce"] = bytes_pd
+    rec["hlo_collective_wire_pd_looponce"] = stats.total_wire_bytes
+    rec["compile_seconds"] = round(time.time() - t0, 1)
+    if verbose:
+        fit = "" if mem_pd is None else \
+            f" mem/dev={mem_pd / 1e9:.2f}GB{'' if mem_pd < 16e9 else ' (>16GB v5e!)'}"
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:8s} "
+              f"OK t_comp={r.t_comp * 1e3:8.3f}ms t_mem={r.t_mem * 1e3:8.3f}ms "
+              f"t_coll={r.t_coll * 1e3:8.3f}ms dom={r.dominant:10s}"
+              f" useful={r.useful_flops_fraction:.2f}{fit} "
+              f"({rec['compile_seconds']}s)", flush=True)
+    return rec
+
+
+ALL_CELLS = [(a, s.name) for a in None or []
+             for s in []]  # built lazily in main
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants (EXPERIMENTS.md): named sharding/storage
+# alternatives applied on top of the baseline rules.
+# ---------------------------------------------------------------------------
+
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    # ZeRO-3/FSDP pure-DP over all 256 chips: kills the Megatron TP
+    # activation all-reduces that dominate every train cell; weights are
+    # gathered per layer instead (params_bytes·3 wire ≪ act-AR wire).
+    "fsdp": dict(
+        rule_overrides={"ffn": ("model", "data"),
+                        "heads": ("model", "data"),
+                        "vocab": ("model", "data"),
+                        "act_heads": None,
+                        "batch": ("data", "model")},
+        microbatch_override=1,
+        analytic="fsdp"),
+    # int8-at-rest KV cache: halves decode HBM traffic (beyond-paper)
+    "kv8": dict(kv_storage="int8"),
+    # FSDP with batch over data only (hybrid/SSM archs: keeping TP for the
+    # ssm_inner dim avoids replicating scan state at batch=1/chip)
+    "fsdp_d": dict(
+        rule_overrides={"ffn": ("model", "data"),
+                        "heads": ("model", "data"),
+                        "vocab": ("model", "data")},
+        microbatch_override=1,
+        analytic="fsdp"),
+}
+
+
+def _fsdp_analytic_fixup(rec: Dict, cfg, shape, chips: int, mb: int):
+    """Collective model for the FSDP variant: per-layer param all-gather
+    (×3 passes ×µb) + grad ring-AR over the flat mesh + EP a2a."""
+    from repro.launch.analytic import _param_groups
+    pg = _param_groups(cfg)
+    dense_b = (pg["dense"] + pg["embed"]) * 2.0
+    coll = 3.0 * mb * dense_b * (1.0 - 1.0 / chips)        # param AG
+    coll += 2.0 * (pg["dense"] + pg["embed"]) * 4.0 / chips  # grad AR
+    if cfg.moe is not None and cfg.moe.num_experts:
+        e = cfg.moe
+        moe_layers = cfg.num_layers - min(e.moe_layer_start,
+                                          cfg.num_layers)
+        tokens = shape.global_batch * shape.seq_len
+        coll += 3 * moe_layers * 2.0 * (tokens / chips) \
+            * e.experts_per_token * 1.25 * cfg.d_model * 2.0
+    rec["analytic_coll_wire_pd"] = coll
+    rec["collective_wire_bytes"] = coll
+    rec["t_coll"] = coll / rl.LINK_BW
+    terms = {"compute": rec["t_comp"], "memory": rec["t_mem"],
+             "collective": rec["t_coll"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["step_time_bound"] = max(terms.values())
+    rec["mfu_bound"] = (rec["model_flops"]
+                        / (chips * rl.PEAK_FLOPS_BF16)) \
+        / max(rec["step_time_bound"], 1e-30)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.all or not args.arch \
+        else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    var = VARIANTS[args.variant]
+    records = []
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                try:
+                    rec = run_cell(
+                        arch, shape_name, multi_pod,
+                        kv_storage=var.get("kv_storage", "fake"),
+                        rule_overrides=var.get("rule_overrides"),
+                        microbatch_override=args.microbatches
+                        or var.get("microbatch_override"))
+                    rec["variant"] = args.variant
+                    if var.get("analytic") == "fsdp" \
+                            and "error" not in rec \
+                            and "skipped" not in rec \
+                            and shape_name.startswith("train"):
+                        shape = SHAPES_BY_NAME[shape_name]
+                        cfg = _adapt_cfg(configs.get_config(arch), shape)
+                        chips = 512 if multi_pod else 256
+                        rec = _fsdp_analytic_fixup(
+                            rec, cfg, shape, chips,
+                            args.microbatches
+                            or var.get("microbatch_override", 1))
+                        print(f"[dryrun]   fsdp-adjusted: t_coll="
+                              f"{rec['t_coll'] * 1e3:.1f}ms dom="
+                              f"{rec['dominant']} mfu_bound="
+                              f"{rec['mfu_bound']:.3f}")
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] {arch} {shape_name} "
+                          f"{'multi' if multi_pod else 'single'} FAILED: "
+                          f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+    ok = len([r for r in records if "error" not in r])
+    print(f"[dryrun] done: {ok}/{len(records)} cells ok "
+          f"({len([r for r in records if 'skipped' in r])} skipped)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Production meshes.  Functions, not module constants — importing this
+module must never touch jax device state (the dry-run sets XLA_FLAGS for
+512 host devices BEFORE importing anything)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data × 16 model).  Multi-pod: 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,3 @@
+"""Model zoo: dense / MoE / MLA / SSM / hybrid / enc-dec / VLM families,
+all built from shared quantization-aware layers."""
+from repro.models.model_factory import Model, build_model

@@ -1,0 +1,193 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``hybrid_attn_every`` layers (weight re-use across applications).
+
+Structure: ``G`` groups of (g Mamba2 blocks → shared attn+MLP block), then a
+tail of remaining Mamba2 blocks.  The shared block has its own KV cache per
+*application* (stacked (G, ...)); its weights are a single (unstacked) set.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _split(cfg: ModelConfig):
+    g = cfg.hybrid_attn_every or 6
+    n_groups = cfg.num_layers // g
+    tail = cfg.num_layers - n_groups * g
+    return g, n_groups, tail
+
+
+def _mamba_block_init(key, cfg, dtype):
+    kk = jax.random.split(key, 2)
+    p, a = M.mamba2_params(kk[0], cfg, dtype)
+    return {"ln": jnp.ones((cfg.d_model,), dtype), "mamba": p}, \
+           {"ln": P(None), "mamba": a}
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    dtype = _dtype(cfg)
+    g, n_groups, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[1], cfg.vocab_size, cfg.d_model,
+                                dtype=dtype),
+    }
+    axes = {"embed": P("vocab", "embed"), "final_norm": P(None),
+            "lm_head": P("vocab", "embed")}
+
+    mkeys = jax.random.split(ks[2], n_groups * g)
+    mkeys = mkeys.reshape(n_groups, g, *mkeys.shape[1:])
+    params["mamba_groups"] = jax.vmap(jax.vmap(
+        lambda k: _mamba_block_init(k, cfg, dtype)[0]))(mkeys)
+    _, one_axes = _mamba_block_init(jax.random.PRNGKey(0), cfg, dtype)
+    push = lambda t: jax.tree.map(lambda s: P(*((None,) + tuple(s))), t)
+    axes["mamba_groups"] = push(push(one_axes))
+    if tail:
+        tkeys = jax.random.split(ks[3], tail)
+        params["mamba_tail"] = jax.vmap(
+            lambda k: _mamba_block_init(k, cfg, dtype)[0])(tkeys)
+        axes["mamba_tail"] = push(one_axes)
+
+    # ONE shared attention+MLP block (zamba2's weight sharing)
+    ka, km = jax.random.split(ks[4])
+    attn_p, attn_a = L.gqa_params(ka, cfg, dtype)
+    mlp_p, mlp_a = L.mlp_params(km, cfg, dtype=dtype)
+    params["shared"] = {
+        "ln1": jnp.ones((cfg.d_model,), dtype), "attn": attn_p,
+        "ln2": jnp.ones((cfg.d_model,), dtype), "mlp": mlp_p,
+    }
+    axes["shared"] = {"ln1": P(None), "attn": attn_a,
+                      "ln2": P(None), "mlp": mlp_a}
+    return params, axes
+
+
+def _shared_apply(sp, x, cfg, qcfg, prepared, positions, cache=None):
+    h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    out, nc = L.gqa_apply(sp["attn"], h, cfg, qcfg, prepared, positions,
+                          cache=cache, kv_quant_bits=qcfg.kv_bits,
+                          kv_group=qcfg.kv_group_size)
+    x = x + out
+    h2 = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(sp["mlp"], h2, qcfg, prepared)
+    return x, nc
+
+
+def _run(cfg, params, x, qcfg, prepared, positions, caches=None):
+    g, n_groups, tail = _split(cfg)
+    sp = params["shared"]
+    new_caches = {} if caches is not None else None
+
+    def mamba_body(carry, inputs):
+        xx = carry
+        if caches is None:
+            lp = inputs
+            h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
+            out, _ = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared)
+            return xx + out, None
+        lp, lc = inputs
+        h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
+        out, nc = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared,
+                                 cache=lc)
+        return xx + out, nc
+
+    def group_body(carry, inputs):
+        xx = carry
+        if caches is None:
+            mg = inputs
+            xx, _ = jax.lax.scan(mamba_body, xx, mg)
+            xx, _ = _shared_apply(sp, xx, cfg, qcfg, prepared, positions)
+            return xx, None
+        mg, (mc, ac) = inputs
+        xx, nmc = jax.lax.scan(mamba_body, xx, (mg, mc))
+        xx, nac = _shared_apply(sp, xx, cfg, qcfg, prepared, positions,
+                                cache=ac)
+        return xx, (nmc, nac)
+
+    if caches is None:
+        x, _ = jax.lax.scan(group_body, x, params["mamba_groups"])
+        if tail:
+            x, _ = jax.lax.scan(mamba_body, x, params["mamba_tail"])
+        return x, None
+    x, (nmc, nac) = jax.lax.scan(
+        group_body, x,
+        (params["mamba_groups"], (caches["mamba"], caches["attn"])))
+    new_caches = {"mamba": nmc, "attn": nac}
+    if tail:
+        x, ntc = jax.lax.scan(mamba_body, x,
+                              (params["mamba_tail"], caches["tail"]))
+        new_caches["tail"] = ntc
+    return x, new_caches
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, qcfg: QuantConfig,
+            prepared: bool = False, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _run(cfg, params, x, qcfg, prepared, positions)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = x @ params["lm_head"].T.astype(x.dtype)
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Tuple[Dict, Dict]:
+    g, n_groups, tail = _split(cfg)
+    mc, ma = M.mamba2_cache(cfg, batch, dtype)
+    hd = cfg.resolved_head_dim
+    push = lambda t, n: jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), t)
+    pusha = lambda t: jax.tree.map(lambda s: P(*((None,) + tuple(s))), t)
+    attn_c = {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+              "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+              "pos": jnp.zeros((), jnp.int32)}
+    attn_a = {"k": P("batch", "cache_seq", None, None),
+              "v": P("batch", "cache_seq", None, None), "pos": P()}
+    caches = {
+        "mamba": jax.tree.map(
+            lambda x: jnp.zeros((n_groups, g) + x.shape, x.dtype), mc),
+        "attn": push(attn_c, n_groups),
+    }
+    axes = {
+        "mamba": pusha(pusha(ma)),
+        "attn": pusha(attn_a),
+    }
+    if tail:
+        caches["tail"] = push(mc, tail)
+        axes["tail"] = pusha(ma)
+    return caches, axes
+
+
+def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                    caches: Dict, qcfg: QuantConfig, prepared: bool = False,
+                    patches=None, last_only: bool = True):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", None)
+    pos0 = caches["attn"]["pos"].reshape(-1)[0]
+    positions = jnp.arange(tokens.shape[1]) + pos0
+    x, new_caches = _run(cfg, params, x, qcfg, prepared, positions,
+                         caches=caches)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only and x.shape[1] > 1:
+        x = x[:, -1:]
+    logits = x @ params["lm_head"].T.astype(x.dtype)
+    return shard(logits, "batch", "seq", "vocab"), new_caches

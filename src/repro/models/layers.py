@@ -1,0 +1,567 @@
+"""Shared neural layers for all architectures.
+
+Functional style: every layer is (init → params dict + axes dict,
+apply → jnp).  Quantized execution goes through :func:`qlinear`, which
+dispatches on QuantConfig.method — this is where the paper's RRS plugs into
+every projector of every architecture ("plug-and-play activation smoother").
+
+Weight layout convention: all linear weights are stored (out_features,
+in_features) = (M, K), matching the paper's ``Y = X Wᵀ``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import hadamard, quant, smooth
+from repro.dist.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# per-block rematerialization (set by the train step at trace time):
+# checkpointing the scan BODY keeps backward peak memory at one layer's
+# residuals instead of the whole stack's (DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+_BLOCK_REMAT = ["none"]  # "none" | "dots" | "full"
+
+
+def set_block_remat(mode: str):
+    _BLOCK_REMAT[0] = mode
+
+
+def maybe_remat(body):
+    """Wrap a scan body in jax.checkpoint per the active policy."""
+    mode = _BLOCK_REMAT[0]
+    if mode == "none":
+        return body
+    policy = (jax.checkpoint_policies.checkpoint_dots if mode == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(body, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, m: int, k: int, scale: float = 1.0,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """(out, in) weight, truncated-normal, 1/sqrt(k) fan-in scaling."""
+    std = scale / math.sqrt(k)
+    return (jax.random.truncated_normal(key, -3, 3, (m, k), jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, v: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (v, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantized linear — THE integration point of the paper
+# ---------------------------------------------------------------------------
+
+def qlinear(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
+            prepared: bool = False, quantize: bool = True) -> jnp.ndarray:
+    """Quantized linear y = x @ wᵀ with the configured smoothing method.
+
+    prepared=True means `w` was already rotated (+fake-quantized) offline by
+    ``repro.serve.prepare.prepare_params`` — serving fast path; only the
+    ONLINE ops run here (rotate x → runtime smooth → act quant → matmul).
+
+    quantize=False routes around quantization entirely (router logits,
+    embeddings, tiny heads — per paper §3.3 only Linear layers in
+    transformer blocks are quantized).
+    """
+    if not quantize or qcfg.method == "none" or not qcfg.quantize_acts:
+        if not quantize or not qcfg.quantize_weights or not prepared:
+            return x @ w.T.astype(x.dtype)
+        return x @ w.T.astype(x.dtype)  # weight already fake-quantized
+
+    k = x.shape[-1]
+    if qcfg.method == "smoothquant" and not prepared:
+        # best-case SmoothQuant: calibration == live batch (no mismatch);
+        # the paper's A4W4 failure persists anyway because the migrated
+        # outliers make W unquantizable (§2.2) — reproduced here.
+        ax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)),
+                                 axis=tuple(range(x.ndim - 1))), 1e-6)
+        aw = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0),
+                         1e-6)
+        s = jnp.sqrt(ax) / jnp.sqrt(aw)
+        x = (x.astype(jnp.float32) / s).astype(x.dtype)
+        w = (w.astype(jnp.float32) * s).astype(jnp.float32)
+    if qcfg.uses_rotation:
+        block = hadamard.pick_rotate_block(k, qcfg.rotate_block)
+        x = hadamard.rotate(x, block=block)
+        if not prepared:
+            w = hadamard.rotate_weight_in(w, block=block)
+    if not prepared and qcfg.quantize_weights:
+        w = quant.fake_quant_per_channel(w, qcfg.w_bits, axis=-1)
+
+    if qcfg.uses_runtime_smooth:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, k)
+        g = qcfg.group_size if k % qcfg.group_size == 0 else 1
+        x_sm, sg, perm = smooth.smooth(x2, group=g,
+                                       reorder=qcfg.reorder and g > 1)
+        x_dq = quant.fake_quant_per_channel(x_sm, qcfg.a_bits, axis=-1)
+        wq = w if perm is None else jnp.take(w, perm, axis=-1)
+        expand = jnp.repeat(sg, g) if g > 1 else sg
+        y = (x_dq.astype(jnp.float32) * expand) @ wq.astype(jnp.float32).T
+        return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+
+    # rtn / gptq / quarot / smoothquant online part: plain per-token QDQ
+    x_dq = quant.fake_quant_per_channel(x, qcfg.a_bits, axis=-1)
+    return x_dq @ w.T.astype(x_dq.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / positional encodings
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * g.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * g + b).astype(dt)
+
+
+def rope_freqs(head_dim: int, max_len: int, theta: float) -> jnp.ndarray:
+    """(max_len, head_dim/2) complex-as-cos/sin table, f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)
+    return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)  # (S, D/2, 2)
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); pos: (S,) or (B, S) positions."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos[..., None].astype(jnp.float32) * inv          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (n, d)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (math.log(10000.0) / max(half - 1, 1)))
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA/MQA, optional sliding window, chunked/flash form)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, KVH, D) -> (B, S, KVH*n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def attention_dense(q, k, v, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, bias: Optional[jnp.ndarray] = None
+                    ) -> jnp.ndarray:
+    """Materialized-scores attention for short sequences / decode.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, H, D) (kv heads already repeated).
+    q_offset: absolute position of q[0] (decode: Skv-1).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    if bias is not None:
+        scores = scores + bias
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out
+
+
+def attention_chunked(q, k, v, causal: bool = True, window: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024
+                      ) -> jnp.ndarray:
+    """Flash-style online-softmax attention, O(S·chunk) memory.
+
+    Iterates q chunks (scan); per q chunk iterates kv chunks (scan) carrying
+    (m, l, acc).  With a sliding window, each q chunk only reads the
+    statically-sized kv slice [q_start - window_pad, q_end) — the HLO FLOPs
+    are O(S·window), which keeps the roofline honest for SWA archs.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]                 # MLA: v head dim ≠ qk head dim
+    scale = 1.0 / math.sqrt(d)
+    if sq % q_chunk or skv % kv_chunk:
+        return attention_dense(q, k, v, causal=causal, window=window)
+    nq = sq // q_chunk
+
+    use_window = window > 0 and causal
+    if use_window:
+        # kv slice length per q chunk: window rounded up + chunk
+        wpad = ((window + kv_chunk - 1) // kv_chunk) * kv_chunk
+        slice_len = min(wpad + q_chunk, skv)
+
+    def q_body(_, qi):
+        qs = q_offset = qi * q_chunk
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_chunk, axis=1)
+        qpos = jnp.arange(q_chunk) + qs
+
+        if use_window:
+            start = jnp.clip(qs + q_chunk - slice_len, 0, skv - slice_len)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, slice_len, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, slice_len, axis=1)
+            kpos = jnp.arange(slice_len) + start
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            s = s * scale
+            mask = (kpos[None, :] <= qpos[:, None]) & \
+                   (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            ob = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vb.dtype), vb)
+            return None, ob
+
+        nkv = skv // kv_chunk
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            ks = ki * kv_chunk
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, kv_chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, kv_chunk, axis=1)
+            kpos = jnp.arange(kv_chunk) + ks
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nkv))
+        ob = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, jnp.transpose(ob, (0, 2, 1, 3))
+
+    _, chunks = jax.lax.scan(q_body, None, jnp.arange(nq))
+    # chunks: (nq, B, q_chunk, H, Dv) -> (B, S, H, Dv)
+    return jnp.transpose(chunks, (1, 0, 2, 3, 4)).reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def gqa_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, h * hd, d, dtype=dtype),
+        "wk": dense_init(k2, kvh * hd, d, dtype=dtype),
+        "wv": dense_init(k3, kvh * hd, d, dtype=dtype),
+        "wo": dense_init(k4, d, h * hd,
+                         scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                         dtype=dtype),
+    }
+    axes = {
+        "wq": P("heads", "embed"),
+        "wk": P("kv_heads", "embed"),
+        "wv": P("kv_heads", "embed"),
+        "wo": P("embed", "heads"),
+    }
+    return params, axes
+
+
+def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
+              prepared: bool, positions: jnp.ndarray,
+              cache: Optional[Dict] = None,
+              kv_quant_bits: int = 16, kv_group: int = 128,
+              use_rope: bool = True, causal: bool = True,
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self-attention with GQA + optional KV cache (decode) + KV quant.
+
+    cache: {"k": (B, Smax, KVH, D), "v": ..., "pos": scalar} or None.
+    """
+    from repro.core import kvquant
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = qlinear(x, p["wq"], qcfg, prepared).reshape(b, s, h, hd)
+    k = qlinear(x, p["wk"], qcfg, prepared).reshape(b, s, kvh, hd)
+    v = qlinear(x, p["wv"], qcfg, prepared).reshape(b, s, kvh, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+
+    if cache is not None and "k_scale" in cache:
+        # int8-at-rest KV cache (QuantConfig.kv_storage == "int8"):
+        # quantize the fresh K/V per (token, kv-head), store codes+scales;
+        # decode dequantizes on read — HBM traffic ≈ half of bf16.
+        pos = cache["pos"]
+        smax = cache["k"].shape[1]
+        kq, ks = quant.quantize_per_channel(
+            k.astype(jnp.float32), min(kv_quant_bits, 8), axis=-1)
+        vq, vs = quant.quantize_per_channel(
+            v.astype(jnp.float32), min(kv_quant_bits, 8), axis=-1)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, 1)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
+                                                  pos, 1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
+                                                  pos, 1)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                     "pos": pos + s}
+        if s > 1:
+            kk = _repeat_kv(k, h // kvh)
+            vv = _repeat_kv(v, h // kvh)
+            out = (attention_chunked if s >= 2048 else attention_dense)(
+                q, kk, vv, causal=causal, window=cfg.sliding_window)
+            out = out.reshape(b, s, h * hd)
+            return qlinear(out, p["wo"], qcfg, prepared), new_cache
+        kk = (ck.astype(x.dtype) * cks.astype(x.dtype))
+        vv = (cv.astype(x.dtype) * cvs.astype(x.dtype))
+        kk = shard(kk, "batch", "cache_seq", None, None)
+        vv = shard(vv, "batch", "cache_seq", None, None)
+        kk = _repeat_kv(kk, h // kvh)
+        vv = _repeat_kv(vv, h // kvh)
+        qpos = (jnp.arange(s) + pos)[:, None]
+        valid = jnp.arange(smax)[None, :] < (pos + s)
+        bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
+        out = attention_dense(q, kk, vv, causal=True,
+                              window=cfg.sliding_window,
+                              q_offset=pos, bias=bias)
+        out = out.reshape(b, s, h * hd)
+        return qlinear(out, p["wo"], qcfg, prepared), new_cache
+
+    if cache is not None:
+        pos = cache["pos"]
+        smax = cache["k"].shape[1]
+        ring = "kpos" in cache          # sliding-window ring buffer
+        if ring and s > 1:
+            # SWA prefill: answer from the fresh K/V (exact windowed attn),
+            # scatter the last `smax` tokens into the ring for later decode.
+            keep = min(s, smax)
+            pos_abs = pos + s - keep + jnp.arange(keep, dtype=jnp.int32)
+            slots = pos_abs % smax
+            ck = cache["k"].at[:, slots].set(
+                k[:, -keep:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(
+                v[:, -keep:].astype(cache["v"].dtype))
+            kpos = cache["kpos"].at[slots].set(pos_abs)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s, "kpos": kpos}
+            kk = _repeat_kv(k, h // kvh)
+            vv = _repeat_kv(v, h // kvh)
+            if s >= 2048:
+                out = attention_chunked(q, kk, vv, causal=True,
+                                        window=cfg.sliding_window)
+            else:
+                out = attention_dense(q, kk, vv, causal=True,
+                                      window=cfg.sliding_window,
+                                      q_offset=0)
+            out = out.reshape(b, s, h * hd)
+            return qlinear(out, p["wo"], qcfg, prepared), new_cache
+        if ring:
+            # decode: write the new token at slot pos % smax and track its
+            # absolute position for masking (SWA long-context serving).
+            slot = pos % smax
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            kpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["kpos"], pos + jnp.arange(s, dtype=jnp.int32),
+                slot, axis=0)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s, "kpos": kpos}
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            kpos = None
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        if s > 1 and not ring:
+            # prefill (from pos=0): serve attention from the FRESH K/V —
+            # flash-chunked, no (s × s_max) score materialization; the
+            # cache holds (quantized-on-read) K/V for later decode steps.
+            kk = _repeat_kv(k, h // kvh)
+            vv = _repeat_kv(v, h // kvh)
+            if s >= 2048:
+                out = attention_chunked(q, kk, vv, causal=causal,
+                                        window=cfg.sliding_window)
+            else:
+                out = attention_dense(q, kk, vv, causal=causal,
+                                      window=cfg.sliding_window)
+            out = out.reshape(b, s, h * hd)
+            return qlinear(out, p["wo"], qcfg, prepared), new_cache
+        kk = kvquant.kv_fakequant(ck, kv_quant_bits, kv_group) \
+            if kv_quant_bits < 16 else ck
+        vv = kvquant.kv_fakequant(cv, kv_quant_bits, kv_group) \
+            if kv_quant_bits < 16 else cv
+        kk = shard(kk.astype(x.dtype), "batch", "cache_seq", None, None)
+        vv = shard(vv.astype(x.dtype), "batch", "cache_seq", None, None)
+        kk = _repeat_kv(kk, h // kvh)
+        vv = _repeat_kv(vv, h // kvh)
+        qpos = (jnp.arange(s) + pos)[:, None]               # (s, 1)
+        if ring:
+            valid = (kpos[None, :] <= qpos) & (kpos[None, :] >= 0)
+            if cfg.sliding_window > 0:
+                valid &= kpos[None, :] > qpos - cfg.sliding_window
+            bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
+            out = attention_dense(q, kk, vv, causal=False, bias=bias)
+        else:
+            valid = jnp.arange(smax)[None, :] < (pos + s)
+            bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
+            out = attention_dense(q, kk, vv, causal=True,
+                                  window=cfg.sliding_window,
+                                  q_offset=pos, bias=bias)
+    else:
+        new_cache = None
+        if kv_quant_bits < 16:
+            # cache-less eval path: emulate the quantized KV cache (paper
+            # KV4 rows are measured on full-sequence perplexity)
+            k = kvquant.kv_fakequant(k, kv_quant_bits, kv_group)
+            v = kvquant.kv_fakequant(v, kv_quant_bits, kv_group)
+        kk = _repeat_kv(k, h // kvh)
+        vv = _repeat_kv(v, h // kvh)
+        if s >= 2048:
+            out = attention_chunked(q, kk, vv, causal=causal,
+                                    window=cfg.sliding_window)
+        else:
+            out = attention_dense(q, kk, vv, causal=causal,
+                                  window=cfg.sliding_window)
+    out = out.reshape(b, s, h * hd)
+    return qlinear(out, p["wo"], qcfg, prepared), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+               dtype=jnp.float32) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_gate": dense_init(k1, f, d, dtype=dtype),
+        "w_up": dense_init(k2, f, d, dtype=dtype),
+        "w_down": dense_init(k3, d, f,
+                             scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                             dtype=dtype),
+    }
+    axes = {
+        "w_gate": P("ffn", "embed"),
+        "w_up": P("ffn", "embed"),
+        "w_down": P("embed", "ffn"),
+    }
+    return params, axes
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray, qcfg: QuantConfig,
+              prepared: bool) -> jnp.ndarray:
+    g = qlinear(x, p["w_gate"], qcfg, prepared)
+    u = qlinear(x, p["w_up"], qcfg, prepared)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "ffn")
+    # down_proj input is the SwiGLU output — the paper's spike-outlier site
+    return qlinear(h, p["w_down"], qcfg, prepared)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder / llama-vision)
+# ---------------------------------------------------------------------------
+
+def xattn_params(key, cfg: ModelConfig, kv_dim: Optional[int] = None,
+                 dtype=jnp.float32) -> Tuple[Dict, Dict]:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    kd = kv_dim or d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, h * hd, d, dtype=dtype),
+        "wk": dense_init(k2, kvh * hd, kd, dtype=dtype),
+        "wv": dense_init(k3, kvh * hd, kd, dtype=dtype),
+        "wo": dense_init(k4, d, h * hd,
+                         scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                         dtype=dtype),
+    }
+    axes = {
+        "wq": P("heads", "embed"),
+        "wk": P("kv_heads", None),
+        "wv": P("kv_heads", None),
+        "wo": P("embed", "heads"),
+    }
+    return params, axes
+
+
+def xattn_apply(p: Dict, x: jnp.ndarray, enc: Optional[jnp.ndarray],
+                cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
+                cache: Optional[Dict] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Cross-attention; enc (B, Senc, Denc).  If ``cache`` holds
+    precomputed {"k","v"} (decode), enc may be None."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = qlinear(x, p["wq"], qcfg, prepared).reshape(b, s, h, hd)
+    if enc is None and cache is not None and "k" in cache:
+        # decode: encoder K/V were computed at prefill and cached
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        senc = enc.shape[1]
+        k = qlinear(enc, p["wk"], qcfg, prepared).reshape(b, senc, kvh, hd)
+        v = qlinear(enc, p["wv"], qcfg, prepared).reshape(b, senc, kvh, hd)
+        new_cache = {"k": k, "v": v}
+    kk = _repeat_kv(k.astype(x.dtype), h // kvh)
+    vv = _repeat_kv(v.astype(x.dtype), h // kvh)
+    if s >= 2048 and kk.shape[1] >= 2048:
+        out = attention_chunked(q, kk, vv, causal=False)
+    else:
+        out = attention_dense(q, kk, vv, causal=False)
+    out = out.reshape(b, s, h * hd)
+    return qlinear(out, p["wo"], qcfg, prepared), new_cache

@@ -1,0 +1,230 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm, pure JAX.
+
+The selective scan is evaluated chunk-parallel (paper arXiv:2405.21060):
+within a chunk, the quadratic "attention-like" form runs on the MXU; across
+chunks a sequential ``lax.scan`` carries the (H, P, N) state — O(L·c) memory
+instead of O(L²).
+
+RRS applicability (DESIGN.md §5): the scan itself is not a GEMM, so the
+paper's smoother applies to the in/out projections (the FLOP majority) and
+they go through ``qlinear`` like every other projector.
+
+TP: heads (and the inner dim) shard over ``model``; B/C (state projections)
+are small and replicated; the chunk scan is local per shard.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig, SSMConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, qlinear, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm or SSMConfig()
+    d_in = ssm.expand * cfg.d_model
+    nheads = ssm.num_heads or d_in // ssm.head_dim
+    return ssm, d_in, nheads
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    ssm, d_in, h = _dims(cfg)
+    d, n = cfg.d_model, ssm.state_dim
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 9)
+    params = {
+        "w_z": dense_init(ks[0], d_in, d, dtype=dtype),
+        "w_x": dense_init(ks[1], d_in, d, dtype=dtype),
+        "w_B": dense_init(ks[2], n, d, dtype=dtype),
+        "w_C": dense_init(ks[3], n, d, dtype=dtype),
+        "w_dt": dense_init(ks[4], h, d, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[5], (conv_dim, ssm.conv_width),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (h,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1)))
+        )).astype(jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[7], d, d_in,
+                               scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                               dtype=dtype),
+    }
+    axes = {
+        "w_z": P("ssm_inner", "embed"),
+        "w_x": P("ssm_inner", "embed"),
+        "w_B": P(None, "embed"),
+        "w_C": P(None, "embed"),
+        "w_dt": P("ssm_heads", "embed"),
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "A_log": P("ssm_heads"),
+        "D": P("ssm_heads"),
+        "dt_bias": P("ssm_heads"),
+        "norm": P("ssm_inner"),
+        "out_proj": P("embed", "ssm_inner"),
+    }
+    return params, axes
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (B, L, C); w: (C, W).
+
+    With ``state`` (B, W-1, C): incremental mode (decode), returns new state.
+    """
+    bsz, l, c = x.shape
+    width = w.shape[1]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(width - 1):, :]
+        y = sum(xin[:, i:i + l, :] * w[:, i] for i in range(width))
+        return y + b, new_state
+    pad = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xin = jnp.concatenate([pad, x], axis=1)
+    y = sum(xin[:, i:i + l, :] * w[:, i] for i in range(width))
+    return y + b, xin[:, -(width - 1):, :]
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., T) -> (..., T, T): segsum[i, j] = sum a[j+1..i], -inf above."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(t)[:, None] >= jnp.arange(t)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b_mat: jnp.ndarray, c_mat: jnp.ndarray,
+             chunk: int, init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD. x: (B, L, H, P); dt: (B, L, H); a: (H,) negative;
+    b_mat/c_mat: (B, L, N).  Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    if l % chunk:
+        chunk = l  # degenerate single chunk (smoke sizes)
+    nc = l // chunk
+    xb = x.reshape(bsz, nc, chunk, h, p)
+    dtb = dt.reshape(bsz, nc, chunk, h)
+    bb = b_mat.reshape(bsz, nc, chunk, n)
+    cb = c_mat.reshape(bsz, nc, chunk, n)
+    # dt-weighted input (standard: x * dt broadcast per head)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        xc, dtc, bc, cc = inp                 # (B,chunk,H,P) etc.
+        da = dtc.astype(jnp.float32) * a      # (B,chunk,H) negative
+        da_h = jnp.transpose(da, (0, 2, 1))   # (B,H,chunk)
+        a_cs = jnp.cumsum(da_h, axis=-1)      # (B,H,chunk)
+        lmat = jnp.exp(_segsum(da_h))         # (B,H,chunk,chunk)
+        xdt = xc.astype(jnp.float32) * dtc.astype(jnp.float32)[..., None]
+        # intra-chunk (the "attention-like" quadratic form)
+        y_diag = jnp.einsum("bln,bsn,bhls,bshp->blhp",
+                            cc.astype(jnp.float32), bc.astype(jnp.float32),
+                            lmat, xdt)
+        # state contribution of this chunk
+        decay_states = jnp.exp(a_cs[..., -1:] - a_cs)      # (B,H,chunk)
+        chunk_state = jnp.einsum("bln,bhl,blhp->bhpn",
+                                 bb_c := bc.astype(jnp.float32),
+                                 decay_states, xdt)
+        # inter-chunk: previous state read by every position
+        state_decay = jnp.exp(a_cs)                        # (B,H,chunk)
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp",
+                           cc.astype(jnp.float32), state, state_decay)
+        new_state = state * jnp.exp(a_cs[..., -1])[..., None, None] \
+            + chunk_state
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    xs = (jnp.swapaxes(xb, 0, 1), jnp.swapaxes(dtb, 0, 1),
+          jnp.swapaxes(bb, 0, 1), jnp.swapaxes(cb, 0, 1))
+    final_state, yc = jax.lax.scan(body, init_state, xs)
+    y = jnp.swapaxes(yc, 0, 1).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def mamba2_apply(pm: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 qcfg: QuantConfig, prepared: bool,
+                 cache: Optional[Dict] = None,
+                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, d) -> (y, new_cache).
+
+    cache = {"conv": (B, W-1, conv_dim), "ssm": (B, H, P, N)} for decode.
+    """
+    ssm, d_in, h = _dims(cfg)
+    bsz, s, d = x.shape
+    n, p = ssm.state_dim, ssm.head_dim
+
+    z = qlinear(x, pm["w_z"], qcfg, prepared)               # (B,S,d_in)
+    xx = qlinear(x, pm["w_x"], qcfg, prepared)              # (B,S,d_in)
+    bmat = qlinear(x, pm["w_B"], qcfg, prepared, quantize=False)
+    cmat = qlinear(x, pm["w_C"], qcfg, prepared, quantize=False)
+    dt = qlinear(x, pm["w_dt"], qcfg, prepared, quantize=False)
+    xx = shard(xx, "batch", "seq", "ssm_inner")
+
+    conv_in = jnp.concatenate([xx, bmat, cmat], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv_state = _causal_conv(conv_in, pm["conv_w"],
+                                            pm["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xx = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in:d_in + n]
+    cmat = conv_out[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + pm["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(pm["A_log"].astype(jnp.float32))           # (H,)
+    xh = xx.reshape(bsz, s, h, p)
+
+    if cache is None or s > 1:
+        init_state = None if cache is None else cache["ssm"]
+        y, final_state = ssd_scan(xh, dt, a, bmat, cmat,
+                                  chunk=ssm.chunk_size,
+                                  init_state=init_state)
+    else:
+        # single-token recurrent update (decode)
+        state = cache["ssm"]                                 # (B,H,P,N)
+        da = jnp.exp(dt[:, 0] * a[None, :])                  # (B,H)
+        xdt = (xh[:, 0].astype(jnp.float32)
+               * dt[:, 0][..., None])                        # (B,H,P)
+        upd = jnp.einsum("bhp,bn->bhpn", xdt,
+                         bmat[:, 0].astype(jnp.float32))
+        state = state * da[..., None, None] + upd
+        yy = jnp.einsum("bhpn,bn->bhp", state,
+                        cmat[:, 0].astype(jnp.float32))
+        y = yy[:, None].astype(x.dtype)
+        final_state = state
+
+    y = y + xh.astype(jnp.float32).astype(x.dtype) \
+        * pm["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, pm["norm"], cfg.norm_eps)
+    out = qlinear(y, pm["out_proj"], qcfg, prepared)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
+                     "ssm": final_state}
+    return out, new_cache
+
+
+def mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    ssm, d_in, h = _dims(cfg)
+    conv_dim = d_in + 2 * ssm.state_dim
+    c = {"conv": jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype),
+         "ssm": jnp.zeros((batch, h, ssm.head_dim, ssm.state_dim),
+                          jnp.float32)}
+    a = {"conv": P("batch", None, None),
+         "ssm": P("batch", "ssm_heads", None, None)}
+    return c, a

@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with the compressed KV cache.
+
+Prefill/train use the expanded form (per-head K/V up-projected, chunked
+flash attention).  Decode uses the *absorbed* form: W_uk is folded into the
+query and W_uv into the output, so attention runs directly against the
+(kv_lora_rank + rope_dim)-wide latent cache — the cache is ~576 f16/token
+regardless of head count (the reason MLA decode is so cheap).
+
+The latent cache is quantized with the paper's sub-channel KV scheme
+(beyond-paper extension, DESIGN.md §8.5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import kvquant
+from repro.dist.sharding import shard
+from repro.models.layers import (NEG_INF, apply_rope, attention_chunked,
+                                 attention_dense, dense_init, qlinear,
+                                 rmsnorm)
+
+
+def mla_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    params = {
+        "w_dq": dense_init(ks[0], m.q_lora_rank, d, dtype=dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], h * qk_hd, m.q_lora_rank, dtype=dtype),
+        "w_dkv": dense_init(ks[2], m.kv_lora_rank + m.qk_rope_head_dim, d,
+                            dtype=dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[3], h * m.qk_nope_head_dim, m.kv_lora_rank,
+                           dtype=dtype),
+        "w_uv": dense_init(ks[4], h * m.v_head_dim, m.kv_lora_rank,
+                           dtype=dtype),
+        "wo": dense_init(ks[5], d, h * m.v_head_dim,
+                         scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                         dtype=dtype),
+    }
+    axes = {
+        "w_dq": P("q_lora", "embed"),
+        "q_norm": P(None),
+        "w_uq": P("heads", "q_lora"),
+        "w_dkv": P(None, "embed"),
+        "kv_norm": P(None),
+        "w_uk": P("heads", "kv_lora"),
+        "w_uv": P("heads", "kv_lora"),
+        "wo": P("embed", "heads"),
+    }
+    return params, axes
+
+
+def mla_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
+              prepared: bool, positions: jnp.ndarray,
+              cache: Optional[Dict] = None,
+              kv_quant_bits: int = 16, kv_group: int = 128,
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rope_d = m.qk_nope_head_dim, m.qk_rope_head_dim
+    qk_hd = nope + rope_d
+    scale = 1.0 / math.sqrt(qk_hd)
+
+    # --- queries (low-rank) ---
+    cq = rmsnorm(qlinear(x, p["w_dq"], qcfg, prepared), p["q_norm"],
+                 cfg.norm_eps)
+    q = qlinear(cq, p["w_uq"], qcfg, prepared).reshape(b, s, h, qk_hd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- latent kv ---
+    ckv_full = qlinear(x, p["w_dkv"], qcfg, prepared)   # (B,S,rank+rope)
+    c_kv = rmsnorm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"],
+                   cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank:].reshape(b, s, 1, rope_d)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    latent = jnp.concatenate([c_kv, k_rope.reshape(b, s, rope_d)], axis=-1)
+
+    if cache is None:
+        # expanded form + chunked attention (train / prefill-no-cache)
+        w_uk = p["w_uk"].reshape(h, nope, m.kv_lora_rank)
+        w_uv = p["w_uv"].reshape(h, m.v_head_dim, m.kv_lora_rank)
+        k_nope = jnp.einsum("bsr,hnr->bshn", c_kv, w_uk)
+        v = jnp.einsum("bsr,hvr->bshv", c_kv, w_uv)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope_d))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = shard(qq, "batch", "seq", "act_heads", None)
+        if s >= 2048:
+            out = attention_chunked(qq, kk.astype(x.dtype), v.astype(x.dtype))
+        else:
+            out = attention_dense(qq, kk.astype(x.dtype), v.astype(x.dtype))
+        out = out.reshape(b, s, h * m.v_head_dim)
+        return qlinear(out, p["wo"], qcfg, prepared), None
+
+    # --- absorbed decode against the latent cache ---
+    pos0 = cache["pos"]
+    lat = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent.astype(cache["latent"].dtype), pos0, axis=1)
+    new_cache = {"latent": lat, "pos": pos0 + s}
+    if s > 1:
+        # prefill: expanded-form flash attention on the fresh latent (no
+        # (s × s_max) scores); the latent cache is kept for decode.
+        w_uk = p["w_uk"].reshape(h, nope, m.kv_lora_rank)
+        w_uv = p["w_uv"].reshape(h, m.v_head_dim, m.kv_lora_rank)
+        k_nope = jnp.einsum("bsr,hnr->bshn", c_kv, w_uk)
+        vv = jnp.einsum("bsr,hvr->bshv", c_kv, w_uv).astype(x.dtype)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope_d))],
+            axis=-1).astype(x.dtype)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = shard(qq, "batch", "seq", "act_heads", None)
+        if s >= 2048:
+            out = attention_chunked(qq, kk, vv)
+        else:
+            out = attention_dense(qq, kk, vv)
+        out = out.reshape(b, s, h * m.v_head_dim)
+        return qlinear(out, p["wo"], qcfg, prepared), new_cache
+    lat_q = kvquant.kv_fakequant(lat, kv_quant_bits, kv_group) \
+        if kv_quant_bits < 16 else lat
+    lat_q = shard(lat_q.astype(x.dtype), "batch", "cache_seq", None)
+    c_all = lat_q[..., :m.kv_lora_rank]                 # (B, Smax, rank)
+    kr_all = lat_q[..., m.kv_lora_rank:]                # (B, Smax, rope)
+
+    w_uk = p["w_uk"].reshape(h, nope, m.kv_lora_rank)
+    q_abs = jnp.einsum("bshn,hnr->bshr", q_nope, w_uk)  # (B,s,H,rank)
+    scores = (jnp.einsum("bshr,bkr->bhsk", q_abs, c_all)
+              + jnp.einsum("bshr,bkr->bhsk", q_rope, kr_all)
+              ).astype(jnp.float32) * scale
+    smax = c_all.shape[1]
+    qpos = jnp.arange(s) + pos0
+    valid = (jnp.arange(smax)[None, :] <= qpos[:, None]) & \
+            (jnp.arange(smax)[None, :] < pos0 + s)
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhsk,bkr->bshr", pr.astype(x.dtype), c_all)
+    w_uv = p["w_uv"].reshape(h, m.v_head_dim, m.kv_lora_rank)
+    out = jnp.einsum("bshr,hvr->bshv", out_lat, w_uv)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return qlinear(out, p["wo"], qcfg, prepared), new_cache

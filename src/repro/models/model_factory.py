@@ -1,0 +1,65 @@
+"""Family dispatch: one uniform Model API over all architectures.
+
+    model = build_model(cfg)
+    params, axes      = model.init(key)
+    logits, aux       = model.forward(params, batch, qcfg)
+    cache, cache_axes = model.init_cache(batch_size, max_len)
+    logits, cache     = model.step(params, tokens, cache, qcfg, ...)
+
+``batch`` keys by family: tokens (all), patches (vlm), frames (audio).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import hybrid, ssm_lm, transformer, whisper
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _init: Callable
+    _forward: Callable
+    _init_cache: Callable
+    _step: Callable
+
+    def init(self, key) -> Tuple[Dict, Dict]:
+        return self._init(self.cfg, key)
+
+    def forward(self, params, batch: Dict, qcfg: QuantConfig,
+                prepared: bool = False, return_hidden: bool = False):
+        return self._forward(self.cfg, params, batch, qcfg,
+                             prepared=prepared, return_hidden=return_hidden)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_storage: str = "fake"):
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            return self._init_cache(self.cfg, batch, max_len, dtype=dtype,
+                                    kv_storage=kv_storage)
+        return self._init_cache(self.cfg, batch, max_len, dtype=dtype)
+
+    def step(self, params, tokens, cache, qcfg: QuantConfig,
+             prepared: bool = False, **extra):
+        return self._step(self.cfg, params, tokens, cache, qcfg,
+                          prepared=prepared, **extra)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(cfg, transformer.init_params, transformer.forward,
+                     transformer.init_cache, transformer.step_with_cache)
+    if cfg.family == "ssm":
+        return Model(cfg, ssm_lm.init_params, ssm_lm.forward,
+                     ssm_lm.init_cache, ssm_lm.step_with_cache)
+    if cfg.family == "hybrid":
+        return Model(cfg, hybrid.init_params, hybrid.forward,
+                     hybrid.init_cache, hybrid.step_with_cache)
+    if cfg.family == "audio":
+        return Model(cfg, whisper.init_params, whisper.forward,
+                     whisper.init_cache, whisper.step_with_cache)
+    raise ValueError(f"unknown family {cfg.family}")

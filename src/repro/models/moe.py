@@ -1,0 +1,304 @@
+"""Mixture-of-Experts FFN with sort-based dispatch and expert parallelism.
+
+Two execution paths sharing the same math:
+
+* **local** (no mesh / smoke tests): dispatch into a capacity buffer
+  (E, C, d), run every expert, combine.
+* **EP shard_map** (production): tokens sharded over ``data``, experts over
+  ``model``.  Each device routes its local tokens into the (E, C_loc, d)
+  buffer, a tiled ``all_to_all`` over ``model`` exchanges expert shards
+  (the canonical EP dispatch collective), local experts run as batched
+  GEMMs, and a second all_to_all brings tokens home.
+
+Dispatch is *sort-based* (argsort by expert id + positional arithmetic) —
+no (T, E, C) one-hot tensors, so dispatch FLOPs/bytes stay negligible next
+to expert GEMMs (important for an honest roofline; see DESIGN.md).
+
+RRS integration: expert GEMMs go through the same ``qlinear`` dispatch,
+vmapped over the expert axis — the runtime smoothing scales are computed
+per expert slice, exactly as described in DESIGN.md §5 (MoE applicability).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.dist import sharding as shd
+from repro.models.layers import dense_init, qlinear
+
+
+def moe_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    e = cfg.moe
+    f = e.expert_d_ff
+    ks = jax.random.split(key, 8)
+    params = {
+        "router": dense_init(ks[0], e.num_experts, d, dtype=jnp.float32),
+        "w_gate": _stack_init(ks[1], e.num_experts, f, d, cfg, dtype),
+        "w_up": _stack_init(ks[2], e.num_experts, f, d, cfg, dtype),
+        "w_down": _stack_init(ks[3], e.num_experts, d, f, cfg, dtype,
+                              out_scaled=True),
+    }
+    axes = {
+        "router": P(None, "embed"),
+        "w_gate": P("experts", "expert_ffn", None),
+        "w_up": P("experts", "expert_ffn", None),
+        "w_down": P("experts", None, "expert_ffn"),
+    }
+    if e.num_shared_experts:
+        fs = f * e.num_shared_experts
+        params["shared_gate"] = dense_init(ks[4], fs, d, dtype=dtype)
+        params["shared_up"] = dense_init(ks[5], fs, d, dtype=dtype)
+        params["shared_down"] = dense_init(
+            ks[6], d, fs, scale=1.0 / math.sqrt(2 * cfg.num_layers),
+            dtype=dtype)
+        axes["shared_gate"] = P("ffn", "embed")
+        axes["shared_up"] = P("ffn", "embed")
+        axes["shared_down"] = P("embed", "ffn")
+    return params, axes
+
+
+def _stack_init(key, e: int, m: int, k: int, cfg: ModelConfig, dtype,
+                out_scaled: bool = False):
+    scale = 1.0 / math.sqrt(2 * cfg.num_layers) if out_scaled else 1.0
+    return jax.vmap(lambda kk: dense_init(kk, m, k, scale=scale,
+                                          dtype=dtype))(
+        jax.random.split(key, e))
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch (local math, used by both paths)
+# ---------------------------------------------------------------------------
+
+def _route(x2: jnp.ndarray, router_w: jnp.ndarray, topk: int,
+           capacity: int):
+    """x2: (T, d) -> dispatch metadata + buffer (E, C, d).
+
+    Returns (buffer, combine_w (T,k), expert_pos (T*k,), expert_id (T*k,),
+    keep (T*k,), aux_loss).
+    """
+    t, d = x2.shape
+    e = router_w.shape[0]
+    logits = (x2.astype(jnp.float32) @ router_w.T).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, topk)                    # (T, k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    # aux load-balancing loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1),
+        axis=0) / topk
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = top_i.reshape(-1)                                   # (T*k,)
+    # position of each assignment within its expert, via stable sort
+    order = jnp.argsort(flat_e, stable=True)                     # (T*k,)
+    # rank within sorted segment
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))        # (E,)
+    pos_sorted = jnp.arange(t * topk) - seg_start[sorted_e]
+    pos = jnp.zeros((t * topk,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos < capacity
+    token_idx = jnp.repeat(jnp.arange(t), topk)
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((e, capacity, d), x2.dtype)
+    buf = buf.at[flat_e, jnp.where(keep, pos, capacity - 1)].add(
+        jnp.where(keep[:, None], x2[token_idx], 0).astype(x2.dtype))
+    return buf, top_p, pos, flat_e, keep, aux
+
+
+def _unroute(y_buf: jnp.ndarray, top_p: jnp.ndarray, pos: jnp.ndarray,
+             flat_e: jnp.ndarray, keep: jnp.ndarray, t: int, topk: int):
+    """(E, C, d) -> (T, d) weighted combine."""
+    d = y_buf.shape[-1]
+    gathered = y_buf[flat_e, jnp.clip(pos, 0, y_buf.shape[1] - 1)]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gathered = gathered.reshape(t, topk, d)
+    return jnp.sum(gathered * top_p[..., None].astype(gathered.dtype),
+                   axis=1)
+
+
+def _expert_ffn(buf: jnp.ndarray, w_gate, w_up, w_down,
+                qcfg: QuantConfig, prepared: bool) -> jnp.ndarray:
+    """(E, C, d) -> (E, C, d): vmapped SwiGLU over the expert axis."""
+    def one(xe, wg, wu, wd):
+        g = qlinear(xe, wg, qcfg, prepared)
+        u = qlinear(xe, wu, qcfg, prepared)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        return qlinear(h, wd, qcfg, prepared)
+    return jax.vmap(one)(buf, w_gate, w_up, w_down)
+
+
+# ---------------------------------------------------------------------------
+# public apply
+# ---------------------------------------------------------------------------
+
+def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
+              prepared: bool, capacity_factor: float = 1.25
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e = cfg.moe
+    mesh = shd.active_mesh()
+    x2 = x.reshape(b * s, d)
+
+    ep_axes = shd.resolved_rule("experts")
+    is_decode = s == 1 or b * s <= 4 * e.num_experts
+    if mesh is not None and len(ep_axes) > 1 and is_decode:
+        # serving EP: experts spread over the whole mesh (e.g. 1/chip),
+        # tokens replicated — DeepSeek-style inference dispatch
+        y2, aux = _moe_ep_inference(p, x2, cfg, qcfg, prepared,
+                                    capacity_factor, mesh, ep_axes)
+    elif mesh is not None and ep_axes:
+        y2, aux = _moe_ep_shard_map(p, x2, cfg, qcfg, prepared,
+                                    capacity_factor, mesh, ep_axes)
+    else:
+        t = b * s
+        cap = max(int(t * e.experts_per_token * capacity_factor
+                      / e.num_experts), 4)
+        buf, top_p, pos, flat_e, keep, aux = _route(
+            x2, p["router"], e.experts_per_token, cap)
+        y_buf = _expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"],
+                            qcfg, prepared)
+        y2 = _unroute(y_buf, top_p, pos, flat_e, keep, t,
+                      e.experts_per_token)
+
+    if e.num_shared_experts:
+        g = qlinear(x2, p["shared_gate"], qcfg, prepared)
+        u = qlinear(x2, p["shared_up"], qcfg, prepared)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x2.dtype) * u
+        y2 = y2 + qlinear(h, p["shared_down"], qcfg, prepared)
+    return y2.reshape(b, s, d), aux
+
+
+def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
+                      ep_axes):
+    """Decode-time EP: experts sharded over ``ep_axes`` (e.g. data×model =
+    256-way), every device routes the (small, replicated) token batch and
+    computes its local expert slice; one psum combines (DESIGN.md §6)."""
+    e = cfg.moe
+    axis_names = list(mesh.axis_names)
+
+    def _prod(axes):
+        n = 1
+        for a in axes:
+            n *= mesh.devices.shape[axis_names.index(a)]
+        return n
+
+    # suffix-drop until the EP degree divides the expert count (matches
+    # the weight-sharding fallback in dist.sharding._fit_spec_to_shape)
+    while ep_axes and e.num_experts % _prod(ep_axes):
+        ep_axes = ep_axes[:-1]
+    ep = _prod(ep_axes) if ep_axes else 1
+    if not ep_axes or ep == 1:
+        return _moe_ep_shard_map(p, x2, cfg, qcfg, prepared,
+                                 capacity_factor, mesh)
+    e_loc = e.num_experts // ep
+    t = x2.shape[0]
+    cap = max(int(t * e.experts_per_token * capacity_factor
+                  / e.num_experts), 1)
+
+    def local_fn(x_all, router_w, w_gate, w_up, w_down):
+        buf, top_p, pos, flat_e, keep, aux = _route(
+            x_all, router_w, e.experts_per_token, cap)
+        # flattened device index along ep_axes (major-to-minor order)
+        idx = jax.lax.axis_index(ep_axes[0])
+        for a in ep_axes[1:]:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        buf_loc = jax.lax.dynamic_slice_in_dim(buf, idx * e_loc, e_loc, 0)
+        y_loc = _expert_ffn(buf_loc, w_gate, w_up, w_down, qcfg, prepared)
+        y_buf = jnp.zeros_like(buf)
+        y_buf = jax.lax.dynamic_update_slice_in_dim(y_buf, y_loc,
+                                                    idx * e_loc, 0)
+        y_buf = jax.lax.psum(y_buf, ep_axes)
+        y = _unroute(y_buf, top_p, pos, flat_e, keep, t,
+                     e.experts_per_token)
+        return y, aux
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(None, None), P(ep_axes, None, None),
+                  P(ep_axes, None, None), P(ep_axes, None, None)),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return fn(x2, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
+                      ep_axes=("model",)):
+    """Expert-parallel training/prefill dispatch: tokens sharded over the
+    data axes, experts sharded over ``ep_axes`` (one or more mesh axes —
+    multi-axis EP = chained tiled all_to_alls, the DeepSeek-style
+    large-scale layout that avoids per-microbatch expert all-gathers)."""
+    e = cfg.moe
+    axis_names = list(mesh.axis_names)
+
+    def _size(a):
+        return mesh.devices.shape[axis_names.index(a)]
+
+    ep_axes = tuple(a for a in ep_axes if a in axis_names)
+    while ep_axes and e.num_experts % int(
+            np.prod([_size(a) for a in ep_axes])):
+        ep_axes = ep_axes[:-1]
+    if not ep_axes:
+        t = x2.shape[0]
+        cap = max(int(t * e.experts_per_token * capacity_factor
+                      / e.num_experts), 4)
+        buf, top_p, pos, flat_e, keep, aux = _route(
+            x2, p["router"], e.experts_per_token, cap)
+        y_buf = _expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"],
+                            qcfg, prepared)
+        return _unroute(y_buf, top_p, pos, flat_e, keep, t,
+                        e.experts_per_token), aux
+
+    # tokens shard over EVERY mesh axis inside the MoE (a token slice per
+    # chip) — otherwise each model-rank redundantly dispatches the same
+    # tokens and the a2a volume blows up by the TP degree.
+    token_axes = tuple(a for a in ("pod", "data", "model")
+                       if a in axis_names)
+    t_global = x2.shape[0]
+    tp_all = int(np.prod([_size(a) for a in token_axes]))
+    while token_axes and t_global % int(
+            np.prod([_size(a) for a in token_axes])):
+        token_axes = token_axes[:-1]
+    tp_all = int(np.prod([_size(a) for a in token_axes])) \
+        if token_axes else 1
+    t_loc = t_global // tp_all
+    cap_loc = max(math.ceil(t_loc * e.experts_per_token * capacity_factor
+                            / e.num_experts), 4)
+
+    def local_fn(x_loc, router_w, w_gate, w_up, w_down):
+        # x_loc: (T_loc, d); w_*: (E/(∏ep_axes), ...) expert shards
+        buf, top_p, pos, flat_e, keep, aux = _route(
+            x_loc, router_w, e.experts_per_token, cap_loc)
+        for a in ep_axes:                       # (E, C, d) → (E/Π, ΠC, d)
+            buf = jax.lax.all_to_all(buf, a, split_axis=0,
+                                     concat_axis=1, tiled=True)
+        y_buf = _expert_ffn(buf, w_gate, w_up, w_down, qcfg, prepared)
+        for a in reversed(ep_axes):
+            y_buf = jax.lax.all_to_all(y_buf, a, split_axis=1,
+                                       concat_axis=0, tiled=True)
+        y_loc = _unroute(y_buf, top_p, pos, flat_e, keep, x_loc.shape[0],
+                         e.experts_per_token)
+        for a in set(ep_axes) | set(token_axes):
+            aux = jax.lax.pmean(aux, a)
+        return y_loc, aux
+
+    x_spec = P(token_axes if len(token_axes) > 1 else
+               (token_axes[0] if token_axes else None), None)
+    w_spec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return fn(x2, p["router"], p["w_gate"], p["w_up"], p["w_down"])

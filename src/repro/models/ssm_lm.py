@@ -1,0 +1,103 @@
+"""Mamba2 language model (attention-free): embed → scanned Mamba2 blocks →
+norm → head.  Decode carries (conv, ssm) state — O(1) per token, which is
+why this family runs the long_500k cell."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    dtype = _dtype(cfg)
+    k0, k1, k2 = jax.random.split(key, 3)
+    params = {
+        "embed": L.embed_init(k0, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    axes = {"embed": P("vocab", "embed"), "final_norm": P(None)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k1, cfg.vocab_size, cfg.d_model,
+                                         dtype=dtype)
+        axes["lm_head"] = P("vocab", "embed")
+
+    def block_init(k):
+        kk = jax.random.split(k, 2)
+        p, a = M.mamba2_params(kk[0], cfg, dtype)
+        return {"ln": jnp.ones((cfg.d_model,), dtype), "mamba": p}, \
+               {"ln": P(None), "mamba": a}
+
+    keys = jax.random.split(k2, cfg.num_layers)
+    params["layers"] = jax.vmap(lambda k: block_init(k)[0])(keys)
+    _, one_axes = block_init(jax.random.PRNGKey(0))
+    axes["layers"] = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                                  one_axes)
+    return params, axes
+
+
+def _blocks(cfg, params, x, qcfg, prepared, caches=None):
+    def body(carry, inputs):
+        xx = carry
+        if caches is None:
+            lp = inputs
+            h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
+            out, _ = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared)
+            return xx + cfg.residual_scale * out, None
+        lp, lc = inputs
+        h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
+        out, nc = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared,
+                                 cache=lc)
+        return xx + cfg.residual_scale * out, nc
+
+    xs = params["layers"] if caches is None else (params["layers"], caches)
+    x, new_caches = jax.lax.scan(L.maybe_remat(body), x, xs)
+    return x, new_caches
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, qcfg: QuantConfig,
+            prepared: bool = False, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    x = shard(x, "batch", "seq", None)
+    x, _ = _blocks(cfg, params, x, qcfg, prepared)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.T.astype(x.dtype)) * cfg.logit_scale
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Tuple[Dict, Dict]:
+    c, a = M.mamba2_cache(cfg, batch, dtype)
+    n = cfg.num_layers
+    caches = jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), c)
+    axes = jax.tree.map(lambda s: P(*((None,) + tuple(s))), a)
+    return caches, axes
+
+
+def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                    caches: Dict, qcfg: QuantConfig, prepared: bool = False,
+                    patches=None, last_only: bool = True):
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    x = shard(x, "batch", "seq", None)
+    x, new_caches = _blocks(cfg, params, x, qcfg, prepared, caches=caches)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only and x.shape[1] > 1:
+        x = x[:, -1:]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.T.astype(x.dtype)) * cfg.logit_scale
+    return shard(logits, "batch", "seq", "vocab"), new_caches

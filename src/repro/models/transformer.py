@@ -1,0 +1,449 @@
+"""Decoder-only transformer covering the dense / MoE / VLM families.
+
+* homogeneous stacks are scanned (``jax.lax.scan`` over stacked params) —
+  compile time and HLO size stay flat in depth (88-layer granite compiles
+  like a 2-layer model);
+* MoE layers route through ``repro.models.moe`` (EP shard_map);
+* MLA (DeepSeek) swaps the attention via ``repro.models.mla``;
+* VLM (llama-3.2-vision style) interleaves cross-attention layers every
+  ``len(layers)/len(cross_attn_layers)`` blocks (grouped scan);
+* every projector is quantized through ``qlinear`` — the paper's RRS is a
+  config flag, not a model rewrite.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# block init/apply
+# ---------------------------------------------------------------------------
+
+def _block_params(key, cfg: ModelConfig, kind: str, dtype):
+    """kind: "dense" | "moe" | "cross"."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mla is not None:
+        attn_p, attn_a = mla_mod.mla_params(k1, cfg, dtype)
+    else:
+        attn_p, attn_a = L.gqa_params(k1, cfg, dtype)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype), "attn": attn_p,
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    a = {"ln1": P(None), "attn": attn_a, "ln2": P(None)}
+    if kind == "moe":
+        p["moe"], a["moe"] = moe_mod.moe_params(k2, cfg, dtype)
+    else:
+        p["mlp"], a["mlp"] = L.mlp_params(k2, cfg, dtype=dtype)
+    if kind == "cross":
+        p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+        a["ln_x"] = P(None)
+        p["xattn"], a["xattn"] = L.xattn_params(k3, cfg, dtype=dtype)
+        p["xattn_gate"] = jnp.zeros((1,), dtype)
+        a["xattn_gate"] = P(None)
+    return p, a
+
+
+def _block_apply(p, x, cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
+                 positions, cache=None, enc=None, kind: str = "dense",
+                 kv_bits: int = 16, kv_group: int = 128):
+    """Pre-norm block. Returns (x, new_cache, aux)."""
+    rs = cfg.residual_scale
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, new_attn_cache = mla_mod.mla_apply(
+            p["attn"], h, cfg, qcfg, prepared, positions,
+            cache=None if cache is None else cache.get("attn"),
+            kv_quant_bits=kv_bits, kv_group=kv_group)
+    else:
+        attn_out, new_attn_cache = L.gqa_apply(
+            p["attn"], h, cfg, qcfg, prepared, positions,
+            cache=None if cache is None else cache.get("attn"),
+            kv_quant_bits=kv_bits, kv_group=kv_group,
+            use_rope=not cfg.is_encoder_decoder)
+    x = x + rs * attn_out
+    new_cache = {} if cache is not None else None
+    if new_attn_cache is not None:
+        new_cache["attn"] = new_attn_cache
+
+    if kind == "cross":
+        hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        xout, new_x_cache = L.xattn_apply(
+            p["xattn"], hx, enc, cfg, qcfg, prepared,
+            cache=None if cache is None else cache.get("xattn"))
+        gate = jnp.tanh(p["xattn_gate"].astype(jnp.float32)).astype(x.dtype)
+        x = x + gate * xout
+        if cache is not None:
+            new_cache["xattn"] = new_x_cache
+
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        ffn_out, aux = moe_mod.moe_apply(p["moe"], h2, cfg, qcfg, prepared)
+    else:
+        ffn_out = L.mlp_apply(p["mlp"], h2, qcfg, prepared)
+    x = x + rs * ffn_out
+    x = shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacked init
+# ---------------------------------------------------------------------------
+
+def _layer_plan(cfg: ModelConfig):
+    """Split layers into homogeneous stacks.
+
+    Returns list of ("dense"|"moe"|"cross_group", count) describing the
+    model in order.  VLM: groups of (plain*g, cross) repeated.
+    """
+    if cfg.cross_attn_layers:
+        n_cross = len(cfg.cross_attn_layers)
+        per = cfg.num_layers // n_cross - 1
+        return [("vlm_groups", n_cross, per)]
+    if cfg.moe is not None and cfg.moe.num_experts:
+        nd = min(cfg.moe.moe_layer_start, cfg.num_layers)
+        plan = []
+        if nd:
+            plan.append(("dense", nd))
+        plan.append(("moe", cfg.num_layers - nd))
+        return plan
+    return [("dense", cfg.num_layers)]
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    axes: Dict[str, Any] = {
+        "embed": P("vocab", "embed"),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], cfg.vocab_size, cfg.d_model,
+                                         dtype=dtype)
+        axes["lm_head"] = P("vocab", "embed")
+
+    plan = _layer_plan(cfg)
+    stacks = {}
+    stack_axes = {}
+    for i, entry in enumerate(plan):
+        kk = jax.random.fold_in(ks[2], i)
+        if entry[0] == "vlm_groups":
+            _, n_groups, per = entry
+            def plain_init(k):
+                return _block_params(k, cfg, "dense", dtype)
+            def cross_init(k):
+                return _block_params(k, cfg, "cross", dtype)
+            pkeys = jax.random.split(jax.random.fold_in(kk, 0),
+                                     n_groups * per)
+            pkeys = pkeys.reshape(n_groups, per, *pkeys.shape[1:])
+            plain = jax.vmap(jax.vmap(lambda k: plain_init(k)[0]))(pkeys)
+            ckeys = jax.random.split(jax.random.fold_in(kk, 1), n_groups)
+            cross = jax.vmap(lambda k: cross_init(k)[0])(ckeys)
+            _, plain_axes = plain_init(jax.random.PRNGKey(0))
+            _, cross_axes = cross_init(jax.random.PRNGKey(0))
+            stacks["vlm"] = {"plain": plain, "cross": cross}
+            stack_axes["vlm"] = {
+                "plain": _push_axes(_push_axes(plain_axes)),
+                "cross": _push_axes(cross_axes)}
+            # vision projector for stub patch embeddings
+            params["vis_proj"] = L.dense_init(
+                ks[3], cfg.d_model, cfg.vision_dim or cfg.d_model,
+                dtype=dtype)
+            axes["vis_proj"] = P("embed", None)
+        else:
+            kind, n = entry
+            keys = jax.random.split(kk, n)
+            stacked = jax.vmap(lambda k: _block_params(k, cfg, kind,
+                                                       dtype)[0])(keys)
+            _, one_axes = _block_params(jax.random.PRNGKey(0), cfg, kind,
+                                        dtype)
+            stacks[f"{kind}_{i}"] = stacked
+            stack_axes[f"{kind}_{i}"] = _push_axes(one_axes)
+    params["stacks"] = stacks
+    axes["stacks"] = stack_axes
+    return params, axes
+
+
+def _push_axes(tree):
+    """Prefix every leaf PartitionSpec with the (unsharded) layer axis."""
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / no-cache prefill)
+# ---------------------------------------------------------------------------
+
+def lm_head_weight(cfg: ModelConfig, params: Dict) -> jnp.ndarray:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict[str, jnp.ndarray],
+            qcfg: QuantConfig, prepared: bool = False,
+            return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {"tokens": (B, S) int32, optional "patches": (B, P, Dv)}.
+
+    Returns (logits (B, S, V), aux_loss) — or (hidden (B, S, D), aux) with
+    ``return_hidden`` (the train loss computes chunked CE to avoid ever
+    materializing (B, S, V) logits — 500TB for deepseek-v3 @ train_4k).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    enc = None
+    if cfg.cross_attn_layers and "patches" in batch:
+        enc = (batch["patches"].astype(x.dtype)
+               @ params["vis_proj"].T.astype(x.dtype))
+
+    for name, stacked in params["stacks"].items():
+        if name == "vlm":
+            x, aux_total = _vlm_stack_apply(
+                stacked, x, cfg, qcfg, prepared, positions, enc, aux_total)
+            continue
+        kind = name.split("_")[0]
+
+        def body(carry, lp):
+            xx, aux = carry
+            xx, _, a = _block_apply(lp, xx, cfg, qcfg, prepared, positions,
+                                    kind=kind, kv_bits=qcfg.kv_bits,
+                                    kv_group=qcfg.kv_group_size)
+            return (xx, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(L.maybe_remat(body),
+                                         (x, aux_total), stacked)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    logits = (x @ lm_head_weight(cfg, params).T.astype(x.dtype)) \
+        * cfg.logit_scale
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def _vlm_stack_apply(stacked, x, cfg, qcfg, prepared, positions, enc,
+                     aux_total, caches=None):
+    """Grouped scan: per group, scan `per` plain blocks then one cross."""
+    new_caches = {"plain": [], "cross": []} if caches is not None else None
+    n_groups = jax.tree.leaves(stacked["cross"])[0].shape[0]
+
+    def group_body(carry, inputs):
+        xx, aux = carry
+        plain_g, cross_g = inputs
+
+        def plain_body(c, lp):
+            x1, a1 = c
+            x1, _, a = _block_apply(lp, x1, cfg, qcfg, prepared, positions,
+                                    kind="dense")
+            return (x1, a1 + a), None
+
+        (xx, aux), _ = jax.lax.scan(plain_body, (xx, aux), plain_g)
+        xx, _, a = _block_apply(cross_g, xx, cfg, qcfg, prepared, positions,
+                                enc=enc, kind="cross")
+        return (xx, aux + a), None
+
+    (x, aux_total), _ = jax.lax.scan(
+        group_body, (x, aux_total), (stacked["plain"], stacked["cross"]))
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, kv_storage: str = "fake"
+               ) -> Tuple[Dict, Dict]:
+    """Stacked per-layer caches matching the scan structure.
+
+    kv_storage="int8": codes live as int8 at rest with per-(token, head)
+    scales — half the HBM footprint/traffic of the bf16 fake-quant cache.
+    """
+    hd = cfg.resolved_head_dim
+    ring = cfg.sliding_window > 0 and max_len > cfg.sliding_window
+    clen = min(max_len, cfg.sliding_window) if ring else max_len
+    int8 = kv_storage == "int8" and not ring and cfg.mla is None
+
+    def attn_cache(n):
+        if cfg.mla is not None:
+            m = cfg.mla
+            width = m.kv_lora_rank + m.qk_rope_head_dim
+            c = {"latent": jnp.zeros((n, batch, max_len, width), dtype),
+                 "pos": jnp.zeros((n,), jnp.int32)}
+            a = {"latent": P(None, "batch", "cache_seq", None),
+                 "pos": P(None)}
+        else:
+            kv_dtype = jnp.int8 if int8 else dtype
+            c = {"k": jnp.zeros((n, batch, clen, cfg.num_kv_heads, hd),
+                                kv_dtype),
+                 "v": jnp.zeros((n, batch, clen, cfg.num_kv_heads, hd),
+                                kv_dtype),
+                 "pos": jnp.zeros((n,), jnp.int32)}
+            a = {"k": P(None, "batch", "cache_seq", None, None),
+                 "v": P(None, "batch", "cache_seq", None, None),
+                 "pos": P(None)}
+            if int8:
+                c["k_scale"] = jnp.zeros(
+                    (n, batch, clen, cfg.num_kv_heads, 1), jnp.float32)
+                c["v_scale"] = jnp.zeros(
+                    (n, batch, clen, cfg.num_kv_heads, 1), jnp.float32)
+                a["k_scale"] = P(None, "batch", "cache_seq", None, None)
+                a["v_scale"] = P(None, "batch", "cache_seq", None, None)
+            if ring:
+                c["kpos"] = -jnp.ones((n, clen), jnp.int32)
+                a["kpos"] = P(None, None)
+        return {"attn": c}, {"attn": a}
+
+    caches, axes = {}, {}
+    for name, entry in _plan_with_counts(cfg):
+        if name == "vlm":
+            n_groups, per = entry
+            pc, pa = attn_cache(n_groups * per)
+            cc, ca = attn_cache(n_groups)
+            # cross-attn kv cache (computed at prefill from patches)
+            senc = cfg.vision_tokens or 1
+            cc["xattn"] = {
+                "k": jnp.zeros((n_groups, batch, senc, cfg.num_kv_heads,
+                                hd), dtype),
+                "v": jnp.zeros((n_groups, batch, senc, cfg.num_kv_heads,
+                                hd), dtype)}
+            ca["xattn"] = {
+                "k": P(None, "batch", None, None, None),
+                "v": P(None, "batch", None, None, None)}
+            caches["vlm"] = {"plain": _regroup(pc, n_groups, per),
+                             "cross": cc}
+            axes["vlm"] = {"plain": jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), pa), "cross": ca}
+        else:
+            n = entry
+            c, a = attn_cache(n)
+            caches[name] = c
+            axes[name] = a
+    return caches, axes
+
+
+def _regroup(cache, n_groups, per):
+    return jax.tree.map(
+        lambda x: x.reshape(n_groups, per, *x.shape[1:]), cache)
+
+
+def _plan_with_counts(cfg: ModelConfig):
+    out = []
+    for i, entry in enumerate(_layer_plan(cfg)):
+        if entry[0] == "vlm_groups":
+            out.append(("vlm", (entry[1], entry[2])))
+        else:
+            out.append((f"{entry[0]}_{i}", entry[1]))
+    return out
+
+
+def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                    caches: Dict, qcfg: QuantConfig, prepared: bool = False,
+                    patches: Optional[jnp.ndarray] = None,
+                    last_only: bool = True,
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill (S>1) or decode (S=1) with KV caches.
+
+    Positions derive from cache["pos"] (same for every layer).
+    ``last_only``: serving only needs logits at the final position —
+    avoids a (B, S, V) materialization at prefill_32k.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    x = shard(x, "batch", "seq", None)
+    pos0 = _first_pos(caches)
+    positions = jnp.arange(s) + pos0
+    aux = jnp.zeros((), jnp.float32)
+
+    enc = None
+    if cfg.cross_attn_layers and patches is not None:
+        enc = (patches.astype(x.dtype)
+               @ params["vis_proj"].T.astype(x.dtype))
+
+    new_caches = {}
+    for name, stacked in params["stacks"].items():
+        if name == "vlm":
+            x, new_caches["vlm"], aux = _vlm_step_cached(
+                stacked, caches["vlm"], x, cfg, qcfg, prepared, positions,
+                enc, aux)
+            continue
+        kind = name.split("_")[0]
+
+        def body(carry, inputs):
+            xx, a1 = carry
+            lp, lc = inputs
+            xx, nc, a = _block_apply(lp, xx, cfg, qcfg, prepared, positions,
+                                     cache=lc, kind=kind,
+                                     kv_bits=qcfg.kv_bits,
+                                     kv_group=qcfg.kv_group_size)
+            return (xx, a1 + a), nc
+
+        (x, aux), nc = jax.lax.scan(body, (x, aux),
+                                    (stacked, caches[name]))
+        new_caches[name] = nc
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only and x.shape[1] > 1:
+        x = x[:, -1:]
+    head = lm_head_weight(cfg, params)
+    logits = (x @ head.T.astype(x.dtype)) * cfg.logit_scale
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, new_caches
+
+
+def _first_pos(caches) -> jnp.ndarray:
+    for leaf_path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        if any(getattr(k, "key", None) == "pos" for k in leaf_path):
+            return leaf.reshape(-1)[0]
+    raise ValueError("no pos in cache")
+
+
+def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
+                     enc, aux):
+    def group_body(carry, inputs):
+        xx, a0 = carry
+        (plain_g, cross_g), (pc, cc) = inputs
+
+        def plain_body(c, inp):
+            x1, a1 = c
+            lp, lc = inp
+            x1, nc, a = _block_apply(lp, x1, cfg, qcfg, prepared, positions,
+                                     cache=lc, kind="dense",
+                                     kv_bits=qcfg.kv_bits,
+                                     kv_group=qcfg.kv_group_size)
+            return (x1, a1 + a), nc
+
+        (xx, a0), npc = jax.lax.scan(plain_body, (xx, a0), (plain_g, pc))
+        xx, ncc, a = _block_apply(cross_g, xx, cfg, qcfg, prepared,
+                                  positions, cache=cc, enc=enc, kind="cross",
+                                  kv_bits=qcfg.kv_bits,
+                                  kv_group=qcfg.kv_group_size)
+        return (xx, a0 + a), (npc, ncc)
+
+    (x, aux), (npc, ncc) = jax.lax.scan(
+        group_body, (x, aux),
+        ((stacked["plain"], stacked["cross"]),
+         (caches["plain"], caches["cross"])))
+    return x, {"plain": npc, "cross": ncc}, aux

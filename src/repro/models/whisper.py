@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, d_model) directly to the encoder
+(sinusoidal positions).  Decoder = causal self-attn (learned positions) +
+cross-attn to the encoder output + GELU MLP.  All projections quantize
+through ``qlinear`` (RRS-capable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _gelu_mlp_params(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"w1": L.dense_init(k1, cfg.d_ff, cfg.d_model, dtype=dtype),
+         "b1": jnp.zeros((cfg.d_ff,), dtype),
+         "w2": L.dense_init(k2, cfg.d_model, cfg.d_ff,
+                            scale=1.0 / math.sqrt(2 * cfg.num_layers),
+                            dtype=dtype),
+         "b2": jnp.zeros((cfg.d_model,), dtype)}
+    a = {"w1": P("ffn", "embed"), "b1": P("ffn"),
+         "w2": P("embed", "ffn"), "b2": P(None)}
+    return p, a
+
+
+def _gelu_mlp(p, x, qcfg, prepared):
+    h = L.qlinear(x, p["w1"], qcfg, prepared) + p["b1"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "ffn")
+    return L.qlinear(h, p["w2"], qcfg, prepared) + p["b2"].astype(x.dtype)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    ap, aa = L.gqa_params(k1, cfg, dtype)
+    mp, ma = _gelu_mlp_params(k2, cfg, dtype)
+    p = {"ln1_g": jnp.ones((cfg.d_model,), dtype),
+         "ln1_b": jnp.zeros((cfg.d_model,), dtype),
+         "attn": ap,
+         "ln2_g": jnp.ones((cfg.d_model,), dtype),
+         "ln2_b": jnp.zeros((cfg.d_model,), dtype),
+         "mlp": mp}
+    a = {"ln1_g": P(None), "ln1_b": P(None), "attn": aa,
+         "ln2_g": P(None), "ln2_b": P(None), "mlp": ma}
+    return p, a
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, a = _enc_block_init(k1, cfg, dtype)
+    xp, xa = L.xattn_params(k2, cfg, dtype=dtype)
+    p.update({"lnx_g": jnp.ones((cfg.d_model,), dtype),
+              "lnx_b": jnp.zeros((cfg.d_model,), dtype),
+              "xattn": xp})
+    a.update({"lnx_g": P(None), "lnx_b": P(None), "xattn": xa})
+    return p, a
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": (jax.random.normal(
+            ks[1], (cfg.max_seq_len, cfg.d_model)) * 0.01).astype(dtype),
+        "enc_final_g": jnp.ones((cfg.d_model,), dtype),
+        "enc_final_b": jnp.zeros((cfg.d_model,), dtype),
+        "dec_final_g": jnp.ones((cfg.d_model,), dtype),
+        "dec_final_b": jnp.zeros((cfg.d_model,), dtype),
+    }
+    axes = {
+        "embed": P("vocab", "embed"), "pos_embed": P(None, None),
+        "enc_final_g": P(None), "enc_final_b": P(None),
+        "dec_final_g": P(None), "dec_final_b": P(None),
+    }
+    push = lambda t: jax.tree.map(lambda s: P(*((None,) + tuple(s))), t)
+    ekeys = jax.random.split(ks[2], cfg.encoder_layers)
+    params["encoder"] = jax.vmap(
+        lambda k: _enc_block_init(k, cfg, _dtype(cfg))[0])(ekeys)
+    _, ea = _enc_block_init(jax.random.PRNGKey(0), cfg, dtype)
+    axes["encoder"] = push(ea)
+    dkeys = jax.random.split(ks[3], cfg.num_layers)
+    params["decoder"] = jax.vmap(
+        lambda k: _dec_block_init(k, cfg, _dtype(cfg))[0])(dkeys)
+    _, da = _dec_block_init(jax.random.PRNGKey(0), cfg, dtype)
+    axes["decoder"] = push(da)
+    return params, axes
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jnp.ndarray,
+           qcfg: QuantConfig, prepared: bool = False) -> jnp.ndarray:
+    """frames: (B, S_enc, d_model) stub frontend output."""
+    x = frames.astype(_dtype(cfg))
+    x = x + L.sinusoidal_positions(x.shape[1],
+                                   cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", None)
+
+    def body(xx, lp):
+        h = L.layernorm(xx, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        out, _ = L.gqa_apply(lp["attn"], h, cfg, qcfg, prepared,
+                             positions=jnp.arange(xx.shape[1]),
+                             use_rope=False, causal=False)
+        xx = xx + out
+        h2 = L.layernorm(xx, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        return xx + _gelu_mlp(lp["mlp"], h2, qcfg, prepared), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.layernorm(x, params["enc_final_g"], params["enc_final_b"],
+                       cfg.norm_eps)
+
+
+def _decoder(cfg, params, tokens, enc, qcfg, prepared, caches=None,
+             pos0=None, return_hidden=False, last_only=False):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    start = 0 if pos0 is None else pos0
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], start, s, axis=0) if pos0 is not None \
+        else params["pos_embed"][:s]
+    x = x + pos_emb[None].astype(x.dtype)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.arange(s) + (0 if pos0 is None else pos0)
+
+    def body(carry, inputs):
+        xx = carry
+        if caches is None:
+            lp = inputs
+            sc, xc = None, None
+        else:
+            lp, (sc, xc) = inputs
+        h = L.layernorm(xx, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        out, nsc = L.gqa_apply(lp["attn"], h, cfg, qcfg, prepared,
+                               positions, cache=sc,
+                               kv_quant_bits=qcfg.kv_bits,
+                               kv_group=qcfg.kv_group_size,
+                               use_rope=False)
+        xx = xx + out
+        hx = L.layernorm(xx, lp["lnx_g"], lp["lnx_b"], cfg.norm_eps)
+        xout, nxc = L.xattn_apply(lp["xattn"], hx, enc, cfg, qcfg, prepared,
+                                  cache=xc)
+        xx = xx + xout
+        h2 = L.layernorm(xx, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        xx = xx + _gelu_mlp(lp["mlp"], h2, qcfg, prepared)
+        if caches is None:
+            return xx, None
+        return xx, (nsc, nxc)
+
+    xs = params["decoder"] if caches is None else \
+        (params["decoder"], (caches["self"], caches["cross"]))
+    x, new_caches = jax.lax.scan(L.maybe_remat(body), x, xs)
+    x = L.layernorm(x, params["dec_final_g"], params["dec_final_b"],
+                    cfg.norm_eps)
+    new_caches = None if caches is None else \
+        {"self": new_caches[0], "cross": new_caches[1]}
+    if return_hidden:
+        return x, new_caches
+    if last_only and x.shape[1] > 1:
+        x = x[:, -1:]
+    logits = x @ params["embed"].T.astype(x.dtype)   # tied head (whisper)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, new_caches
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, qcfg: QuantConfig,
+            prepared: bool = False, return_hidden: bool = False):
+    enc = encode(cfg, params, batch["frames"], qcfg, prepared)
+    out, _ = _decoder(cfg, params, batch["tokens"], enc, qcfg, prepared,
+                      return_hidden=return_hidden)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Tuple[Dict, Dict]:
+    hd = cfg.resolved_head_dim
+    n = cfg.num_layers
+    senc = cfg.encoder_seq_len or max_len
+    caches = {
+        "self": {
+            "k": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.zeros((n,), jnp.int32)},
+        "cross": {
+            "k": jnp.zeros((n, batch, senc, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n, batch, senc, cfg.num_kv_heads, hd), dtype)},
+    }
+    axes = {
+        "self": {"k": P(None, "batch", "cache_seq", None, None),
+                 "v": P(None, "batch", "cache_seq", None, None),
+                 "pos": P(None)},
+        "cross": {"k": P(None, "batch", "cache_seq", None, None),
+                  "v": P(None, "batch", "cache_seq", None, None)},
+    }
+    return caches, axes
+
+
+def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                    caches: Dict, qcfg: QuantConfig, prepared: bool = False,
+                    frames: Optional[jnp.ndarray] = None, patches=None,
+                    last_only: bool = True):
+    """Prefill (frames given → run encoder, fill cross cache) or decode."""
+    enc = None
+    if frames is not None:
+        enc = encode(cfg, params, frames, qcfg, prepared)
+    pos0 = caches["self"]["pos"].reshape(-1)[0]
+    return _decoder(cfg, params, tokens, enc, qcfg, prepared,
+                    caches=caches, pos0=pos0, last_only=last_only)

@@ -1,0 +1,2 @@
+"""Optimizers, LR schedules, gradient compression."""
+from repro.optim import grad_compress, optimizers

@@ -1,0 +1,189 @@
+"""Optimizers + LR schedules (pure pytree transforms, no optax).
+
+* AdamW   — the default (β=(0.9, 0.95), decoupled weight decay).
+* Adafactor — factored second moments; the only way the 671B config's
+  optimizer state fits the assignment meshes (DESIGN.md §6).
+* Schedules: cosine, linear, constant, and **WSD** (warmup-stable-decay,
+  MiniCPM §4) — selected per-arch in configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def make_schedule(tc: TrainConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    peak, warm, total = tc.learning_rate, tc.warmup_steps, tc.total_steps
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_frac = jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+        if tc.schedule == "const":
+            decay = 1.0
+        elif tc.schedule == "linear":
+            decay = jnp.maximum(
+                0.0, 1.0 - (step - warm) / jnp.maximum(total - warm, 1))
+        elif tc.schedule == "cosine":
+            t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        elif tc.schedule == "wsd":
+            # warmup -> stable plateau -> sqrt-style rapid decay tail
+            stable_end = warm + tc.wsd_stable_frac * (total - warm)
+            t = jnp.clip((step - stable_end)
+                         / jnp.maximum(total - stable_end, 1), 0, 1)
+            decay = jnp.where(step < stable_end, 1.0, 1.0 - jnp.sqrt(t))
+        else:
+            raise ValueError(f"unknown schedule {tc.schedule}")
+        return peak * warm_frac * decay
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(tc: TrainConfig, sched, grads, state: AdamWState, params):
+    step = state.step + 1
+    b1, b2 = tc.beta1, tc.beta2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = sched(step)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        du = mhat / (jnp.sqrt(vhat) + tc.eps)
+        du = du + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * du).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step, mu, nu), lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row stats (or full v for <2D tensors)
+    vc: Any   # col stats (or None sentinel zeros(0))
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros_like(p, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(vr_init, params),
+                          jax.tree.map(vc_init, params))
+
+
+def adafactor_update(tc: TrainConfig, sched, grads, state: AdafactorState,
+                     params):
+    step = state.step + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    lr = sched(step)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p):
+            new_vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            new_vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True),
+                                1e-30)
+            vhat = (new_vr[..., None] * new_vc[..., None, :]) / denom[
+                ..., None]
+            update = g * jax.lax.rsqrt(vhat + 1e-30)
+        else:
+            new_vr = decay * vr + (1 - decay) * g2
+            new_vc = vc
+            update = g * jax.lax.rsqrt(new_vr + 1e-30)
+        # update clipping (RMS <= 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        update = update + tc.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                new_vr, new_vc)
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_vr = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_vc = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdafactorState(step, new_vr, new_vc), lr
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+def init_optimizer(tc: TrainConfig, params):
+    if tc.optimizer == "adamw":
+        return adamw_init(params)
+    if tc.optimizer == "adafactor":
+        return adafactor_init(params)
+    raise ValueError(tc.optimizer)
+
+
+def apply_optimizer(tc: TrainConfig, grads, opt_state, params):
+    sched = make_schedule(tc)
+    if tc.optimizer == "adamw":
+        return adamw_update(tc, sched, grads, opt_state, params)
+    if tc.optimizer == "adafactor":
+        return adafactor_update(tc, sched, grads, opt_state, params)
+    raise ValueError(tc.optimizer)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm

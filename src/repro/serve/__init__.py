@@ -1,0 +1,3 @@
+"""Serving: offline weight preparation (RRS) + wave-batched engine."""
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.prepare import prepare_params

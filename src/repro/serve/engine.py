@@ -1,0 +1,142 @@
+"""Batched serving engine over the model's prefill/decode steps, with
+quantized weights (RRS) and quantized KV cache.
+
+Scheduling model: **wave batching**.  The KV caches in this codebase track
+one shared position per layer (scalar `pos`), so a wave admits up to
+``max_batch`` queued requests with EQUAL prompt length (the scheduler
+buckets the queue by length), prefills them together, then decodes the
+whole wave until every member finishes.  Finished rows idle (their outputs
+are discarded) until the wave drains — simple, correct, and the decode
+step it lowers is exactly the assignment's ``decode_*`` shapes.
+
+Continuous (slot-level) batching needs per-row positions in every cache
+write/mask; the layout supports it (batch-major caches), flagged as future
+work in DESIGN.md — it does not change the lowered decode graph.
+
+``serve_step`` (= one decode for the full batch) is the unit the dry-run
+lowers at the assignment's decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.data import tokenizer as tok
+from repro.models.model_factory import Model
+from repro.serve.prepare import prepare_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def text(self) -> str:
+        return tok.decode(self.out_tokens)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, qcfg: QuantConfig,
+                 max_batch: int = 4, max_len: int = 512,
+                 prepare: bool = True):
+        self.model = model
+        self.cfg = model.cfg
+        self.qcfg = qcfg
+        self.params = prepare_params(params, qcfg) if prepare else params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self._rid = 0
+        self._prepared = prepare
+        self._decode = jax.jit(
+            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepare))
+        self._prefill = jax.jit(
+            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepare))
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
+        ids = [tok.BOS] + [int(i) % self.cfg.vocab_size for i in ids]
+        self._rid += 1
+        self.queue.append(Request(self._rid, ids, max_new_tokens,
+                                  temperature))
+        return self._rid
+
+    # -- wave scheduling --------------------------------------------------
+
+    def _next_wave(self) -> List[Request]:
+        """Largest same-prompt-length group, up to max_batch."""
+        if not self.queue:
+            return []
+        by_len: Dict[int, List[Request]] = defaultdict(list)
+        for r in self.queue:
+            by_len[len(r.prompt)].append(r)
+        length = max(by_len, key=lambda l: len(by_len[l]))
+        wave = by_len[length][: self.max_batch]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        s = len(wave[0].prompt)
+        bsz = self.max_batch
+        cache, _ = self.model.init_cache(bsz, self.max_len)
+        tokens = np.zeros((bsz, s), np.int32)
+        for i, r in enumerate(wave):
+            tokens[i] = r.prompt
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens),
+                                      cache)
+        live = set(range(len(wave)))
+        for i in live:
+            r = wave[i]
+            r.out_tokens.append(_sample(logits[i, -1], r.temperature,
+                                        r.rid))
+        budget = max(r.max_new_tokens for r in wave)
+        for step_i in range(budget - 1):
+            if not live:
+                break
+            nxt = np.zeros((bsz, 1), np.int32)
+            for i in list(live):
+                nxt[i, 0] = wave[i].out_tokens[-1]
+            logits, cache = self._decode(self.params, jnp.asarray(nxt),
+                                         cache)
+            for i in list(live):
+                r = wave[i]
+                t = _sample(logits[i, -1], r.temperature,
+                            r.rid * 7919 + len(r.out_tokens))
+                r.out_tokens.append(int(t))
+                if int(t) == tok.EOS or \
+                        len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    live.discard(i)
+        for r in wave:
+            r.done = True
+        return wave
+
+    def run(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.queue:
+            wave = self._next_wave()
+            finished.extend(self._run_wave(wave))
+        return finished
+
+
+def _sample(logits: jnp.ndarray, temperature: float, seed: int) -> int:
+    if temperature <= 0.0:
+        return int(jnp.argmax(logits))
+    g = jax.random.gumbel(jax.random.PRNGKey(seed), logits.shape)
+    return int(jnp.argmax(logits / temperature + g))
+
+
+__all__ = ["ServingEngine", "Request", "prepare_params"]

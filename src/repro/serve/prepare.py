@@ -1,0 +1,61 @@
+"""Offline weight preparation for quantized serving (paper §3.3).
+
+``prepare_params`` walks the model pytree and, for every quantizable
+projection weight, applies the OFFLINE half of the configured method:
+
+    rotate K axis (quarot/rrs)  →  [merge SmoothQuant s]  →  weight quant
+
+The result has identical shapes/dtypes (fake-quant), so the same
+``serve_step`` lowering works for prepared and raw params — and the
+dry-run's input_specs don't change.  The ONLINE half (activation rotation,
+runtime smoothing, activation quant) happens inside ``qlinear`` at
+``prepared=True``.
+
+Weight classification is by leaf name: projection weights are 2-D (or
+stacked (L, M, K) / (L, E, M, K)) and rotate along the LAST axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Set
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import hadamard, quant
+
+# leaf names (last path component) that are quantizable projections
+QUANT_WEIGHTS: Set[str] = {
+    "wq", "wk", "wv", "wo",                      # attention
+    "w_gate", "w_up", "w_down",                  # swiglu mlp + experts
+    "shared_gate", "shared_up", "shared_down",   # shared experts
+    "w_dq", "w_uq", "w_dkv", "w_uk", "w_uv",     # MLA
+    "w_z", "w_x", "out_proj",                    # mamba2 projections
+    "w1", "w2",                                  # gelu mlp (whisper)
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def prepare_params(params, qcfg: QuantConfig):
+    """Returns params with projection weights rotated+quantized offline."""
+    if qcfg.method == "none":
+        return params
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name not in QUANT_WEIGHTS or leaf.ndim < 2:
+            return leaf
+        w = leaf
+        if qcfg.uses_rotation:
+            block = hadamard.pick_rotate_block(w.shape[-1],
+                                               qcfg.rotate_block)
+            w = hadamard.rotate_weight_in(w, block=block)
+        if qcfg.quantize_weights:
+            w = quant.fake_quant_per_channel(w, qcfg.w_bits, axis=-1)
+        return w.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,2 @@
+"""Training loop substrate: train step, trainer with fault tolerance."""
+from repro.train.train_step import TrainState, init_train_state, make_train_step

@@ -1,0 +1,144 @@
+"""Training step: loss, microbatched grad accumulation, remat, optimizer.
+
+The step is a single pjit-able function of (params, opt_state, batch);
+sharding comes from in_shardings/constraints, so the same function runs on
+1 CPU device and on the 512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig, TrainConfig
+from repro.models.model_factory import Model
+from repro.optim import grad_compress, optimizers
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    ef_residual: Any          # error-feedback buffers (or None)
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, tc: TrainConfig, key) -> Tuple[TrainState,
+                                                                  Dict]:
+    params, axes = model.init(key)
+    opt_state = optimizers.init_optimizer(tc, params)
+    ef = grad_compress.ef_init(params) if tc.grad_compression == "int8_ef" \
+        else None
+    return TrainState(params, opt_state, ef,
+                      jnp.zeros((), jnp.int32)), axes
+
+
+def _head_weight(model: Model, params):
+    cfg = model.cfg
+    if cfg.tie_embeddings or "lm_head" not in params:
+        return params["embed"]
+    return params["lm_head"]
+
+
+def chunked_ce(hidden: jnp.ndarray, head: jnp.ndarray,
+               labels: jnp.ndarray, logit_scale: float,
+               chunk: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross entropy without ever materializing (B, S, V) logits: scan
+    over sequence chunks; each chunk's logits are checkpointed away
+    (recomputed in backward).  Returns (sum_nll, count)."""
+    b, s, d = hidden.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    hc = jnp.swapaxes(hidden.reshape(b, nc, chunk, d), 0, 1)
+    lc = jnp.swapaxes(labels.reshape(b, nc, chunk), 0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        h1, l1 = inp
+        logits = (h1.astype(jnp.float32)
+                  @ head.T.astype(jnp.float32)) * logit_scale
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, l1[..., None], axis=-1)[..., 0]
+        mask = (l1 != 0).astype(jnp.float32)      # PAD = 0
+        return (tot + jnp.sum(nll * mask), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hc, lc))
+    return tot, cnt
+
+
+def loss_fn(model: Model, params, batch: Dict, qcfg: QuantConfig
+            ) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]                      # (B, S+1)
+    inputs = dict(batch)
+    inputs["tokens"] = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    hidden, aux = model.forward(params, inputs, qcfg, return_hidden=True)
+    tot, cnt = chunked_ce(hidden, _head_weight(model, params), labels,
+                          model.cfg.logit_scale)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def make_train_step(model: Model, tc: TrainConfig,
+                    qcfg: QuantConfig = QuantConfig(),
+                    donate: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Rematerialization is PER-BLOCK (jax.checkpoint on the layer-scan
+    bodies, set here at trace time): backward peak memory is one layer's
+    residuals, not the stack's."""
+    from repro.models import layers as mlayers
+    mlayers.set_block_remat(tc.remat if tc.remat in ("dots", "full")
+                            else "none")
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, qcfg), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: Dict):
+        params = state.params
+        if tc.microbatches > 1:
+            # split batch rows into microbatches, accumulate grads (the
+            # psum over data happens once, at the end — overlap-friendly)
+            def mb(carry, mbatch):
+                acc, metrics_acc = carry
+                (_, metrics), g = grads_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                metrics_acc = jax.tree.map(lambda a, b: a + b, metrics_acc,
+                                           metrics)
+                return (acc, metrics_acc), None
+
+            n = tc.microbatches
+            split = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]),
+                batch)
+            # derive the accumulator FROM params so XLA propagates the
+            # param sharding onto it (a fresh zeros() may be laid out
+            # replicated — observed +30GB/dev on MoE trains)
+            zero_g = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), params)
+            zero_m = {"loss": 0.0, "aux": 0.0, "ppl": 0.0}
+            (grads, metrics), _ = jax.lax.scan(mb, (zero_g, zero_m), split)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m / n, metrics)
+        else:
+            (_, metrics), grads = grads_of(params, batch)
+
+        ef = state.ef_residual
+        if tc.grad_compression == "int8_ef":
+            grads, ef = grad_compress.ef_compress_tree(grads, ef)
+        grads, gnorm = optimizers.clip_by_global_norm(grads, tc.grad_clip)
+        new_params, new_opt, lr = optimizers.apply_optimizer(
+            tc, grads, state.opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt, ef, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,123 @@
+"""Training loop with fault tolerance and straggler mitigation hooks.
+
+Responsibilities:
+  * auto-resume from the newest valid checkpoint (data position included —
+    the pipeline is pure-in-step, so restoring ``step`` restores the data
+    stream exactly);
+  * periodic async checkpoints (training continues during writes);
+  * NaN/divergence guard: a non-finite loss rolls back to the last
+    checkpoint and re-enters the loop (skipping the poison step's data);
+  * straggler watchdog: per-step deadline (p50 × factor); on breach the
+    step is flagged — on real multi-host deployments the launcher reacts
+    (re-slice the job / evict the pod); here the hook records + continues,
+    and the behaviour is unit-tested via an injected slow step.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs.base import QuantConfig, TrainConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model_factory import Model
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int = 0
+    resumed_from: Optional[int] = None
+    rollbacks: int = 0
+    straggler_flags: List[int] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+    final_loss: float = float("nan")
+
+
+class Trainer:
+    def __init__(self, model: Model, tc: TrainConfig, dc: DataConfig,
+                 ckpt_dir: str, qcfg: QuantConfig = QuantConfig(),
+                 ckpt_every: int = 50, straggler_factor: float = 5.0,
+                 step_fn: Optional[Callable] = None):
+        self.model, self.tc, self.dc = model, tc, dc
+        self.pipeline = TokenPipeline(dc)
+        self.manager = CheckpointManager(ckpt_dir)
+        self.qcfg = qcfg
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self._step_fn = step_fn or jax.jit(make_train_step(model, tc, qcfg))
+
+    def _fresh_state(self) -> TrainState:
+        state, _ = init_train_state(self.model, self.tc,
+                                    jax.random.PRNGKey(self.tc.seed))
+        return state
+
+    def run(self, num_steps: Optional[int] = None,
+            report: Optional[TrainerReport] = None) -> TrainerReport:
+        report = report or TrainerReport()
+        state = self._fresh_state()
+        restored = self.manager.latest_valid(state)
+        if restored is not None:
+            state, meta = restored
+            report.resumed_from = int(meta["step"])
+        total = num_steps if num_steps is not None else self.tc.total_steps
+        durations: List[float] = []
+
+        while int(state.step) < total:
+            step = int(state.step)
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.pipeline.get_batch(step).items()}
+            t0 = time.monotonic()
+            state, metrics = self._step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            durations.append(dt)
+
+            # straggler watchdog (skip the compile step)
+            if len(durations) > 3:
+                p50 = float(np.median(durations[1:]))
+                if dt > self.straggler_factor * max(p50, 1e-4):
+                    report.straggler_flags.append(step)
+
+            if not math.isfinite(loss):
+                # divergence/corruption: roll back and skip this batch
+                report.rollbacks += 1
+                restored = self.manager.latest_valid(self._fresh_state())
+                state = restored[0] if restored else self._fresh_state()
+                # jump past the poison step's data
+                state = state._replace(step=jnp.asarray(step + 1, jnp.int32))
+                continue
+
+            report.losses.append(loss)
+            report.steps_run += 1
+            if (step + 1) % self.ckpt_every == 0 or step + 1 == total:
+                self.manager.save(
+                    step + 1, state,
+                    extra={"data": self.pipeline.state_dict(step + 1)})
+        self.manager.wait()
+        report.final_loss = report.losses[-1] if report.losses else float(
+            "nan")
+        return report
+
+    def evaluate(self, n_batches: int = 8) -> float:
+        """Held-out mean loss (for ppl benchmarks)."""
+        from repro.train.train_step import loss_fn
+        state = self._fresh_state()
+        restored = self.manager.latest_valid(state)
+        if restored is not None:
+            state = restored[0]
+        losses = []
+        fn = jax.jit(lambda p, b: loss_fn(self.model, p, b, self.qcfg)[1][
+            "loss"])
+        for batch in self.pipeline.eval_batches(n_batches):
+            losses.append(float(fn(state.params,
+                                   {k: jnp.asarray(v)
+                                    for k, v in batch.items()})))
+        return float(np.mean(losses))

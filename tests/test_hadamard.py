@@ -1,0 +1,77 @@
+"""Unit tests: Hadamard rotations (repro.core.hadamard)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hadamard as H
+
+ASSIGNED_DIMS = [576, 1024, 1408, 1536, 2048, 2304, 2560, 3584, 4096, 5760,
+                 6144, 6912, 7168, 14336, 24576]
+
+
+@pytest.mark.parametrize("k", [4, 12, 20, 28, 36, 44, 108, 180])
+def test_base_hadamard_orthogonal(k):
+    h = H.base_hadamard(k)
+    assert np.allclose(h @ h.T, k * np.eye(k))
+
+
+@pytest.mark.parametrize("k", [8, 64, 256, 1024])
+def test_fwht_matches_matrix_and_involutes(k):
+    x = np.random.default_rng(0).standard_normal((4, k)).astype(np.float32)
+    hm = H.hadamard_matrix(k)
+    assert np.allclose(H.fwht(jnp.asarray(x)), x @ hm, atol=1e-3)
+    assert np.allclose(H.fwht(H.fwht(jnp.asarray(x))), x, atol=1e-3)
+
+
+@pytest.mark.parametrize("k", ASSIGNED_DIMS)
+def test_all_assigned_dims_have_full_rotation(k):
+    assert H.supported_full_size(k), f"no full-K Hadamard for {k}"
+
+
+@pytest.mark.parametrize("k", [1408, 2304, 6912])
+def test_rotation_orthogonal_nonpow2(k):
+    x = np.random.default_rng(1).standard_normal((3, k)).astype(np.float32)
+    xr = np.asarray(H.rotate(jnp.asarray(x)))
+    assert np.allclose(np.linalg.norm(xr, axis=-1),
+                       np.linalg.norm(x, axis=-1), rtol=1e-3)
+
+
+def test_block_diag_rotation_orthogonal_and_local():
+    x = np.random.default_rng(2).standard_normal((2, 512)).astype(np.float32)
+    xr = np.asarray(H.rotate(jnp.asarray(x), block=128))
+    assert np.allclose(np.linalg.norm(xr, axis=-1),
+                       np.linalg.norm(x, axis=-1), rtol=1e-4)
+    # locality: zeroing one block leaves other blocks' rotation unchanged
+    x2 = x.copy()
+    x2[:, :128] = 0
+    xr2 = np.asarray(H.rotate(jnp.asarray(x2), block=128))
+    assert np.allclose(xr[:, 128:], xr2[:, 128:], atol=1e-5)
+
+
+def test_gemm_equivalence_under_rotation():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 256)), jnp.float32)
+    y0 = x @ w.T
+    for block in (0, 64):
+        xr = H.rotate(x, block=block)
+        wr = H.rotate_weight_in(w, block=block)
+        y1 = xr @ wr.T
+        assert np.allclose(y0, y1, atol=1e-2)
+
+
+def test_spike_spreading():
+    """Paper Eq. 4: a spike O at one channel spreads to ~|O|/sqrt(K)."""
+    k = 1024
+    t = np.zeros((1, k), np.float32)
+    t[0, 17] = 1000.0
+    tr = np.asarray(H.rotate(jnp.asarray(t)))
+    assert np.allclose(np.abs(tr), 1000.0 / np.sqrt(k), rtol=1e-3)
+
+
+def test_pick_rotate_block():
+    assert H.pick_rotate_block(4096) == 0          # full FWHT
+    assert H.pick_rotate_block(4096, 128) == 128   # capped block mode
+    k = 2 * 11 * 13  # 286: no Hadamard construction
+    b = H.pick_rotate_block(k)
+    assert b >= 1 and k % b == 0 and (b & (b - 1)) == 0

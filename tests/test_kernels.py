@@ -1,0 +1,132 @@
+"""Per-kernel shape/dtype sweeps, interpret=True vs pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hadamard
+from repro.kernels import ops, ref
+from repro.kernels.act_quant import act_smooth_quant
+from repro.kernels.fwht import fwht_rotate
+from repro.kernels.rrs_gemm import rrs_gemm
+
+
+
+@pytest.mark.parametrize("n,m,k,bk", [
+    (128, 128, 256, 128),
+    (128, 256, 512, 128),
+    (256, 128, 512, 64),
+    (128, 384, 1024, 128),
+])
+def test_rrs_gemm_matches_oracle_exact(n, m, k, bk):
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-7, 8, (n, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-7, 8, (m, k)), jnp.int8)
+    wp = jnp.asarray(ref.pack_int4_kblocks_ref(np.asarray(wq), bk))
+    sg = jnp.asarray(rng.uniform(0.5, 4.0, (k // bk,)), jnp.float32)
+    ax = jnp.asarray(rng.uniform(0.01, 0.2, (n, 1)), jnp.float32)
+    aw = jnp.asarray(rng.uniform(0.01, 0.2, (m,)), jnp.float32)
+    bm = 128 if m % 128 == 0 else 64
+    y = rrs_gemm(xq, wp, sg, ax, aw, bn=128, bm=bm, bk=bk)
+    yr = ref.rrs_gemm_ref(xq, wq, sg, ax, aw, bk=bk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_rrs_gemm_out_dtypes(out_dtype):
+    rng = np.random.default_rng(0)
+    n = m = k = bk = 128
+    xq = jnp.asarray(rng.integers(-7, 8, (n, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-7, 8, (m, k)), jnp.int8)
+    wp = jnp.asarray(ref.pack_int4_kblocks_ref(np.asarray(wq), bk))
+    sg = jnp.ones((1,), jnp.float32)
+    ax = jnp.ones((n, 1), jnp.float32)
+    aw = jnp.ones((m,), jnp.float32)
+    y = rrs_gemm(xq, wp, sg, ax, aw, out_dtype=out_dtype)
+    assert y.dtype == out_dtype
+
+
+@pytest.mark.parametrize("n,k,g", [(128, 512, 128), (256, 1024, 64),
+                                   (128, 4096, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_act_quant_matches_oracle(n, k, g, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, k)) * 3, dtype)
+    sg = jnp.asarray(rng.uniform(0.5, 5.0, (k // g,)), jnp.float32)
+    q, a = act_smooth_quant(x, sg, bn=128)
+    qr, ar = ref.act_smooth_quant_ref(x, sg)
+    dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    if dtype == jnp.float32:
+        assert (dq == 0).all()
+    else:
+        # bf16 inputs land exactly on .5 rounding boundaries; compiler
+        # reassociation flips ties by 1 ulp — allow |Δcode| ≤ 1, rare
+        assert dq.max() <= 1 and (dq != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ar), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,k", [(128, 256), (256, 1024), (128, 8192)])
+def test_fwht_kernel_matches_oracle(n, k):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    y = fwht_rotate(x, bn=128)
+    yr = ref.fwht_rotate_ref(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_kernel_orthogonal():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((128, 512)), jnp.float32)
+    y2 = fwht_rotate(fwht_rotate(x))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_pipeline_matches_oracle_and_float():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((256, 512)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((100, 512)), jnp.float32)
+    weights = ops.RRSWeights(w, group=128)
+    y = ops.rrs_linear_fused(x, weights)
+    yr = ops.rrs_linear_fused_ref(x, weights)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-3)
+    yf = x @ w.T
+    rel = float(jnp.linalg.norm(y - yf) / jnp.linalg.norm(yf))
+    assert rel < 0.25
+
+
+def test_fused_pipeline_suppresses_outliers():
+    rng = np.random.default_rng(0)
+    """End-to-end integer path: on the paper's outlier taxonomy
+    (channel-consistent direction + spikes), fused RRS beats plain A4W4
+    on normal tokens — the whole point of the kernel."""
+    from repro.core import outliers, quant
+    x = np.array(outliers.make_activation(
+        jax.random.PRNGKey(0), 128, 2048, direction_outliers=16,
+        direction_scale=100.0))
+    spike_rows = [5, 77]
+    for r in spike_rows:
+        x[r, rng.integers(0, 2048)] = 800.0
+    x = jnp.asarray(x)
+    normal = np.setdiff1d(np.arange(128), spike_rows)
+    w = jnp.asarray(rng.standard_normal((256, 2048)) * 0.05, jnp.float32)
+    y0 = x @ w.T
+    xq = quant.fake_quant_per_channel(x, 4)
+    wq = quant.fake_quant_per_channel(w, 4)
+    e_plain = float(jnp.linalg.norm((xq @ wq.T - y0)[normal]))
+    # static-reorder weights calibrated on a held-out slice
+    weights = ops.RRSWeights(w, group=128, calib_x=x[:32])
+    y = ops.rrs_linear_fused(x, weights)
+    e_rrs = float(jnp.linalg.norm((y - y0)[normal]))
+    assert e_rrs < e_plain
+
+
+def test_pack_int4_kblocks_matches_ref():
+    rng = np.random.default_rng(0)
+    wq = jnp.asarray(rng.integers(-8, 8, (32, 256)), jnp.int8)
+    a = np.asarray(ops.pack_int4_kblocks(wq, 128))
+    b = ref.pack_int4_kblocks_ref(np.asarray(wq), 128)
+    assert (a == b).all()

@@ -1,0 +1,105 @@
+"""Launch-layer tests: roofline parsing, analytic model sanity, mesh
+construction, CLI drivers (smoke)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch import roofline as rl
+from repro.launch.analytic import MeshInfo, analytic_costs
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_parse_collectives_sync_forms():
+    hlo = """
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = bf16[64,4096]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[32,128]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%sum
+  %a2a = s8[16,64,256]{2,1,0} all-to-all(%w), replica_groups=[4,4]<=[16]
+  %cp = bf16[8,8]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+"""
+    st = rl.parse_collectives(hlo, 16)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    assert st.operand_bytes["all-reduce"] == 1024 * 512 * 4
+    assert st.operand_bytes["all-gather"] == 64 * 4096 * 2 // 8
+    assert st.operand_bytes["reduce-scatter"] == 32 * 128 * 4 * 2
+    assert st.operand_bytes["all-to-all"] == 16 * 64 * 256
+    # ring all-reduce wire = 2·B·(g-1)/g
+    assert st.wire_bytes["all-reduce"] == int(2 * 1024 * 512 * 4 * 3 / 4)
+
+
+def test_parse_collectives_async_start_counted_once():
+    hlo = """
+  %ags = (bf16[8,16]{1,0}, bf16[64,16]{1,0}) all-gather-start(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %agd = bf16[64,16]{1,0} all-gather-done(%ags)
+"""
+    st = rl.parse_collectives(hlo, 16)
+    assert st.counts.get("all-gather", 0) == 1
+
+
+def test_roofline_terms_and_dominant():
+    r = rl.Roofline(arch="a", shape="s", mesh="m", chips=256,
+                    hlo_flops=197e12 * 0.5,       # 0.5 s compute
+                    hlo_bytes=819e9 * 0.1,        # 0.1 s memory
+                    collective_operand_bytes=0,
+                    collective_wire_bytes=50e9 * 0.2,  # 0.2 s collective
+                    collective_counts={}, model_flops=197e12 * 256 * 0.25)
+    assert abs(r.t_comp - 0.5) < 1e-9
+    assert r.dominant == "compute"
+    assert abs(r.mfu_bound - 0.5) < 1e-6
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-v3-671b",
+                                  "mamba2-370m", "whisper-base",
+                                  "zamba2-7b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_analytic_costs_positive_and_sane(arch, shape):
+    cfg = configs.get_config(arch)
+    sh = SHAPES_BY_NAME[shape]
+    mi = MeshInfo(chips=256, dp=16, tp=16, batch_sharded=True)
+    ac = analytic_costs(cfg, sh, mi, microbatches=4)
+    assert ac["analytic_flops_global"] > 0
+    assert ac["analytic_bytes_pd"] > 0
+    assert ac["analytic_coll_wire_pd"] >= 0
+    # fwd flops at least the matmul floor 2·N_active·tokens
+    tokens = sh.global_batch * (1 if sh.is_decode else sh.seq_len)
+    floor = 2.0 * cfg.active_param_count() * tokens * 0.2
+    assert ac["analytic_fwd_flops_global"] > floor
+
+
+def test_analytic_train_is_4x_fwd():
+    cfg = configs.get_config("smollm-135m")
+    sh = SHAPES_BY_NAME["train_4k"]
+    mi = MeshInfo(chips=256, dp=16, tp=16, batch_sharded=True)
+    ac = analytic_costs(cfg, sh, mi, remat_full=True)
+    assert abs(ac["analytic_flops_global"]
+               / ac["analytic_fwd_flops_global"] - 4.0) < 1e-6
+
+
+def test_train_cli_smoke():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "smollm-135m", "--smoke", "--steps", "4", "--batch", "2",
+         "--seq", "64", "--ckpt", "/tmp/rrs_cli_test"],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "eval loss" in out.stdout
+
+
+def test_serve_cli_smoke():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "smollm-135m", "--smoke", "--requests", "2", "--new-tokens", "4",
+         "--max-len", "64"],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

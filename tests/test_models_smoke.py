@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward
++ one train-style grad step + prefill/decode on CPU; asserts shapes and
+no NaNs (assignment requirement)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import build_model
+
+ARCHS = configs.list_archs()
+
+
+def _batch_for(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(7)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.vision_dim))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = configs.get_smoke_config(arch)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, aux = model.forward(params, batch, QuantConfig())
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert np.isfinite(float(aux))
+    # axes tree mirrors params tree
+    assert (jax.tree_util.tree_structure(params)
+            == jax.tree_util.tree_structure(axes))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_grad_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    labels = batch["tokens"]
+
+    def loss(p):
+        logits, aux = model.forward(p, batch, QuantConfig())
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        nll = -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+        return nll + 0.01 * aux
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = configs.get_smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, _ = model.forward(params, batch, QuantConfig())
+    cache, _ = model.init_cache(2, 64)
+    extra = {k: v for k, v in batch.items()
+             if k in ("patches", "frames")}
+    lp, cache = model.step(params, batch["tokens"], cache, QuantConfig(),
+                           **extra)
+    err = float(jnp.max(jnp.abs(lp[:, -1].astype(jnp.float32)
+                                - logits[:, -1].astype(jnp.float32))))
+    assert err < 0.1, f"prefill/forward mismatch {err}"
+    tok = jnp.argmax(lp[:, -1:], -1)
+    ld, cache = model.step(params, tok, cache, QuantConfig())
+    assert ld.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(ld)))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "moonshot-v1-16b-a3b",
+                                  "mamba2-370m"])
+def test_smoke_quantized_serving_methods(arch):
+    """RRS (and baselines) run through every family's projections."""
+    cfg = configs.get_smoke_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    ref_logits, _ = model.forward(params, batch, QuantConfig())
+    from repro.serve.prepare import prepare_params
+    for m in ("rtn", "rs", "quarot", "rrs"):
+        qcfg = QuantConfig(4, 4, 4, method=m, group_size=32,
+                           w_quantizer="rtn")
+        prep = prepare_params(params, qcfg)
+        logits, _ = model.forward(prep, batch, qcfg, prepared=True)
+        assert not bool(jnp.any(jnp.isnan(logits))), m
+        # quantized logits stay in the same ballpark
+        rel = float(jnp.linalg.norm((logits - ref_logits).astype(
+            jnp.float32)) / jnp.linalg.norm(
+                ref_logits.astype(jnp.float32)))
+        assert rel < 1.0, (m, rel)
+
+
+def test_full_configs_match_assignment_dims():
+    spec = {
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "mamba2-370m": (48, 1024, 1, 1, 0, 50280),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = configs.get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v), arch
+
+
+def test_moe_ssm_extras_match_assignment():
+    moon = configs.get_config("moonshot-v1-16b-a3b").moe
+    assert (moon.num_experts, moon.experts_per_token) == (64, 6)
+    ds = configs.get_config("deepseek-v3-671b").moe
+    assert (ds.num_experts, ds.experts_per_token,
+            ds.num_shared_experts) == (256, 8, 1)
+    assert configs.get_config("mamba2-370m").ssm.state_dim == 128
+    assert configs.get_config("zamba2-7b").ssm.state_dim == 64

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hadamard, quant, smooth
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def small_matrix(draw, max_rows=16, pow2_cols=True):
+    r = draw(st.integers(1, max_rows))
+    c = draw(st.sampled_from([8, 16, 32, 64, 128] if pow2_cols
+                             else [12, 24, 36, 48]))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.floats(0.01, 100.0))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((r, c)) * scale, jnp.float32)
+
+
+@SET
+@given(small_matrix())
+def test_quant_dequant_error_bound(x):
+    """|x - DQ(Q(x))| ≤ scale/2 elementwise (round-to-nearest)."""
+    q, s = quant.quantize_per_channel(x, 4)
+    xd = quant.dequantize(q, s)
+    bound = jnp.broadcast_to(s / 2 + 1e-6, x.shape)
+    assert bool(jnp.all(jnp.abs(x - xd) <= bound + 1e-5))
+
+
+@SET
+@given(small_matrix())
+def test_quant_idempotent(x):
+    """Quantizing an already-quantized tensor is a fixed point."""
+    x1 = quant.fake_quant_per_channel(x, 4)
+    x2 = quant.fake_quant_per_channel(x1, 4)
+    assert np.allclose(np.asarray(x1), np.asarray(x2), atol=1e-5)
+
+
+@SET
+@given(small_matrix())
+def test_rotation_preserves_norms_and_gemm(x):
+    xr = hadamard.rotate(x)
+    assert np.allclose(np.asarray(jnp.linalg.norm(xr, axis=-1)),
+                       np.asarray(jnp.linalg.norm(x, axis=-1)),
+                       rtol=1e-3, atol=1e-4)
+    w = jnp.ones((3, x.shape[-1]), jnp.float32)
+    y0 = np.asarray(x @ w.T)
+    y1 = np.asarray(hadamard.rotate(x) @ hadamard.rotate_weight_in(w).T)
+    assert np.allclose(y0, y1, rtol=1e-2, atol=1e-2 * max(1.0, np.abs(
+        y0).max()))
+
+
+@SET
+@given(small_matrix(), st.sampled_from([1, 4, 8]))
+def test_smooth_unsmooth_identity_fp(x, group):
+    """(X/s)·s == X exactly in fp for any grouping (no quantization)."""
+    if x.shape[-1] % group:
+        group = 1
+    x_sm, sg, perm = smooth.smooth(x, group=group, reorder=group > 1)
+    expand = jnp.repeat(sg, group) if group > 1 else sg
+    x_rec = x_sm * expand
+    x_ref = x if perm is None else jnp.take(x, perm, axis=-1)
+    assert np.allclose(np.asarray(x_rec), np.asarray(x_ref),
+                       rtol=1e-4, atol=1e-5)
+
+
+@SET
+@given(small_matrix())
+def test_smoothed_absmax_bounded_by_one(x):
+    """After grouped smoothing every entry is ≤ 1 in magnitude (group max
+    divides its members)."""
+    x_sm, _, _ = smooth.smooth(x, group=4 if x.shape[-1] % 4 == 0 else 1,
+                               reorder=True)
+    assert float(jnp.max(jnp.abs(x_sm))) <= 1.0 + 1e-5
+
+
+@SET
+@given(st.integers(0, 2 ** 16), st.sampled_from([64, 128, 256]))
+def test_pack_unpack_roundtrip(seed, k):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-8, 8, (8, k)), jnp.int8)
+    assert (quant.unpack_int4(quant.pack_int4(q)) == q).all()
+
+
+@SET
+@given(st.integers(0, 2 ** 16))
+def test_rs_gemm_scale_invariance(seed):
+    """Eq. 3: the RS GEMM result is invariant to ANY positive smoothing
+    scale in exact arithmetic (16-bit path ≈ exact)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    y0 = np.asarray(x @ w.T)
+    y1 = np.asarray(smooth.rs_gemm_fakequant(x, w, 16, 16, group=8,
+                                             reorder=True))
+    assert np.allclose(y0, y1, rtol=1e-3,
+                       atol=1e-3 * max(1.0, np.abs(y0).max()))
+
+
+@SET
+@given(st.integers(0, 2 ** 16), st.floats(10.0, 1000.0))
+def test_data_pipeline_pure_in_step(seed, _):
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    dc = DataConfig(seq_len=32, global_batch=2, seed=seed % 100)
+    p1 = TokenPipeline(dc)
+    p2 = TokenPipeline(dc)
+    step = seed % 1000
+    b1 = p1.get_batch(step)
+    b2 = p2.get_batch(step)
+    assert (b1["tokens"] == b2["tokens"]).all()

@@ -1,0 +1,66 @@
+"""Unit tests: quantization primitives (repro.core.quant)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quant
+
+
+def test_per_channel_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((32, 128)),
+                    jnp.float32)
+    for bits, tol in [(8, 0.01), (4, 0.16)]:
+        q, s = quant.quantize_per_channel(x, bits)
+        xd = quant.dequantize(q, s)
+        assert float(quant.qerror(x, xd)) < tol
+
+
+def test_codes_within_grid():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((8, 64)) * 100,
+                    jnp.float32)
+    for bits in (4, 8):
+        q, _ = quant.quantize_per_channel(x, bits)
+        assert int(jnp.max(jnp.abs(q))) <= quant.qmax(bits)
+
+
+def test_group_quant_beats_per_tensor_with_outliers():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((16, 256)).astype(np.float32)
+    x[:, 7] *= 100.0  # one outlier channel
+    x = jnp.asarray(x)
+    e_tensor = quant.qerror(x, quant.fake_quant_per_tensor(x, 4))
+    e_group = quant.qerror(x, quant.fake_quant_group(x, 4, 32))
+    assert float(e_group) < float(e_tensor)
+
+
+def test_pack_unpack_int4_roundtrip():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.integers(-8, 8, (16, 128)), jnp.int8)
+    assert (quant.unpack_int4(quant.pack_int4(q)) == q).all()
+
+
+def test_pack_halves_bytes():
+    q = jnp.zeros((4, 64), jnp.int8)
+    p = quant.pack_int4(q)
+    assert p.dtype == jnp.uint8 and p.shape == (4, 32)
+
+
+def test_fake_quant_16bit_identity():
+    x = jnp.ones((4, 8))
+    assert (quant.fake_quant_per_channel(x, 16) == x).all()
+
+
+def test_zero_input_safe():
+    x = jnp.zeros((4, 16))
+    xd = quant.fake_quant_per_channel(x, 4)
+    assert not bool(jnp.any(jnp.isnan(xd)))
+    assert (xd == 0).all()
+
+
+def test_integer_and_fake_paths_agree():
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((8, 32)),
+                    jnp.float32)
+    q, s = quant.quantize_per_channel(x, 4)
+    assert np.allclose(quant.dequantize(q, s),
+                       quant.fake_quant_per_channel(x, 4), atol=1e-6)

@@ -1,0 +1,176 @@
+"""Substrate tests: data pipeline, optimizers, schedules, gradient
+compression, checkpointing, trainer fault tolerance, serving engine."""
+import math
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig, TrainConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.optim import grad_compress, optimizers
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256)
+
+
+# --------------------------- data ---------------------------------------
+
+def test_pipeline_deterministic_and_disjoint_eval():
+    dc = DataConfig(seq_len=64, global_batch=4)
+    p = TokenPipeline(dc)
+    assert (p.get_batch(7)["tokens"] == p.get_batch(7)["tokens"]).all()
+    train = p.get_batch(0)["tokens"]
+    ev = next(iter(p.eval_batches(1)))["tokens"]
+    assert not (train == ev).all()
+
+
+def test_pipeline_vocab_clamp():
+    dc = DataConfig(seq_len=16, global_batch=2, vocab_size=100)
+    toks = TokenPipeline(dc).get_batch(0)["tokens"]
+    assert toks.max() < 100
+
+
+# --------------------------- optim --------------------------------------
+
+def test_adamw_first_step_magnitude():
+    tc = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=10,
+                     weight_decay=0.0, schedule="const")
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 0.5)}
+    st = optimizers.init_optimizer(tc, params)
+    new_p, st2, lr = optimizers.apply_optimizer(tc, grads, st, params)
+    # adam first step ≈ -lr * sign(g)
+    assert np.allclose(np.asarray(new_p["w"]), 1.0 - 1e-2, atol=1e-3)
+
+
+def test_adafactor_shapes_and_update():
+    tc = TrainConfig(optimizer="adafactor", learning_rate=1e-2,
+                     warmup_steps=1, total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.ones((8, 16)), "b": jnp.ones((8,))}
+    st = optimizers.init_optimizer(tc, params)
+    assert st.vr["w"].shape == (8,) and st.vc["w"].shape == (16,)
+    grads = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    new_p, st2, _ = optimizers.apply_optimizer(tc, grads, st, params)
+    assert float(jnp.max(new_p["w"])) < 1.0
+
+
+def test_wsd_schedule_shape():
+    tc = TrainConfig(schedule="wsd", learning_rate=1.0, warmup_steps=10,
+                     total_steps=100, wsd_stable_frac=0.8)
+    s = optimizers.make_schedule(tc)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert abs(float(s(50)) - 1.0) < 1e-6          # stable plateau
+    assert float(s(95)) < 0.6                       # decay tail
+    assert float(s(100)) < 0.05
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optimizers.clip_by_global_norm(tree, 1.0)
+    assert abs(float(optimizers.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_ef_compression_unbiased_over_steps():
+    """Error feedback: accumulated compressed grads converge to the true
+    sum (residual carries the rounding error)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((1000,)) * 0.01, jnp.float32)
+    res = None
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        gq, res = grad_compress.ef_compress_tree({"g": g},
+                                                 res if res is None
+                                                 else res)
+        total = total + gq["g"]
+    ref = g * 50
+    rel = float(jnp.linalg.norm(total - ref) / jnp.linalg.norm(ref))
+    assert rel < 5e-3, rel
+
+
+# --------------------------- trainer / fault tolerance -------------------
+
+def test_trainer_divergence_rollback():
+    """A poisoned step (NaN loss) rolls back to the last checkpoint and
+    skips the bad batch."""
+    model = build_model(TINY)
+    tc = TrainConfig(total_steps=12, warmup_steps=2, learning_rate=1e-3)
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=260)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(model, tc, dc, d, ckpt_every=5)
+        base_step = tr._step_fn
+        calls = {"n": 0}
+
+        def poisoned(state, batch):
+            calls["n"] += 1
+            state, metrics = base_step(state, batch)
+            if calls["n"] == 7:
+                metrics = dict(metrics, loss=jnp.float32(float("nan")))
+            return state, metrics
+
+        tr._step_fn = poisoned
+        rep = tr.run()
+        assert rep.rollbacks == 1
+        assert rep.steps_run >= 10
+        assert math.isfinite(rep.final_loss)
+
+
+def test_trainer_straggler_flag():
+    model = build_model(TINY)
+    tc = TrainConfig(total_steps=8, warmup_steps=2, learning_rate=1e-3)
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=260)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(model, tc, dc, d, ckpt_every=100,
+                     straggler_factor=3.0)
+        base_step = tr._step_fn
+        calls = {"n": 0}
+
+        def slow(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 6:
+                time.sleep(1.0)          # injected straggler
+            return base_step(state, batch)
+
+        tr._step_fn = slow
+        rep = tr.run()
+        assert 5 in rep.straggler_flags  # step index 5 == 6th call
+
+
+# --------------------------- serving ------------------------------------
+
+def test_engine_wave_batching_and_eos():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    from repro.serve.engine import ServingEngine
+    qcfg = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+    eng = ServingEngine(model, params, qcfg, max_batch=2, max_len=128)
+    for i in range(5):
+        eng.submit("abcdef", max_new_tokens=6)
+    done = eng.run()
+    assert len(done) == 5
+    assert all(1 <= len(r.out_tokens) <= 6 for r in done)
+
+
+def test_kv_cache_quantization_close_to_fp():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 260)
+    outs = {}
+    for kv_bits in (16, 4):
+        qcfg = QuantConfig(16, 16, kv_bits, method="rrs" if kv_bits < 16
+                           else "none")
+        cache, _ = model.init_cache(2, 64)
+        lp, cache = model.step(params, tokens, cache, qcfg)
+        ld, _ = model.step(params, jnp.argmax(lp[:, -1:], -1), cache, qcfg)
+        outs[kv_bits] = ld
+    rel = float(jnp.linalg.norm((outs[4] - outs[16]).astype(jnp.float32))
+                / jnp.linalg.norm(outs[16].astype(jnp.float32)))
+    assert rel < 0.25, rel
