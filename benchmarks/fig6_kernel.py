@@ -18,6 +18,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import QuantConfig
+from repro.core import methods as qmethods
 from repro.core import quant, smooth
 from benchmarks.common import emit, timeit
 
@@ -70,6 +72,22 @@ def run(quick: bool = False):
         t_sc = timeit(sub_channel, x, w)
         t_rs = timeit(rs_fused, x, w)
         ao = analytic_overhead(n, m, k)
+        # per-registered-method online cost: prepare once offline, time
+        # the jitted ONLINE half (the serving hot path) for every method
+        # in the registry — third-party registrations show up here free
+        method_us = {}
+        for name in qmethods.available_methods():
+            meth = qmethods.get_method(name)
+            # "gptq" without a calibrated weight pass falls back to RTN
+            # and its online half IS RTN's — skip the duplicate column
+            if meth.is_identity or name == "gptq":
+                continue
+            qcfg = QuantConfig(4, 4, method=name, group_size=128,
+                               w_quantizer="rtn")
+            pl = meth.prepare_weight(w, qcfg, calib_x=x[:64])
+            fn = jax.jit(lambda xx, p=pl, q=qcfg, mm=meth: mm.apply(xx, p,
+                                                                    q))
+            method_us[f"us_apply_{name}"] = round(timeit(fn, x), 1)
         rows.append({
             "name": f"gemm_{n}x{m}x{k}",
             "us_per_call": round(t_pc, 1),
@@ -77,6 +95,7 @@ def run(quick: bool = False):
             "us_sub_channel": round(t_sc, 1),
             "us_rs_fused": round(t_rs, 1),
             "rs_vs_per_channel": round(t_rs / t_pc, 3),
+            **method_us,
             **{kk: round(vv, 5) for kk, vv in ao.items()},
         })
         print(f"  {rows[-1]['name']}: per-ch {t_pc:.0f}us sub-ch "

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, QuantConfig, TrainConfig
+from repro.core import methods as qmethods
 from repro.core import outliers
 from repro.data.pipeline import DataConfig
 from repro.models import build_model
@@ -45,7 +46,10 @@ SCHEMES = {
     "A4W4KV16": dict(a_bits=4, w_bits=4, kv_bits=16),
     "A4W4KV4": dict(a_bits=4, w_bits=4, kv_bits=4),
 }
-METHODS = ["none", "rtn", "smoothquant", "rs", "quarot", "rrs"]
+# every registered QuantMethod (third-party registrations included);
+# "gptq" has no calibration pass in this offline eval, where its weight
+# quantizer falls back to RTN == the "rtn" row, so it is skipped
+METHODS = [m for m in qmethods.available_methods() if m != "gptq"]
 
 
 def get_trained_params(steps: int = 300, quick: bool = False):

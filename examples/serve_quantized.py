@@ -1,10 +1,16 @@
 """Serving driver (deliverable b): batched INT4-RRS serving with the wave
-engine — offline weight preparation (rotate + quantize), quantized KV
-cache, prefill + decode, throughput stats.
+engine — offline weight preparation through the QuantMethod registry
+(rotate + quantize), prepared-artifact save/load, quantized KV cache,
+prefill + decode, throughput stats.
+
+Flow: prepare once offline → ``save_prepared`` to disk → boot a second
+engine with ``ServingEngine.from_artifact`` (no re-preparation) → verify
+both engines produce identical tokens.
 
     PYTHONPATH=src python examples/serve_quantized.py [--requests 6]
 """
 import argparse
+import tempfile
 import time
 
 import jax
@@ -12,6 +18,20 @@ import jax
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import build_model
 from repro.serve.engine import ServingEngine
+from repro.serve.prepare import prepare_params, save_prepared
+
+PROMPTS = ["the quick brown fox", "a b c d e", "hello world program",
+           "numbers one two three", "lorem ipsum dolor", "final test"]
+
+
+def run_engine(engine: ServingEngine, n_requests: int, new_tokens: int):
+    for i in range(n_requests):
+        engine.submit(PROMPTS[i % len(PROMPTS)], max_new_tokens=new_tokens)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total = sum(len(r.out_tokens) for r in done)
+    return done, total, dt
 
 
 def main():
@@ -29,22 +49,30 @@ def main():
 
     qcfg = QuantConfig(4, 4, 4, method="rrs", group_size=128,
                        w_quantizer="rtn")
-    engine = ServingEngine(model, params, qcfg, max_batch=4, max_len=256)
 
-    prompts = ["the quick brown fox", "a b c d e", "hello world program",
-               "numbers one two three", "lorem ipsum dolor", "final test"]
-    for i in range(args.requests):
-        engine.submit(prompts[i % len(prompts)],
-                      max_new_tokens=args.new_tokens)
-    t0 = time.time()
-    done = engine.run()
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests / {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s, A4W4KV4 RRS)")
+    # 1) in-memory preparation (registry prepare_weight over the pytree)
+    engine = ServingEngine(model, params, qcfg, max_batch=4, max_len=256)
+    done, total, dt = run_engine(engine, args.requests, args.new_tokens)
+    print(f"served {len(done)} requests / {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, A4W4KV4 RRS)")
     for r in done[:3]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens -> "
               f"{r.text[:48]!r}")
+
+    # 2) prepared-artifact round trip: save once, serve from disk
+    with tempfile.TemporaryDirectory() as d:
+        path = save_prepared(f"{d}/rrs_a4w4kv4", engine.params, qcfg)
+        engine2 = ServingEngine.from_artifact(model, path, max_batch=4,
+                                              max_len=256)
+        done2, total2, dt2 = run_engine(engine2, args.requests,
+                                        args.new_tokens)
+        match = all(a.out_tokens == b.out_tokens
+                    for a, b in zip(done, done2))
+        print(f"artifact engine: {total2} tokens in {dt2:.2f}s "
+              f"({total2 / dt2:.1f} tok/s); tokens identical to "
+              f"in-memory preparation: {match}")
+        if not match:
+            raise SystemExit("artifact round-trip diverged!")
 
 
 if __name__ == "__main__":

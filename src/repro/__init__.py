@@ -1,0 +1,2 @@
+"""repro — Rotated Runtime Smooth reproduction + serving system."""
+from repro import compat  # noqa: F401  (installs jax version shims)

@@ -1,0 +1,44 @@
+"""Version shims for the pinned container jax.
+
+``jax.shard_map`` (with the ``check_vma`` kwarg) and ``jax.lax.axis_size``
+only exist in newer jax releases; the container pins jax 0.4.x where the
+APIs live at ``jax.experimental.shard_map.shard_map(..., check_rep=...)``
+and ``jax.core.axis_frame(name)`` (which returns the static size).
+Installing the aliases here keeps call sites written against the modern
+spellings working unchanged on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _install_axis_size_alias() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name) -> int:
+        return jax.core.axis_frame(axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_shard_map_alias() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kw):
+        check = True
+        if check_rep is not None:
+            check = check_rep
+        if check_vma is not None:
+            check = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check, **kw)
+
+    jax.shard_map = shard_map
+
+
+_install_axis_size_alias()
+_install_shard_map_alias()

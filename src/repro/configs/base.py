@@ -24,6 +24,34 @@ from typing import Any, Dict, Optional, Tuple
 
 METHODS = ("none", "rtn", "gptq", "smoothquant", "rs", "quarot", "rrs")
 
+# Method traits, extensible by repro.core.methods.register_method: maps a
+# method name -> {"rotation": bool, "runtime_smooth": bool}.  QuantConfig
+# validates + resolves its behavior properties against this table, so a
+# third-party QuantMethod registered from anywhere (even a test file) is
+# immediately usable in a QuantConfig without editing this module.
+_METHOD_TRAITS: Dict[str, Dict[str, bool]] = {
+    "none": {},
+    "rtn": {},
+    "gptq": {},
+    "smoothquant": {},
+    "rs": {"runtime_smooth": True},
+    "quarot": {"rotation": True},
+    "rrs": {"rotation": True, "runtime_smooth": True},
+}
+
+
+def register_method_name(name: str, uses_rotation: bool = False,
+                         uses_runtime_smooth: bool = False) -> None:
+    """Make ``name`` a valid QuantConfig.method (registry hook)."""
+    _METHOD_TRAITS[name] = {"rotation": uses_rotation,
+                            "runtime_smooth": uses_runtime_smooth}
+
+
+def known_methods() -> Tuple[str, ...]:
+    """All currently-registered method names (builtins first)."""
+    rest = tuple(m for m in _METHOD_TRAITS if m not in METHODS)
+    return METHODS + rest
+
 
 @dataclass(frozen=True)
 class QuantConfig:
@@ -53,8 +81,9 @@ class QuantConfig:
                                   # HBM traffic; beyond-paper §Perf)
 
     def __post_init__(self):
-        if self.method not in METHODS:
-            raise ValueError(f"unknown method {self.method!r}; want {METHODS}")
+        if self.method not in _METHOD_TRAITS:
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"want one of {known_methods()}")
         if self.a_bits not in (4, 8, 16) or self.w_bits not in (4, 8, 16):
             raise ValueError("a_bits/w_bits must be 4, 8 or 16")
         if self.kv_bits not in (4, 8, 16):
@@ -70,11 +99,12 @@ class QuantConfig:
 
     @property
     def uses_rotation(self) -> bool:
-        return self.method in ("quarot", "rrs")
+        return _METHOD_TRAITS.get(self.method, {}).get("rotation", False)
 
     @property
     def uses_runtime_smooth(self) -> bool:
-        return self.method in ("rs", "rrs")
+        return _METHOD_TRAITS.get(self.method, {}).get("runtime_smooth",
+                                                       False)
 
 
 FP16 = QuantConfig()

@@ -4,14 +4,16 @@ Public surface:
   quant        — symmetric RTN per-tensor/channel/group, int4 packing
   hadamard     — FWHT / Kronecker / block-diagonal rotations
   smooth       — Runtime Smooth (Eq. 1-3, Fig. 4 grouping/reorder)
-  rrs          — Rotated Runtime Smooth composite + method dispatch
+  methods      — QuantMethod registry: prepare/apply lifecycle for every
+                 quantization scheme (the single dispatch seam)
+  rrs          — Rotated Runtime Smooth façade over the registry
   smoothquant  — calibrated baseline (Xiao et al. 2023)
   gptq         — GPTQ weight quantizer (Frantar et al. 2022)
   kvquant      — sub-channel KV-cache quantization
   outliers     — outlier synthesis + mu/victim metrics (paper §A)
 """
-from repro.core import (gptq, hadamard, kvquant, outliers, quant, rrs,
-                        smooth, smoothquant)
+from repro.core import (gptq, hadamard, kvquant, methods, outliers, quant,
+                        rrs, smooth, smoothquant)
 
-__all__ = ["quant", "hadamard", "smooth", "rrs", "smoothquant", "gptq",
-           "kvquant", "outliers"]
+__all__ = ["quant", "hadamard", "smooth", "methods", "rrs", "smoothquant",
+           "gptq", "kvquant", "outliers"]

@@ -1,0 +1,424 @@
+"""Unified quantization-method registry: the single dispatch seam.
+
+Every quantization scheme in the system — the paper's RRS plus all
+baselines — is a :class:`QuantMethod` with a two-phase lifecycle:
+
+    prepare_weight(w, cfg, calib_x=None) -> PreparedLinear    # OFFLINE
+    apply(x, prepared, cfg)              -> y                 # ONLINE
+
+``PreparedLinear`` is a jax pytree (registered with static metadata) that
+carries everything the online path needs: the fake-quant weight, the
+rotation block, merged SmoothQuant scales, an optional frozen channel
+reorder permutation, and — for ``cfg.exec_path == "kernel"`` — packed
+int4 codes + scales for the fused Pallas GEMM.  Because it is a pytree,
+prepared leaves flow through ``jax.lax.scan`` over layer stacks, through
+``jax.jit``, and through the serving engine unchanged.
+
+Dispatch sites (``core/rrs.py``, ``models/layers.py:qlinear``,
+``serve/prepare.py``, ``serve/engine.py``) all resolve through
+:func:`get_method`; there is no string ``if/elif`` chain anywhere else.
+Registering a new method therefore requires zero edits outside the new
+method's own module:
+
+    @register_method("smoothrot")
+    class SmoothRot(QuantMethod):
+        uses_rotation = True
+        def prepare_weight(self, w, cfg, calib_x=None, sq_scale=None): ...
+        def apply(self, x, prepared, cfg): ...
+
+``register_method`` also teaches ``QuantConfig`` the new name (via
+``configs.base.register_method_name``), so ``QuantConfig(4, 4,
+method="smoothrot")`` validates immediately.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as config_base
+from repro.configs.base import QuantConfig
+from repro.core import hadamard, quant, smooth
+
+
+# ---------------------------------------------------------------------------
+# PreparedLinear — the serializable offline artifact
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class PreparedLinear:
+    """Offline-prepared weight + side info for one linear layer.
+
+    Array fields (pytree children; ``None`` when unused):
+      w_dq      — fake-quant (already dequantized) weight (M, K) or a
+                  layer-stacked (L, ..., M, K)
+      sq_scale  — SmoothQuant per-input-channel scale merged into w (K,)
+      perm      — frozen (static_reorder) channel permutation already
+                  folded into w's K axis (K,) int32
+      w_packed  — block-local packed int4 codes (M, K//2) uint8, only for
+                  exec_path="kernel"
+      w_scale   — per-output-channel weight quant scale (M,) f32, only
+                  alongside w_packed
+
+    Static metadata (pytree aux, hashable — survives jit/scan):
+      method, rotated, rotate_block, group
+    """
+
+    __slots__ = ("w_dq", "sq_scale", "perm", "w_packed", "w_scale",
+                 "method", "rotated", "rotate_block", "group")
+
+    def __init__(self, w_dq, sq_scale=None, perm=None, w_packed=None,
+                 w_scale=None, *, method: str = "none",
+                 rotated: bool = False, rotate_block: int = 0,
+                 group: int = 0):
+        self.w_dq = w_dq
+        self.sq_scale = sq_scale
+        self.perm = perm
+        self.w_packed = w_packed
+        self.w_scale = w_scale
+        self.method = method
+        self.rotated = rotated
+        self.rotate_block = rotate_block
+        self.group = group
+
+    ARRAY_FIELDS = ("w_dq", "sq_scale", "perm", "w_packed", "w_scale")
+    STATIC_FIELDS = ("method", "rotated", "rotate_block", "group")
+
+    def tree_flatten_with_keys(self):
+        children = [(jax.tree_util.GetAttrKey(f), getattr(self, f))
+                    for f in self.ARRAY_FIELDS]
+        aux = tuple(getattr(self, f) for f in self.STATIC_FIELDS)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kw = dict(zip(cls.STATIC_FIELDS, aux))
+        return cls(*children, **kw)
+
+    def replace(self, **kw) -> "PreparedLinear":
+        vals = {f: getattr(self, f)
+                for f in self.ARRAY_FIELDS + self.STATIC_FIELDS}
+        vals.update(kw)
+        statics = {f: vals.pop(f) for f in self.STATIC_FIELDS}
+        return PreparedLinear(**vals, **statics)
+
+    def __repr__(self):
+        shape = getattr(self.w_dq, "shape", None)
+        return (f"PreparedLinear(method={self.method!r}, shape={shape}, "
+                f"rotated={self.rotated}, block={self.rotate_block}, "
+                f"packed={self.w_packed is not None})")
+
+
+def offline_prepared(w: jnp.ndarray, cfg: QuantConfig) -> PreparedLinear:
+    """Wrap a raw array whose offline half was ALREADY applied elsewhere
+    (e.g. the dry-run lowers with abstract raw-shaped params and
+    ``prepared=True``).  Reconstructs the static metadata from cfg."""
+    rotated = cfg.uses_rotation
+    block = (hadamard.pick_rotate_block(w.shape[-1], cfg.rotate_block)
+             if rotated else 0)
+    return PreparedLinear(w, method=cfg.method, rotated=rotated,
+                          rotate_block=block)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, "QuantMethod"] = {}
+
+
+def register_method(name: str):
+    """Class decorator: instantiate + register a QuantMethod under
+    ``name`` and make the name valid for QuantConfig."""
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        config_base.register_method_name(
+            name, uses_rotation=inst.uses_rotation,
+            uses_runtime_smooth=inst.uses_runtime_smooth)
+        return cls
+    return deco
+
+
+def get_method(name: str) -> "QuantMethod":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no QuantMethod registered under {name!r}; "
+                       f"known: {tuple(_REGISTRY)}") from None
+
+
+def available_methods() -> Tuple[str, ...]:
+    """Registered method names, registration (= builtin) order."""
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# base class — the shared prepare/apply template
+# ---------------------------------------------------------------------------
+
+class QuantMethod:
+    """Base lifecycle.  Subclasses override the online half
+    (:meth:`_apply_quant`) and, rarely, pieces of the offline half.
+
+    Trait flags (consumed by QuantConfig properties via the trait table):
+      uses_rotation       — offline weight rotation + online FWHT on x
+      uses_runtime_smooth — per-group runtime smoothing scales on x
+      live_calib          — on-the-fly preparation (training-time fake
+                            quant) passes the live batch as calibration
+                            (best-case SmoothQuant; paper §2.2)
+      is_identity         — no prepare work at all (fp16 passthrough)
+    """
+
+    name = "base"
+    uses_rotation = False
+    uses_runtime_smooth = False
+    live_calib = False
+    is_identity = False
+
+    # -- offline half ------------------------------------------------------
+
+    def prepare_weight(self, w: jnp.ndarray, cfg: QuantConfig,
+                       calib_x: Optional[jnp.ndarray] = None,
+                       sq_scale: Optional[jnp.ndarray] = None
+                       ) -> PreparedLinear:
+        """rotate -> merge scales -> (static reorder) -> weight quant ->
+        (pack).  ``calib_x`` enables GPTQ and static reorder; without it
+        GPTQ falls back to RTN."""
+        rotated, block = False, 0
+        if cfg.uses_rotation:
+            block = hadamard.pick_rotate_block(w.shape[-1],
+                                               cfg.rotate_block)
+            w = hadamard.rotate_weight_in(w, block=block)
+            rotated = True
+        w, sq_scale = self._merge_scales(w, cfg, calib_x, sq_scale)
+        perm = None
+        if (self.uses_runtime_smooth and cfg.static_reorder
+                and calib_x is not None):
+            xc = calib_x.reshape(-1, calib_x.shape[-1])
+            xc = xc.astype(jnp.float32)
+            if rotated:
+                xc = hadamard.rotate(xc, block=block)
+            perm = smooth.reorder_indices(smooth.runtime_scales(xc))
+            w = jnp.take(w, perm, axis=-1)
+        if not cfg.quantize_weights:
+            return PreparedLinear(w, sq_scale, perm, method=self.name,
+                                  rotated=rotated, rotate_block=block,
+                                  group=cfg.group_size)
+        w_dq, codes, scale = self._quantize_weight(w, cfg, calib_x,
+                                                   rotated, block,
+                                                   sq_scale, perm)
+        w_packed = w_scale = None
+        if self._pack_eligible(cfg, w.shape[-1]) and codes is not None:
+            from repro.kernels.ops import pack_int4_kblocks
+            w_packed = pack_int4_kblocks(codes, cfg.group_size)
+            w_scale = scale.reshape(-1)
+        return PreparedLinear(w_dq, sq_scale, perm, w_packed, w_scale,
+                              method=self.name, rotated=rotated,
+                              rotate_block=block, group=cfg.group_size)
+
+    def _merge_scales(self, w, cfg, calib_x, sq_scale):
+        """Hook: fold per-channel scales into the weight (SmoothQuant)."""
+        return w, sq_scale
+
+    def _quantize_weight(self, w, cfg, calib_x, rotated, block, sq_scale,
+                         perm):
+        """Returns (w_dq fake-quant weight, int codes or None, scale)."""
+        if cfg.w_quantizer == "gptq" and calib_x is not None:
+            from repro.core import gptq
+            xc = calib_x.reshape(-1, calib_x.shape[-1])
+            if rotated:
+                xc = hadamard.rotate(xc, block=block)
+            if sq_scale is not None:
+                xc = xc / sq_scale
+            if perm is not None:
+                xc = jnp.take(xc, perm, axis=-1)
+            codes, scale = gptq.gptq_quantize(w, xc, cfg.w_bits)
+            return quant.dequantize(codes, scale, w.dtype), codes, scale
+        codes, scale = quant.quantize_per_channel(w, cfg.w_bits, axis=-1)
+        return quant.dequantize(codes, scale, w.dtype), codes, scale
+
+    def _pack_eligible(self, cfg: QuantConfig, k: int) -> bool:
+        return (cfg.exec_path == "kernel" and cfg.w_bits == 4
+                and cfg.group_size > 1 and cfg.group_size % 2 == 0
+                and k % cfg.group_size == 0)
+
+    # -- online half -------------------------------------------------------
+
+    def apply(self, x: jnp.ndarray, prepared: PreparedLinear,
+              cfg: QuantConfig) -> jnp.ndarray:
+        """y = online_ops(x) @ prepared.w_dqᵀ — dispatch target of every
+        quantized linear in the system."""
+        if not cfg.quantize_acts:
+            return self._apply_noquant(x, prepared, cfg)
+        return self._apply_quant(x, prepared, cfg)
+
+    def _apply_noquant(self, x, prepared, cfg):
+        """Weight-only (A16Wn) / fp path: undo whatever offline transform
+        the prepared weight carries, then a plain matmul."""
+        if prepared.rotated:
+            x = hadamard.rotate(x, block=prepared.rotate_block)
+        if prepared.sq_scale is not None:
+            x = x / prepared.sq_scale.astype(x.dtype)
+        if prepared.perm is not None:
+            x = jnp.take(x, prepared.perm, axis=-1)
+        return x @ prepared.w_dq.T.astype(x.dtype)
+
+    def _apply_quant(self, x, prepared, cfg):
+        raise NotImplementedError
+
+    # -- shared online pieces ---------------------------------------------
+
+    @staticmethod
+    def _act_group(cfg: QuantConfig, k: int) -> int:
+        """Runtime-smooth group with the model-zoo fallback: projections
+        whose K is not divisible by the configured group run per-channel
+        (group=1) instead of failing (small head dims etc.)."""
+        g = cfg.group_size
+        return g if (g > 0 and k % g == 0) else 1
+
+    def _smooth_gemm(self, x, prepared, cfg):
+        """Runtime-smooth fake-quant GEMM (paper Eq. 3 / Fig. 4): exactly
+        ``smooth.rs_gemm_fakequant`` but artifact-aware (frozen perm from
+        static_reorder means w's K axis is already permuted)."""
+        w = prepared.w_dq
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape(-1, k)
+        g = self._act_group(cfg, k)
+        if prepared.perm is not None:
+            # static_reorder: the frozen perm is already folded into w's
+            # K axis — gather x once, skip the runtime argsort entirely
+            x2 = jnp.take(x2, prepared.perm, axis=-1)
+            x_sm, sg, _ = smooth.smooth(x2, group=g, reorder=False)
+            wq = w
+        else:
+            x_sm, sg, perm = smooth.smooth(x2, group=g,
+                                           reorder=cfg.reorder)
+            wq = w if perm is None else jnp.take(w, perm, axis=-1)
+        x_dq = quant.fake_quant_per_channel(x_sm, cfg.a_bits, axis=-1)
+        expand = jnp.repeat(sg, g) if g > 1 else sg
+        y = (x_dq.astype(jnp.float32) * expand) @ wq.astype(jnp.float32).T
+        return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# builtin methods
+# ---------------------------------------------------------------------------
+
+@register_method("none")
+class NoQuant(QuantMethod):
+    """FP16/BF16 passthrough (quantize_* properties are False)."""
+    is_identity = True
+
+    def prepare_weight(self, w, cfg, calib_x=None, sq_scale=None):
+        return PreparedLinear(w, method=self.name)
+
+    def _apply_quant(self, x, prepared, cfg):   # pragma: no cover
+        return self._apply_noquant(x, prepared, cfg)
+
+
+@register_method("rtn")
+class RTN(QuantMethod):
+    """Per-token symmetric RTN activations, per-channel RTN weights."""
+
+    def _apply_quant(self, x, prepared, cfg):
+        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        return x_q @ prepared.w_dq.T.astype(x.dtype)
+
+
+@register_method("gptq")
+class GPTQ(RTN):
+    """RTN activations + GPTQ weights (needs calib_x at prepare time;
+    falls back to RTN weights without it).  Online half == RTN."""
+
+
+@register_method("smoothquant")
+class SmoothQuant(QuantMethod):
+    """Offline migration s = max|X|^α / max|W|^(1-α) merged into W;
+    online divides x by s (paper §2.2 baseline)."""
+    live_calib = True
+
+    def _merge_scales(self, w, cfg, calib_x, sq_scale):
+        if sq_scale is None:
+            from repro.core import smoothquant as sq_mod
+            calib = (calib_x if calib_x is not None
+                     else jnp.ones_like(w[:1]))
+            sq_scale = sq_mod.smoothquant_scales(calib, w)
+        return w * sq_scale[None, :], sq_scale
+
+    def _apply_quant(self, x, prepared, cfg):
+        if prepared.sq_scale is not None:
+            x = x / prepared.sq_scale.astype(x.dtype)
+        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        return x_q @ prepared.w_dq.T.astype(x.dtype)
+
+
+@register_method("rs")
+class RuntimeSmooth(QuantMethod):
+    """Paper §3.1-3.2: per-group runtime smoothing scales, no rotation."""
+    uses_runtime_smooth = True
+
+    def _apply_quant(self, x, prepared, cfg):
+        return self._smooth_gemm(x, prepared, cfg)
+
+
+@register_method("quarot")
+class QuaRot(QuantMethod):
+    """Rotation only (QuaRot-style online-only variant): FWHT on x,
+    pre-rotated weights, per-token RTN."""
+    uses_rotation = True
+
+    def _apply_quant(self, x, prepared, cfg):
+        x_rot = hadamard.rotate(x, block=prepared.rotate_block)
+        x_q = quant.fake_quant_per_channel(x_rot, cfg.a_bits, axis=-1)
+        return x_q @ prepared.w_dq.T.astype(x.dtype)
+
+
+@register_method("rrs")
+class RotatedRuntimeSmooth(QuantMethod):
+    """The paper's headline method (§3.3): rotate + runtime smooth.
+
+    ``cfg.exec_path == "kernel"`` routes through the fused integer Pallas
+    pipeline (packed int4 weights in ``prepared.w_packed``); "fake" runs
+    the bit-exact QDQ float path.
+    """
+    uses_rotation = True
+    uses_runtime_smooth = True
+
+    def _apply_quant(self, x, prepared, cfg):
+        if cfg.exec_path == "kernel" and prepared.w_packed is not None:
+            return self._apply_kernel(x, prepared, cfg)
+        x_rot = hadamard.rotate(x, block=prepared.rotate_block)
+        return self._smooth_gemm(x_rot, prepared, cfg)
+
+    def _apply_kernel(self, x, prepared, cfg):
+        from repro.kernels import ops as kops
+        y = kops.rrs_linear_fused_fields(
+            x, w_packed=prepared.w_packed,
+            w_scale=prepared.w_scale, m=prepared.w_dq.shape[0],
+            group=prepared.group, rotate_block=prepared.rotate_block,
+            perm=prepared.perm)
+        return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def is_prepared(leaf: Any) -> bool:
+    return isinstance(leaf, PreparedLinear)
+
+
+def tree_has_prepared(tree) -> bool:
+    found = []
+    jax.tree.map(lambda l: found.append(True) if is_prepared(l) else None,
+                 tree, is_leaf=is_prepared)
+    return bool(found)
+
+
+__all__ = ["PreparedLinear", "QuantMethod", "register_method",
+           "get_method", "available_methods", "offline_prepared",
+           "is_prepared", "tree_has_prepared"]

@@ -65,6 +65,15 @@ def smooth(x: jnp.ndarray, group: int = 1, reorder: bool = True,
     the *returned* x are permuted by descending scale and ``perm`` is the
     permutation (apply the same permutation to W's K axis before the GEMM).
     A precomputed ``perm`` (static_reorder mode) skips the argsort.
+
+    ``reorder`` requires ``group > 1`` to have any effect.  At group<=1
+    every channel carries its own scale, so sorting channels cannot
+    change which values share a scale — the permutation is a numeric
+    no-op that would only add an argsort + two gathers to the hot path.
+    ``reorder=True`` with ``group<=1`` is therefore DELIBERATELY treated
+    as no-reorder and the returned perm is None (callers never need to
+    permute W).  Pinned by ``test_smooth_rrs.py::
+    test_reorder_noop_at_group_one_returns_no_perm``.
     """
     s = runtime_scales(x)
     if reorder and group > 1:

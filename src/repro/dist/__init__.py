@@ -1,0 +1,3 @@
+"""Distribution utilities: logical-axis sharding rules + pipeline
+parallelism helpers."""
+from repro.dist import sharding

@@ -1,0 +1,73 @@
+"""Pipeline parallelism over a mesh axis (GPipe-style microbatching).
+
+``stack_for_stages`` splits a layer-stacked param tree into per-stage
+chunks; ``pipeline_forward`` runs the classic (n_micro + n_stages - 1)
+tick schedule inside one shard_map: every tick each stage applies its
+chunk to the microbatch it currently holds, then the ring ppermute
+shifts activations stage → stage+1.  Bubble fraction is
+(S-1)/(M+S-1) — the dry-run's roofline term for the multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat  # noqa: F401  (jax.shard_map alias on old jax)
+
+
+def stack_for_stages(params, n_stages: int):
+    """Reshape every leaf (L, ...) -> (n_stages, L//n_stages, ...)."""
+    def one(a):
+        l = a.shape[0]
+        if l % n_stages:
+            raise ValueError(f"L={l} not divisible by stages={n_stages}")
+        return a.reshape(n_stages, l // n_stages, *a.shape[1:])
+    return jax.tree.map(one, params)
+
+
+def pipeline_forward(mesh: Mesh, axis: str, stage_fn: Callable,
+                     stage_params, x: jnp.ndarray,
+                     n_micro: int = 1) -> jnp.ndarray:
+    """Run ``stage_fn(params_chunk, x)`` as a pipeline over ``axis``.
+
+    stage_params: leaves (n_stages, L/n_stages, ...) as produced by
+    :func:`stack_for_stages`.  x: (N, ...) batch, split into ``n_micro``
+    equal microbatches along dim 0.  Returns the full (N, ...) output,
+    replicated (identical to applying all stages sequentially).
+    """
+    n_stages = mesh.devices.shape[list(mesh.axis_names).index(axis)]
+    n = x.shape[0]
+    if n % n_micro:
+        raise ValueError(f"batch {n} not divisible by n_micro={n_micro}")
+    micros = x.reshape(n_micro, n // n_micro, *x.shape[1:])
+    ticks = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def local_fn(params, micros_loc):
+        # shard_map hands each device its (1, L/S, ...) chunk
+        params = jax.tree.map(lambda a: a[0], params)
+        stage = jax.lax.axis_index(axis)
+        is_first = (stage == 0)
+        is_last = (stage == n_stages - 1)
+        buf = jnp.zeros_like(micros_loc[0])
+        outs = jnp.zeros_like(micros_loc)
+        for t in range(ticks):
+            inject = micros_loc[min(t, n_micro - 1)]
+            cur = jnp.where(is_first & (t < n_micro), inject, buf)
+            y = stage_fn(params, cur)
+            m = t - (n_stages - 1)
+            if 0 <= m < n_micro:
+                outs = outs.at[m].set(jnp.where(is_last, y, outs[m]))
+            buf = jax.lax.ppermute(y, axis, perm)
+        # only the last stage holds real outputs; psum replicates them
+        return jax.lax.psum(outs, axis)
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False)
+    out = fn(stage_params, micros)
+    return out.reshape(n, *x.shape[1:])

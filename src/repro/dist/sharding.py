@@ -1,0 +1,199 @@
+"""Logical-axis sharding: one rule table maps layer-declared axis names
+("heads", "ffn", "batch", ...) onto physical mesh axes.
+
+Model code never mentions mesh axes.  Layers declare *logical* names for
+their params (the ``axes`` tree returned by every ``*_params``) and wrap
+activations in :func:`shard`.  A launch script picks a mesh + rule table
+(:func:`make_rules`), enters :func:`use_rules`, and everything inside —
+model apply, the dry-run's AOT lowering, the trainer — resolves its
+constraints against the active context.  With no active context every
+helper is an exact no-op, so single-device tests never see a mesh.
+
+Divisibility fallback (``_fit_spec_to_shape``): a logical rule only
+applies to a tensor dim when the mesh-axis product divides the dim size;
+otherwise mesh axes are dropped suffix-first (e.g. an ``("data",
+"model")`` expert rule degrades to ``("data",)`` for 32 experts on a
+16×16 mesh).  MoE's expert-parallel dispatch mirrors the same fallback
+when choosing its all-to-all axes.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat  # noqa: F401  (jax.shard_map alias on old jax)
+
+Rules = Dict[str, Tuple[str, ...]]
+
+# (mesh, rules) stack — innermost context wins
+_ACTIVE: list = []
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+# logical axis -> preferred mesh axes (suffix-dropped per tensor if the
+# product does not divide the dim)
+_BASE_RULES: Dict[str, Tuple[str, ...]] = {
+    # activations
+    "batch": ("data",),
+    "seq": (),
+    "cache_seq": (),
+    "act_heads": ("model",),
+    # params
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "embed": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_ffn": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "q_lora": (),
+    "kv_lora": (),
+}
+
+
+def make_rules(kind: str = "train", multi_pod: bool = False,
+               batch_small: bool = False, **overrides) -> Rules:
+    """Rule table for a step kind ("train" | "prefill" | "decode").
+
+    ``batch_small``: global batch smaller than the data axis — don't shard
+    batch (decode_1 / long-context cells).  ``overrides`` replace entries
+    wholesale (value: mesh-axis name, tuple of names, or None).
+    """
+    rules = dict(_BASE_RULES)
+    if multi_pod:
+        rules["batch"] = ("pod", "data")
+    if kind == "decode":
+        # serving EP: experts spread over the whole mesh (1/chip at scale)
+        rules["experts"] = (("pod",) if multi_pod else ()) + ("data", "model")
+        rules["cache_seq"] = ()
+    if batch_small:
+        rules["batch"] = ()
+        if kind == "prefill":
+            rules["seq"] = ("data",)
+    for k, v in overrides.items():
+        if v is None:
+            rules[k] = ()
+        elif isinstance(v, str):
+            rules[k] = (v,)
+        else:
+            rules[k] = tuple(v)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# active context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    """Activate (mesh, rules) for shard()/active_mesh()/resolved_rule()."""
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE[-1][1] if _ACTIVE else None
+
+
+def resolved_rule(name: str) -> Tuple[str, ...]:
+    """Mesh axes the active rules assign to a logical axis (() if none or
+    no active mesh; axes missing from the mesh are dropped)."""
+    if not _ACTIVE:
+        return ()
+    mesh, rules = _ACTIVE[-1]
+    axes = rules.get(name, ())
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# spec resolution
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, a: str) -> int:
+    return mesh.devices.shape[list(mesh.axis_names).index(a)]
+
+
+def _fit_spec_to_shape(entries, shape, mesh: Mesh):
+    """Drop mesh axes (suffix-first per dim) until every sharded dim is
+    divisible and no mesh axis is used twice across the spec."""
+    used: set = set()
+    out = []
+    for i, ent in enumerate(entries):
+        ent = tuple(a for a in ent if a in mesh.axis_names
+                    and a not in used)
+        if shape is not None and i < len(shape):
+            while ent and shape[i] % int(
+                    np.prod([_axis_size(mesh, a) for a in ent])):
+                ent = ent[:-1]
+        used.update(ent)
+        out.append(ent)
+    return out
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules,
+                    mesh: Mesh, shape: Optional[Tuple[int, ...]] = None
+                    ) -> P:
+    """Resolve a tuple of logical axis names (None entries allowed) to a
+    PartitionSpec, applying the divisibility fallback when ``shape`` is
+    given."""
+    entries = []
+    for ax in axes:
+        ent = rules.get(ax, ()) if ax is not None else ()
+        if isinstance(ent, str):
+            ent = (ent,)
+        entries.append(tuple(ent))
+    entries = _fit_spec_to_shape(entries, shape, mesh)
+    return P(*[(e if len(e) > 1 else (e[0] if e else None))
+               for e in entries])
+
+
+def zero_shard_spec(axes: Sequence[Optional[str]], shape, mesh: Mesh,
+                    rules: Rules) -> P:
+    """ZeRO-style optimizer-state spec: the param spec plus the data axes
+    folded into the largest still-divisible dim (optimizer moments shard
+    over data *and* model)."""
+    base = logical_to_spec(axes, rules, mesh, shape=tuple(shape))
+    entries = [(() if e is None else ((e,) if isinstance(e, str)
+                                      else tuple(e)))
+               for e in base]
+    used = set(a for e in entries for a in e)
+    data_axes = [a for a in ("pod", "data") if a in mesh.axis_names
+                 and a not in used]
+    if data_axes and shape:
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for a in data_axes:
+            for i in order:
+                cur = int(np.prod([_axis_size(mesh, x)
+                                   for x in entries[i]])) if entries[i] \
+                    else 1
+                if shape[i] % (cur * _axis_size(mesh, a)) == 0:
+                    entries[i] = entries[i] + (a,)
+                    break
+    return P(*[(e if len(e) > 1 else (e[0] if e else None))
+               for e in entries])
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain an activation to the active rules' layout (no-op without
+    an active mesh).  ``axes`` are logical names, one per dim."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = logical_to_spec(axes, rules, mesh, shape=tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -65,16 +65,20 @@ class RRSWeights:
         self.m, self.k = w.shape
 
 
-def rrs_linear_fused(x: jnp.ndarray, weights: RRSWeights, *,
-                     reorder: bool = False,
-                     interpret: Optional[bool] = None,
-                     out_dtype=jnp.float32) -> jnp.ndarray:
-    """End-to-end integer RRS linear: the deployable serving path.
+def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
+                            w_scale: jnp.ndarray, m: int, group: int,
+                            rotate_block: int = 0,
+                            perm: Optional[jnp.ndarray] = None,
+                            interpret: Optional[bool] = None,
+                            out_dtype=jnp.float32) -> jnp.ndarray:
+    """End-to-end integer RRS linear from raw prepared fields — the seam
+    the method registry's ``exec_path == "kernel"`` apply plugs into
+    (fields are exactly what a ``PreparedLinear`` artifact carries).
 
-    x: (..., K) bf16/f32 activation. Note: `reorder` requires re-permuting
-    the packed weights per call; the paper's fused pipeline uses rotation +
-    grouped scales and reserves reorder for the RS-only mode, so the fused
-    default is reorder=False (rotation already homogenizes the scales).
+    x: (..., K) bf16/f32 activation.  ``perm`` is an optional FROZEN
+    channel permutation already folded into the packed weights (static
+    reorder): the runtime cost is one activation gather; the smoothing
+    *scales* stay runtime (the paper's key property).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -89,27 +93,40 @@ def rrs_linear_fused(x: jnp.ndarray, weights: RRSWeights, *,
         x2 = jnp.concatenate(
             [x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
     # 1. online rotation
-    if weights.rotate_block in (0, k) and not (k & (k - 1)):
+    if rotate_block in (0, k) and not (k & (k - 1)):
         x_rot = fwht_rotate(x2.astype(jnp.float32), bn=bn,
                             interpret=interpret)
     else:
         x_rot = hadamard.rotate(x2.astype(jnp.float32),
-                                block=weights.rotate_block)
-    if weights.perm is not None:
-        x_rot = jnp.take(x_rot, weights.perm, axis=-1)
+                                block=rotate_block)
+    if perm is not None:
+        x_rot = jnp.take(x_rot, perm, axis=-1)
     # 2. runtime smoothing scales (channel absmax -> group max)
     s = smooth.runtime_scales(x_rot)
-    s_g = smooth.group_smooth_scales(s, weights.group)
+    s_g = smooth.group_smooth_scales(s, group)
     # 3. fused smooth+quantize
     x_q, a_scale = act_smooth_quant(x_rot, s_g, bn=bn, interpret=interpret)
     # 4. fused int4 GEMM with runtime scales in the epilogue chain
-    bm = 128 if weights.m % 128 == 0 else _largest_div_pow2(weights.m, 128)
-    y = rrs_gemm(x_q, weights.w_packed, s_g, a_scale, weights.w_scale,
-                 bn=bn, bm=bm, bk=weights.group, out_dtype=out_dtype,
+    bm = 128 if m % 128 == 0 else _largest_div_pow2(m, 128)
+    y = rrs_gemm(x_q, w_packed, s_g, a_scale, w_scale,
+                 bn=bn, bm=bm, bk=group, out_dtype=out_dtype,
                  interpret=interpret)
     if pad:
         y = y[:n]
-    return y.reshape(*lead, weights.m)
+    return y.reshape(*lead, m)
+
+
+def rrs_linear_fused(x: jnp.ndarray, weights: RRSWeights, *,
+                     reorder: bool = False,
+                     interpret: Optional[bool] = None,
+                     out_dtype=jnp.float32) -> jnp.ndarray:
+    """RRSWeights-object convenience wrapper over
+    :func:`rrs_linear_fused_fields` (the deployable serving path)."""
+    return rrs_linear_fused_fields(
+        x, w_packed=weights.w_packed, w_scale=weights.w_scale,
+        m=weights.m, group=weights.group,
+        rotate_block=weights.rotate_block, perm=weights.perm,
+        interpret=interpret, out_dtype=out_dtype)
 
 
 def _pow2_floor(n: int) -> int:

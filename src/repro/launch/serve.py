@@ -13,12 +13,12 @@ import time
 
 
 def main():
+    from repro.core.methods import available_methods
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--method", default="rrs",
-                    choices=["none", "rtn", "smoothquant", "rs", "quarot",
-                             "rrs"])
+                    choices=list(available_methods()))
     ap.add_argument("--scheme", default="A4W4KV4",
                     choices=["A4W4KV4", "A4W4KV16", "A4W16KV16",
                              "A8W8KV8"])

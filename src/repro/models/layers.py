@@ -2,24 +2,35 @@
 
 Functional style: every layer is (init → params dict + axes dict,
 apply → jnp).  Quantized execution goes through :func:`qlinear`, which
-dispatches on QuantConfig.method — this is where the paper's RRS plugs into
-every projector of every architecture ("plug-and-play activation smoother").
+resolves QuantConfig.method in the :mod:`repro.core.methods` registry and
+runs that method's online ``apply`` — this is where the paper's RRS (and
+any registered third-party smoother) plugs into every projector of every
+architecture ("plug-and-play activation smoother") without qlinear
+knowing a single method by name.
+
+``qlinear`` accepts the weight in three forms:
+  * a :class:`~repro.core.methods.PreparedLinear` artifact (serving:
+    produced offline by ``serve.prepare.prepare_params``) — only the
+    method's online ops run;
+  * a raw array with ``prepared=True`` — the offline half was applied
+    elsewhere (the dry-run lowers abstract raw-shaped params this way);
+  * a raw array with ``prepared=False`` — the offline half is traced
+    inline (training-time fake-quant evaluation).
 
 Weight layout convention: all linear weights are stored (out_features,
 in_features) = (M, K), matching the paper's ``Y = X Wᵀ``.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, QuantConfig
-from repro.core import hadamard, quant, smooth
+from repro.core import methods, quant
 from repro.dist.sharding import shard
 
 
@@ -66,58 +77,36 @@ def embed_init(key, v: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
 # quantized linear — THE integration point of the paper
 # ---------------------------------------------------------------------------
 
-def qlinear(x: jnp.ndarray, w: jnp.ndarray, qcfg: QuantConfig,
+def qlinear(x: jnp.ndarray, w, qcfg: QuantConfig,
             prepared: bool = False, quantize: bool = True) -> jnp.ndarray:
     """Quantized linear y = x @ wᵀ with the configured smoothing method.
 
-    prepared=True means `w` was already rotated (+fake-quantized) offline by
-    ``repro.serve.prepare.prepare_params`` — serving fast path; only the
-    ONLINE ops run here (rotate x → runtime smooth → act quant → matmul).
-
-    quantize=False routes around quantization entirely (router logits,
-    embeddings, tiny heads — per paper §3.3 only Linear layers in
-    transformer blocks are quantized).
+    All method behavior comes from the registry: ``qlinear`` only decides
+    which lifecycle phase to run (see the module docstring for the three
+    weight forms).  quantize=False routes around quantization entirely
+    (router logits, embeddings, tiny heads — per paper §3.3 only Linear
+    layers in transformer blocks are quantized).
     """
-    if not quantize or qcfg.method == "none" or not qcfg.quantize_acts:
-        if not quantize or not qcfg.quantize_weights or not prepared:
-            return x @ w.T.astype(x.dtype)
-        return x @ w.T.astype(x.dtype)  # weight already fake-quantized
-
-    k = x.shape[-1]
-    if qcfg.method == "smoothquant" and not prepared:
-        # best-case SmoothQuant: calibration == live batch (no mismatch);
-        # the paper's A4W4 failure persists anyway because the migrated
-        # outliers make W unquantizable (§2.2) — reproduced here.
-        ax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)),
-                                 axis=tuple(range(x.ndim - 1))), 1e-6)
-        aw = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0),
-                         1e-6)
-        s = jnp.sqrt(ax) / jnp.sqrt(aw)
-        x = (x.astype(jnp.float32) / s).astype(x.dtype)
-        w = (w.astype(jnp.float32) * s).astype(jnp.float32)
-    if qcfg.uses_rotation:
-        block = hadamard.pick_rotate_block(k, qcfg.rotate_block)
-        x = hadamard.rotate(x, block=block)
-        if not prepared:
-            w = hadamard.rotate_weight_in(w, block=block)
-    if not prepared and qcfg.quantize_weights:
-        w = quant.fake_quant_per_channel(w, qcfg.w_bits, axis=-1)
-
-    if qcfg.uses_runtime_smooth:
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, k)
-        g = qcfg.group_size if k % qcfg.group_size == 0 else 1
-        x_sm, sg, perm = smooth.smooth(x2, group=g,
-                                       reorder=qcfg.reorder and g > 1)
-        x_dq = quant.fake_quant_per_channel(x_sm, qcfg.a_bits, axis=-1)
-        wq = w if perm is None else jnp.take(w, perm, axis=-1)
-        expand = jnp.repeat(sg, g) if g > 1 else sg
-        y = (x_dq.astype(jnp.float32) * expand) @ wq.astype(jnp.float32).T
-        return y.reshape(*lead, w.shape[0]).astype(x.dtype)
-
-    # rtn / gptq / quarot / smoothquant online part: plain per-token QDQ
-    x_dq = quant.fake_quant_per_channel(x, qcfg.a_bits, axis=-1)
-    return x_dq @ w.T.astype(x_dq.dtype)
+    if isinstance(w, methods.PreparedLinear):
+        if not quantize:
+            return x @ w.w_dq.T.astype(x.dtype)
+        return methods.get_method(qcfg.method).apply(x, w, qcfg)
+    if not quantize or (not qcfg.quantize_acts and not prepared):
+        # fp path / unprepared weight-only: weights are only ever
+        # quantized offline, so the training-time fake-quant evaluation
+        # of an A16Wn scheme is a plain matmul
+        return x @ w.T.astype(x.dtype)
+    method = methods.get_method(qcfg.method)
+    if prepared:
+        # raw array whose offline half ran elsewhere (dry-run lowering)
+        pl = methods.offline_prepared(w, qcfg)
+    else:
+        # trace the offline half inline; live_calib methods (SmoothQuant)
+        # calibrate on the live batch — best-case, no mismatch; the
+        # paper's A4W4 failure persists anyway (§2.2)
+        calib = x.reshape(-1, x.shape[-1]) if method.live_calib else None
+        pl = method.prepare_weight(w, qcfg, calib_x=calib)
+    return method.apply(x, pl, qcfg)
 
 
 # ---------------------------------------------------------------------------

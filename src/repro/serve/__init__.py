@@ -1,3 +1,5 @@
-"""Serving: offline weight preparation (RRS) + wave-batched engine."""
+"""Serving: offline weight preparation (method registry) + wave-batched
+engine + prepared-artifact save/load."""
 from repro.serve.engine import Request, ServingEngine
-from repro.serve.prepare import prepare_params
+from repro.serve.prepare import (load_prepared, prepare_params,
+                                 save_prepared)

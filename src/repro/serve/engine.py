@@ -20,16 +20,17 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, QuantConfig
+from repro.configs.base import QuantConfig
+from repro.core import methods
 from repro.data import tokenizer as tok
 from repro.models.model_factory import Model
-from repro.serve.prepare import prepare_params
+from repro.serve.prepare import load_prepared, prepare_params
 
 
 @dataclasses.dataclass
@@ -49,20 +50,36 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, qcfg: QuantConfig,
                  max_batch: int = 4, max_len: int = 512,
-                 prepare: bool = True):
+                 prepare: bool = True, calib=None):
+        """``params`` may be raw weights (prepared here when ``prepare``)
+        or an already-prepared tree (PreparedLinear leaves, e.g. from
+        :func:`~repro.serve.prepare.load_prepared` — detected, never
+        re-prepared).  ``calib`` is forwarded to ``prepare_params`` to
+        enable GPTQ weights / static reorder at engine construction."""
         self.model = model
         self.cfg = model.cfg
         self.qcfg = qcfg
-        self.params = prepare_params(params, qcfg) if prepare else params
+        already = methods.tree_has_prepared(params)
+        self.params = (prepare_params(params, qcfg, calib=calib)
+                       if prepare and not already else params)
         self.max_batch = max_batch
         self.max_len = max_len
         self.queue: List[Request] = []
         self._rid = 0
-        self._prepared = prepare
+        self._prepared = prepare or already
+        prepared = self._prepared
         self._decode = jax.jit(
-            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepare))
+            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepared))
         self._prefill = jax.jit(
-            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepare))
+            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepared))
+
+    @classmethod
+    def from_artifact(cls, model: Model, path: str,
+                      **kw) -> "ServingEngine":
+        """Serve from a ``save_prepared`` artifact: weights were prepared
+        once offline; only the online half runs per request."""
+        prepared, qcfg = load_prepared(path)
+        return cls(model, prepared, qcfg, prepare=False, **kw)
 
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
@@ -139,4 +156,4 @@ def _sample(logits: jnp.ndarray, temperature: float, seed: int) -> int:
     return int(jnp.argmax(logits / temperature + g))
 
 
-__all__ = ["ServingEngine", "Request", "prepare_params"]
+__all__ = ["ServingEngine", "Request", "prepare_params", "load_prepared"]

