@@ -1,0 +1,105 @@
+"""Serving throughput: wave vs continuous slot-level scheduling.
+
+A mixed-prompt-length, staggered-budget request queue is served twice by
+the SAME model/weights/step graphs — once under the legacy wave policy
+(equal-length gangs, admitted only when all slots drain: head-of-line
+blocking) and once under continuous slot batching (slots reclaimed and
+refilled the step a request finishes).  Both runs are repeated once
+untimed to amortize jit compilation, then timed; tokens/s and scheduler
+step counts land in ``benchmarks/results/serve_throughput.json`` so the
+BENCH trajectory records serving performance.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from benchmarks.common import emit
+
+
+def build_queue(engine: ServingEngine, n_requests: int, seed: int = 0):
+    """Mixed prompt lengths + staggered budgets — the anti-wave workload:
+    no two adjacent requests share a length, so wave batching degrades to
+    small gangs while slots stay full."""
+    lengths = [4, 7, 10, 13]
+    budgets = [8, 24, 40]     # coprime cycles: a wave gang (one length)
+    for i in range(n_requests):   # spans budgets, so its slots drain idle
+        prompt = [1 + (seed + i * 37 + j) % 200
+                  for j in range(lengths[i % len(lengths)])]
+        engine.submit(prompt, max_new_tokens=budgets[i % len(budgets)])
+
+
+def run_sched(model, params, qcfg, scheduler, n_requests, max_batch,
+              max_len):
+    # ONE engine for warmup + timed run: the jitted step/sample/reset
+    # graphs live on the engine, so the untimed pass compiles every
+    # shape this workload needs and the timed pass measures scheduling,
+    # not compilation
+    eng = ServingEngine(model, params, qcfg, max_batch=max_batch,
+                        max_len=max_len, prepare=False,
+                        scheduler=scheduler)
+    build_queue(eng, n_requests)
+    eng.run()                     # untimed warmup
+    eng.stats = dict.fromkeys(eng.stats, 0)
+    build_queue(eng, n_requests)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    st = eng.stats
+    steps = st["prefill_steps"] + st["decode_steps"]
+    return {
+        "name": f"serve_{scheduler}",
+        "scheduler": scheduler,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(dt, 4),
+        "tok_s": round(toks / dt, 2),
+        "prefill_steps": st["prefill_steps"],
+        "decode_steps": st["decode_steps"],
+        # batch-occupancy of decode steps: generated tokens per decode
+        "decode_occupancy": round(st["slot_steps"]
+                                  / max(st["decode_steps"], 1), 3),
+    }
+
+
+def run(quick: bool = False):
+    cfg = ModelConfig(name="serve-bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=384, vocab_size=260,
+                      max_seq_len=512)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+    from repro.serve.prepare import prepare_params
+    prepped = prepare_params(params, qcfg)
+
+    n_requests = 8 if quick else 16
+    rows = []
+    for sched in ("wave", "continuous"):
+        rows.append(run_sched(model, prepped, qcfg, sched, n_requests,
+                              max_batch=4, max_len=128))
+        print(f"{sched}: {rows[-1]['tok_s']} tok/s "
+              f"({rows[-1]['decode_steps']} decode steps, "
+              f"occupancy {rows[-1]['decode_occupancy']})")
+    wave, cont = rows
+    rows.append({
+        "name": "serve_speedup",
+        "continuous_over_wave_tok_s": round(cont["tok_s"] / wave["tok_s"],
+                                            3),
+        "decode_step_reduction": round(
+            1.0 - cont["decode_steps"] / max(wave["decode_steps"], 1), 3),
+    })
+    emit(rows, "serve_throughput")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

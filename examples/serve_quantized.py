@@ -1,7 +1,9 @@
-"""Serving driver (deliverable b): batched INT4-RRS serving with the wave
-engine — offline weight preparation through the QuantMethod registry
-(rotate + quantize), prepared-artifact save/load, quantized KV cache,
-prefill + decode, throughput stats.
+"""Serving driver (deliverable b): batched INT4-RRS serving with the
+continuous slot-batching engine — offline weight preparation through the
+QuantMethod registry (rotate + quantize), prepared-artifact save/load,
+quantized KV cache, masked left-padded prefill + slot decode (the
+mixed-length PROMPTS below are admitted the moment a slot frees, no
+length bucketing), throughput stats.
 
 Flow: prepare once offline → ``save_prepared`` to disk → boot a second
 engine with ``ServingEngine.from_artifact`` (no re-preparation) → verify
@@ -54,7 +56,8 @@ def main():
     engine = ServingEngine(model, params, qcfg, max_batch=4, max_len=256)
     done, total, dt = run_engine(engine, args.requests, args.new_tokens)
     print(f"served {len(done)} requests / {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, A4W4KV4 RRS)")
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, A4W4KV4 RRS, "
+          f"{engine.stats['decode_steps']} decode steps)")
     for r in done[:3]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens -> "
               f"{r.text[:48]!r}")

@@ -3,6 +3,12 @@
 Applied along the head_dim axis of K and V tensors.  Beyond-paper: the same
 scheme is reused for the DeepSeek MLA latent cache (rank axis) and for
 Mamba2 SSM state snapshots (state axis) — flagged in DESIGN.md §8.5.
+
+:func:`scatter_rows` is the per-row cache-write primitive shared by every
+cached attention family (fp, fake-quant and int8-at-rest codes+scales):
+each batch row lands at its OWN sequence index, which is what lets the
+serving engine run continuous slot-level batching (mixed-progress rows in
+one decode graph) instead of a shared scalar position per layer.
 """
 from __future__ import annotations
 
@@ -12,6 +18,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+
+
+def scatter_rows(cache_arr: jnp.ndarray, fresh: jnp.ndarray,
+                 idx: jnp.ndarray) -> jnp.ndarray:
+    """Write ``fresh`` into ``cache_arr`` at per-row sequence indices.
+
+    cache_arr: (B, C, ...); fresh: (B, S, ...) with matching trailing dims;
+    idx: (B, S) int32 target index along the C axis for every fresh entry.
+    Entries with ``idx >= C`` (or < 0) are DROPPED — callers route padding
+    / inactive-row writes to ``C`` so a left-padded prefill or a finished
+    slot leaves the cache row untouched.
+    """
+    rows = jnp.arange(cache_arr.shape[0])[:, None]
+    return cache_arr.at[rows, idx].set(fresh.astype(cache_arr.dtype),
+                                       mode="drop")
 
 
 class QuantizedKV(NamedTuple):

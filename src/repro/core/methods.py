@@ -279,6 +279,19 @@ class QuantMethod:
         g = cfg.group_size
         return g if (g > 0 and k % g == 0) else 1
 
+    def _apply_kernel(self, x, prepared, cfg):
+        """Fused integer Pallas pipeline (``cfg.exec_path == "kernel"``):
+        [rotate →] runtime-smooth → quantize → int4 GEMM.  Shared by every
+        runtime-smooth method; ``prepared.rotated`` selects the identity-
+        rotation branch (plain "rs") vs the FWHT one ("rrs")."""
+        from repro.kernels import ops as kops
+        y = kops.rrs_linear_fused_fields(
+            x, w_packed=prepared.w_packed,
+            w_scale=prepared.w_scale, m=prepared.w_dq.shape[0],
+            group=prepared.group, rotate_block=prepared.rotate_block,
+            rotate=prepared.rotated, perm=prepared.perm)
+        return y.astype(x.dtype)
+
     def _smooth_gemm(self, x, prepared, cfg):
         """Runtime-smooth fake-quant GEMM (paper Eq. 3 / Fig. 4): exactly
         ``smooth.rs_gemm_fakequant`` but artifact-aware (frozen perm from
@@ -358,10 +371,18 @@ class SmoothQuant(QuantMethod):
 
 @register_method("rs")
 class RuntimeSmooth(QuantMethod):
-    """Paper §3.1-3.2: per-group runtime smoothing scales, no rotation."""
+    """Paper §3.1-3.2: per-group runtime smoothing scales, no rotation.
+
+    ``cfg.exec_path == "kernel"`` routes through the same fused integer
+    Pallas pipeline as RRS via the identity-rotation branch (weights were
+    packed unrotated, step 1 is skipped online); "fake" runs the QDQ
+    float path.
+    """
     uses_runtime_smooth = True
 
     def _apply_quant(self, x, prepared, cfg):
+        if cfg.exec_path == "kernel" and prepared.w_packed is not None:
+            return self._apply_kernel(x, prepared, cfg)
         return self._smooth_gemm(x, prepared, cfg)
 
 
@@ -393,15 +414,6 @@ class RotatedRuntimeSmooth(QuantMethod):
             return self._apply_kernel(x, prepared, cfg)
         x_rot = hadamard.rotate(x, block=prepared.rotate_block)
         return self._smooth_gemm(x_rot, prepared, cfg)
-
-    def _apply_kernel(self, x, prepared, cfg):
-        from repro.kernels import ops as kops
-        y = kops.rrs_linear_fused_fields(
-            x, w_packed=prepared.w_packed,
-            w_scale=prepared.w_scale, m=prepared.w_dq.shape[0],
-            group=prepared.group, rotate_block=prepared.rotate_block,
-            perm=prepared.perm)
-        return y.astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

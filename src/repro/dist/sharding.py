@@ -189,6 +189,21 @@ def zero_shard_spec(axes: Sequence[Optional[str]], shape, mesh: Mesh,
                for e in entries])
 
 
+def batch_dim_of_spec(spec: Sequence) -> int:
+    """Index of the logical ``"batch"`` axis in a cache-leaf PartitionSpec.
+
+    Every KV/state-cache leaf declares exactly one per-request (batch/slot)
+    dim in its axes spec — per-row positions, ring ``kpos`` and SSM states
+    included.  The serving engine's slot scheduler uses this to reset or
+    refill ONE row of an arbitrary cache pytree (any family) without
+    knowing its layout; raises if the spec names no batch dim.
+    """
+    for i, ent in enumerate(spec):
+        if ent == "batch" or (isinstance(ent, tuple) and "batch" in ent):
+            return i
+    raise ValueError(f"no 'batch' axis in spec {spec!r}")
+
+
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """Constrain an activation to the active rules' layout (no-op without
     an active mesh).  ``axes`` are logical names, one per dim."""

@@ -68,6 +68,7 @@ class RRSWeights:
 def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
                             w_scale: jnp.ndarray, m: int, group: int,
                             rotate_block: int = 0,
+                            rotate: bool = True,
                             perm: Optional[jnp.ndarray] = None,
                             interpret: Optional[bool] = None,
                             out_dtype=jnp.float32) -> jnp.ndarray:
@@ -75,10 +76,13 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
     the method registry's ``exec_path == "kernel"`` apply plugs into
     (fields are exactly what a ``PreparedLinear`` artifact carries).
 
-    x: (..., K) bf16/f32 activation.  ``perm`` is an optional FROZEN
-    channel permutation already folded into the packed weights (static
-    reorder): the runtime cost is one activation gather; the smoothing
-    *scales* stay runtime (the paper's key property).
+    x: (..., K) bf16/f32 activation.  ``rotate=False`` is the identity-
+    rotation branch: the plain Runtime Smooth method ("rs", no FWHT)
+    reuses the same fused smooth-quantize + int4 GEMM pipeline, skipping
+    step 1.  ``perm`` is an optional FROZEN channel permutation already
+    folded into the packed weights (static reorder): the runtime cost is
+    one activation gather; the smoothing *scales* stay runtime (the
+    paper's key property).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -92,8 +96,10 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
     if pad:
         x2 = jnp.concatenate(
             [x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
-    # 1. online rotation
-    if rotate_block in (0, k) and not (k & (k - 1)):
+    # 1. online rotation (identity for "rs")
+    if not rotate:
+        x_rot = x2.astype(jnp.float32)
+    elif rotate_block in (0, k) and not (k & (k - 1)):
         x_rot = fwht_rotate(x2.astype(jnp.float32), bn=bn,
                             interpret=interpret)
     else:

@@ -1,11 +1,14 @@
-"""Production serving launcher: INT4-RRS quantized wave-batched serving.
+"""Production serving launcher: INT4-RRS quantized serving with
+continuous slot-level batching (``--scheduler wave`` keeps the legacy
+gang-scheduled reference for A/B runs).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --smoke --method rrs --scheme A4W4KV4 --requests 8
 
 Loads (or randomly initializes) weights, prepares them offline
-(rotate + quantize), starts the engine, runs a synthetic request stream
-and prints throughput.  ``--ckpt`` restores trained params saved by
+(rotate + quantize), starts the engine, runs a synthetic MIXED-LENGTH
+request stream (admitted per slot, no length bucketing) and prints
+throughput.  ``--ckpt`` restores trained params saved by
 ``repro.launch.train``.
 """
 import argparse
@@ -27,6 +30,8 @@ def main():
                     choices=["fake", "int8"])
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "wave"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--ckpt", default=None)
@@ -63,7 +68,8 @@ def main():
                        group_size=args.group_size,
                        kv_storage=args.kv_storage)
     engine = ServingEngine(model, params, qcfg, max_batch=args.max_batch,
-                           max_len=args.max_len)
+                           max_len=args.max_len,
+                           scheduler=args.scheduler)
     prompts = ["the quick brown fox jumps", "one two three four",
                "a quantized model serves", "hello world again"]
     for i in range(args.requests):
@@ -73,8 +79,12 @@ def main():
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"{args.scheme}/{args.method}: {len(done)} requests, "
-          f"{toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s")
+    st = engine.stats
+    print(f"{args.scheme}/{args.method}/{args.scheduler}: "
+          f"{len(done)} requests, "
+          f"{toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s "
+          f"({st['prefill_steps']} prefills, {st['decode_steps']} decode "
+          f"steps)")
 
 
 if __name__ == "__main__":

@@ -77,18 +77,20 @@ def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
     return params, axes
 
 
-def _shared_apply(sp, x, cfg, qcfg, prepared, positions, cache=None):
+def _shared_apply(sp, x, cfg, qcfg, prepared, positions, cache=None,
+                  offsets=None):
     h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
     out, nc = L.gqa_apply(sp["attn"], h, cfg, qcfg, prepared, positions,
                           cache=cache, kv_quant_bits=qcfg.kv_bits,
-                          kv_group=qcfg.kv_group_size)
+                          kv_group=qcfg.kv_group_size, offsets=offsets)
     x = x + out
     h2 = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
     x = x + L.mlp_apply(sp["mlp"], h2, qcfg, prepared)
     return x, nc
 
 
-def _run(cfg, params, x, qcfg, prepared, positions, caches=None):
+def _run(cfg, params, x, qcfg, prepared, positions, caches=None,
+         offsets=None, valid=None):
     g, n_groups, tail = _split(cfg)
     sp = params["shared"]
     new_caches = {} if caches is not None else None
@@ -103,7 +105,7 @@ def _run(cfg, params, x, qcfg, prepared, positions, caches=None):
         lp, lc = inputs
         h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
         out, nc = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared,
-                                 cache=lc)
+                                 cache=lc, valid=valid)
         return xx + out, nc
 
     def group_body(carry, inputs):
@@ -116,7 +118,7 @@ def _run(cfg, params, x, qcfg, prepared, positions, caches=None):
         mg, (mc, ac) = inputs
         xx, nmc = jax.lax.scan(mamba_body, xx, (mg, mc))
         xx, nac = _shared_apply(sp, xx, cfg, qcfg, prepared, positions,
-                                cache=ac)
+                                cache=ac, offsets=offsets)
         return xx, (nmc, nac)
 
     if caches is None:
@@ -159,9 +161,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     pusha = lambda t: jax.tree.map(lambda s: P(*((None,) + tuple(s))), t)
     attn_c = {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
               "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
-              "pos": jnp.zeros((), jnp.int32)}
+              "pos": jnp.zeros((batch,), jnp.int32)}
     attn_a = {"k": P("batch", "cache_seq", None, None),
-              "v": P("batch", "cache_seq", None, None), "pos": P()}
+              "v": P("batch", "cache_seq", None, None), "pos": P("batch")}
     caches = {
         "mamba": jax.tree.map(
             lambda x: jnp.zeros((n_groups, g) + x.shape, x.dtype), mc),
@@ -179,13 +181,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                     caches: Dict, qcfg: QuantConfig, prepared: bool = False,
-                    patches=None, last_only: bool = True):
+                    patches=None, last_only: bool = True, offsets=None):
+    """``offsets`` (B,): per-row left-pad counts (slot-serving contract) —
+    threaded to both halves: attention masks pads per row, the Mamba2
+    blocks freeze their recurrent state through them."""
+    b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
+    if offsets is not None:
+        offsets = jnp.asarray(offsets, jnp.int32)
+    valid = L.pad_valid_mask(s, offsets)
+    if valid is not None:
+        x = x * valid[..., None].astype(x.dtype)
     x = shard(x, "batch", "seq", None)
-    pos0 = caches["attn"]["pos"].reshape(-1)[0]
-    positions = jnp.arange(tokens.shape[1]) + pos0
+    pos0 = caches["attn"]["pos"].reshape(-1, b)[0]          # (B,)
+    positions = jnp.maximum(L.row_positions(pos0, s, offsets), 0)
     x, new_caches = _run(cfg, params, x, qcfg, prepared, positions,
-                         caches=caches)
+                         caches=caches, offsets=offsets, valid=valid)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if last_only and x.shape[1] > 1:
         x = x[:, -1:]

@@ -306,15 +306,104 @@ def gqa_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
     return params, axes
 
 
+def row_positions(pos: jnp.ndarray, s: int,
+                  offsets: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Per-row absolute positions (B, S) of a left-padded token block.
+
+    ``pos`` (B,) is each row's count of tokens already in its cache;
+    ``offsets`` (B,) the number of left-pad tokens heading the block
+    (None → 0).  Pad entries come out < pos — negative for a fresh row —
+    and are masked/dropped everywhere downstream.
+    """
+    ar = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if offsets is None:
+        return pos[:, None] + ar
+    return pos[:, None] + ar - offsets.astype(jnp.int32)[:, None]
+
+
+def pad_valid_mask(s: int, offsets: Optional[jnp.ndarray]
+                   ) -> Optional[jnp.ndarray]:
+    """(B, S) bool mask of the REAL (non-left-pad) tokens of a block, or
+    None when ``offsets`` is None.  Families zero the pad embeddings with
+    it (and the SSM path freezes state through it, see mamba2_apply)."""
+    if offsets is None:
+        return None
+    return (jnp.arange(s, dtype=jnp.int32)[None, :]
+            >= jnp.asarray(offsets, jnp.int32)[:, None])
+
+
+def advance_pos(pos: jnp.ndarray, s: int,
+                offsets: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """New per-row positions after consuming a left-padded block: each
+    row advances by its count of real tokens only."""
+    if offsets is None:
+        return pos + s
+    return pos + s - offsets.astype(jnp.int32)
+
+
+def _pad_block_bias(qpos: jnp.ndarray, valid_q: jnp.ndarray,
+                    window: int) -> jnp.ndarray:
+    """(B, 1, S, S) additive mask for attending a left-padded FRESH block:
+    causal over each row's own absolute positions, pads excluded as keys."""
+    kq = qpos[:, None, :]                                  # (B, 1, S)
+    m = (kq <= qpos[:, :, None]) & valid_q[:, None, :]
+    if window > 0:
+        m = m & (kq > qpos[:, :, None] - window)
+    return jnp.where(m, 0.0, NEG_INF)[:, None]
+
+
+def _cache_bias(qpos: jnp.ndarray, kpos: jnp.ndarray,
+                window: int) -> jnp.ndarray:
+    """(B, 1, S, C) additive mask for attending the cache: slot holding
+    absolute position kpos is visible to query at qpos iff kpos <= qpos
+    (and inside the sliding window).  kpos: (B, C) ring positions (-1 =
+    empty slot) or (1, C) arange for linear caches — per ROW, so rows at
+    different decode progress coexist in one step."""
+    kk = kpos[:, None, :]                                  # (B|1, 1, C)
+    m = (kk <= qpos[:, :, None]) & (kk >= 0)
+    if window > 0:
+        m = m & (kk > qpos[:, :, None] - window)
+    return jnp.where(m, 0.0, NEG_INF)[:, None]
+
+
+def _fresh_block_attn(q, k, v, cfg: ModelConfig, offsets, qpos, valid_q,
+                      causal: bool) -> jnp.ndarray:
+    """Prefill attention answered from the fresh K/V block (slots prefill
+    from pos=0, so window ∩ causal context lives entirely in the block).
+    Without offsets the block is homogeneous: flash-chunked for long
+    prompts, no (S, S) bias materialization."""
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    kk = _repeat_kv(k, h // kvh)
+    vv = _repeat_kv(v, h // kvh)
+    if offsets is None:
+        s = q.shape[1]
+        if s >= 2048:
+            return attention_chunked(q, kk, vv, causal=causal,
+                                     window=cfg.sliding_window)
+        return attention_dense(q, kk, vv, causal=causal,
+                               window=cfg.sliding_window)
+    bias = _pad_block_bias(qpos, valid_q, cfg.sliding_window)
+    return attention_dense(q, kk, vv, causal=False, bias=bias)
+
+
 def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
               prepared: bool, positions: jnp.ndarray,
               cache: Optional[Dict] = None,
               kv_quant_bits: int = 16, kv_group: int = 128,
               use_rope: bool = True, causal: bool = True,
+              offsets: Optional[jnp.ndarray] = None,
               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self-attention with GQA + optional KV cache (decode) + KV quant.
 
-    cache: {"k": (B, Smax, KVH, D), "v": ..., "pos": scalar} or None.
+    cache: {"k": (B, Smax, KVH, D), "v": ..., "pos": (B,)} or None; the
+    sliding-window ring variant adds "kpos": (B, Smax) absolute positions
+    (-1 = empty).  Positions, cache writes and attention masks are all
+    PER ROW: ``offsets`` (B,) counts left-pad tokens heading each row of
+    this call's token block — padded entries are masked out of attention,
+    never written to the cache, and do not advance that row's position (a
+    fully-padded row is a frozen slot).  This is the contract continuous
+    slot-level batching runs on: one decode graph serves rows at mixed
+    progress.
     """
     from repro.core import kvquant
     b, s, d = x.shape
@@ -333,23 +422,22 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         # decode dequantizes on read — HBM traffic ≈ half of bf16.
         pos = cache["pos"]
         smax = cache["k"].shape[1]
+        qpos = row_positions(pos, s, offsets)
+        valid_q = qpos >= pos[:, None]
+        idx = jnp.where(valid_q, qpos, smax)       # smax => dropped write
         kq, ks = quant.quantize_per_channel(
             k.astype(jnp.float32), min(kv_quant_bits, 8), axis=-1)
         vq, vs = quant.quantize_per_channel(
             v.astype(jnp.float32), min(kv_quant_bits, 8), axis=-1)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, 1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
-                                                  pos, 1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
-                                                  pos, 1)
+        ck = kvquant.scatter_rows(cache["k"], kq, idx)
+        cv = kvquant.scatter_rows(cache["v"], vq, idx)
+        cks = kvquant.scatter_rows(cache["k_scale"], ks, idx)
+        cvs = kvquant.scatter_rows(cache["v_scale"], vs, idx)
         new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
-                     "pos": pos + s}
+                     "pos": advance_pos(pos, s, offsets)}
         if s > 1:
-            kk = _repeat_kv(k, h // kvh)
-            vv = _repeat_kv(v, h // kvh)
-            out = (attention_chunked if s >= 2048 else attention_dense)(
-                q, kk, vv, causal=causal, window=cfg.sliding_window)
+            out = _fresh_block_attn(q, k, v, cfg, offsets, qpos, valid_q,
+                                    causal)
             out = out.reshape(b, s, h * hd)
             return qlinear(out, p["wo"], qcfg, prepared), new_cache
         kk = (ck.astype(x.dtype) * cks.astype(x.dtype))
@@ -358,73 +446,42 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         vv = shard(vv, "batch", "cache_seq", None, None)
         kk = _repeat_kv(kk, h // kvh)
         vv = _repeat_kv(vv, h // kvh)
-        qpos = (jnp.arange(s) + pos)[:, None]
-        valid = jnp.arange(smax)[None, :] < (pos + s)
-        bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
-        out = attention_dense(q, kk, vv, causal=True,
-                              window=cfg.sliding_window,
-                              q_offset=pos, bias=bias)
+        bias = _cache_bias(qpos, jnp.arange(smax, dtype=jnp.int32)[None, :],
+                           cfg.sliding_window)
+        out = attention_dense(q, kk, vv, causal=False, bias=bias)
         out = out.reshape(b, s, h * hd)
         return qlinear(out, p["wo"], qcfg, prepared), new_cache
 
     if cache is not None:
-        pos = cache["pos"]
+        pos = cache["pos"]                          # (B,) per-row
         smax = cache["k"].shape[1]
         ring = "kpos" in cache          # sliding-window ring buffer
-        if ring and s > 1:
-            # SWA prefill: answer from the fresh K/V (exact windowed attn),
-            # scatter the last `smax` tokens into the ring for later decode.
-            keep = min(s, smax)
-            pos_abs = pos + s - keep + jnp.arange(keep, dtype=jnp.int32)
-            slots = pos_abs % smax
-            ck = cache["k"].at[:, slots].set(
-                k[:, -keep:].astype(cache["k"].dtype))
-            cv = cache["v"].at[:, slots].set(
-                v[:, -keep:].astype(cache["v"].dtype))
-            kpos = cache["kpos"].at[slots].set(pos_abs)
-            new_cache = {"k": ck, "v": cv, "pos": pos + s, "kpos": kpos}
-            kk = _repeat_kv(k, h // kvh)
-            vv = _repeat_kv(v, h // kvh)
-            if s >= 2048:
-                out = attention_chunked(q, kk, vv, causal=True,
-                                        window=cfg.sliding_window)
-            else:
-                out = attention_dense(q, kk, vv, causal=True,
-                                      window=cfg.sliding_window,
-                                      q_offset=0)
-            out = out.reshape(b, s, h * hd)
-            return qlinear(out, p["wo"], qcfg, prepared), new_cache
+        qpos = row_positions(pos, s, offsets)
+        valid_q = qpos >= pos[:, None]
+        new_pos = advance_pos(pos, s, offsets)
         if ring:
-            # decode: write the new token at slot pos % smax and track its
-            # absolute position for masking (SWA long-context serving).
-            slot = pos % smax
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-            kpos = jax.lax.dynamic_update_slice_in_dim(
-                cache["kpos"], pos + jnp.arange(s, dtype=jnp.int32),
-                slot, axis=0)
-            new_cache = {"k": ck, "v": cv, "pos": pos + s, "kpos": kpos}
+            # ring write: each valid token lands at slot (abs pos % smax),
+            # restricted per row to the last `smax` of its sequence so
+            # slots stay distinct within one scatter; kpos tracks the
+            # absolute position stored in each slot for masking.
+            write_ok = valid_q & (qpos >= (new_pos - smax)[:, None])
+            slots = jnp.where(write_ok, qpos % smax, smax)
+            ck = kvquant.scatter_rows(cache["k"], k, slots)
+            cv = kvquant.scatter_rows(cache["v"], v, slots)
+            kpos = kvquant.scatter_rows(cache["kpos"], qpos, slots)
+            new_cache = {"k": ck, "v": cv, "pos": new_pos, "kpos": kpos}
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            idx = jnp.where(valid_q, qpos, smax)
+            ck = kvquant.scatter_rows(cache["k"], k, idx)
+            cv = kvquant.scatter_rows(cache["v"], v, idx)
             kpos = None
-            new_cache = {"k": ck, "v": cv, "pos": pos + s}
-        if s > 1 and not ring:
-            # prefill (from pos=0): serve attention from the FRESH K/V —
-            # flash-chunked, no (s × s_max) score materialization; the
+            new_cache = {"k": ck, "v": cv, "pos": new_pos}
+        if s > 1:
+            # prefill (slot contract: from pos=0): serve attention from
+            # the FRESH K/V — no (s × s_max) score materialization; the
             # cache holds (quantized-on-read) K/V for later decode steps.
-            kk = _repeat_kv(k, h // kvh)
-            vv = _repeat_kv(v, h // kvh)
-            if s >= 2048:
-                out = attention_chunked(q, kk, vv, causal=causal,
-                                        window=cfg.sliding_window)
-            else:
-                out = attention_dense(q, kk, vv, causal=causal,
-                                      window=cfg.sliding_window)
+            out = _fresh_block_attn(q, k, v, cfg, offsets, qpos, valid_q,
+                                    causal)
             out = out.reshape(b, s, h * hd)
             return qlinear(out, p["wo"], qcfg, prepared), new_cache
         kk = kvquant.kv_fakequant(ck, kv_quant_bits, kv_group) \
@@ -435,19 +492,10 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         vv = shard(vv.astype(x.dtype), "batch", "cache_seq", None, None)
         kk = _repeat_kv(kk, h // kvh)
         vv = _repeat_kv(vv, h // kvh)
-        qpos = (jnp.arange(s) + pos)[:, None]               # (s, 1)
-        if ring:
-            valid = (kpos[None, :] <= qpos) & (kpos[None, :] >= 0)
-            if cfg.sliding_window > 0:
-                valid &= kpos[None, :] > qpos - cfg.sliding_window
-            bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
-            out = attention_dense(q, kk, vv, causal=False, bias=bias)
-        else:
-            valid = jnp.arange(smax)[None, :] < (pos + s)
-            bias = jnp.where(valid, 0.0, NEG_INF)[None, None]
-            out = attention_dense(q, kk, vv, causal=True,
-                                  window=cfg.sliding_window,
-                                  q_offset=pos, bias=bias)
+        kpos_all = kpos if ring else \
+            jnp.arange(smax, dtype=jnp.int32)[None, :]
+        bias = _cache_bias(qpos, kpos_all, cfg.sliding_window)
+        out = attention_dense(q, kk, vv, causal=False, bias=bias)
     else:
         new_cache = None
         if kv_quant_bits < 16:

@@ -156,10 +156,19 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
 def mamba2_apply(pm: Dict, x: jnp.ndarray, cfg: ModelConfig,
                  qcfg: QuantConfig, prepared: bool,
                  cache: Optional[Dict] = None,
+                 valid: Optional[jnp.ndarray] = None,
                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """x: (B, S, d) -> (y, new_cache).
 
     cache = {"conv": (B, W-1, conv_dim), "ssm": (B, H, P, N)} for decode.
+
+    ``valid`` (B, S) bool is the SSM half of the slot-serving contract
+    (the attention families mask positions instead, see gqa_apply): False
+    entries are left-pad / frozen-slot tokens — their conv inputs are
+    zeroed and their dt forced to 0 so exp(dt·a) = 1 and dt·x·B = 0, i.e.
+    they leave the recurrent state EXACTLY unchanged; rows with no valid
+    token keep both state leaves bit-identical (frozen slot).  Callers
+    also zero the pad embeddings so runtime-smooth scales see no garbage.
     """
     ssm, d_in, h = _dims(cfg)
     bsz, s, d = x.shape
@@ -173,6 +182,8 @@ def mamba2_apply(pm: Dict, x: jnp.ndarray, cfg: ModelConfig,
     xx = shard(xx, "batch", "seq", "ssm_inner")
 
     conv_in = jnp.concatenate([xx, bmat, cmat], axis=-1)
+    if valid is not None:
+        conv_in = conv_in * valid[..., None].astype(conv_in.dtype)
     conv_state = None if cache is None else cache["conv"]
     conv_out, new_conv_state = _causal_conv(conv_in, pm["conv_w"],
                                             pm["conv_b"], conv_state)
@@ -183,6 +194,8 @@ def mamba2_apply(pm: Dict, x: jnp.ndarray, cfg: ModelConfig,
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + pm["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dt = dt * valid[..., None].astype(dt.dtype)
     a = -jnp.exp(pm["A_log"].astype(jnp.float32))           # (H,)
     xh = xx.reshape(bsz, s, h, p)
 
@@ -214,8 +227,17 @@ def mamba2_apply(pm: Dict, x: jnp.ndarray, cfg: ModelConfig,
     out = qlinear(y, pm["out_proj"], qcfg, prepared)
     new_cache = None
     if cache is not None:
-        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
-                     "ssm": final_state}
+        new_conv_state = new_conv_state.astype(cache["conv"].dtype)
+        if valid is not None:
+            # rows with no valid token this step are frozen slots: keep
+            # their state leaves bit-identical (the conv ring would
+            # otherwise shift in a zero)
+            keep = jnp.any(valid, axis=1)
+            new_conv_state = jnp.where(keep[:, None, None],
+                                       new_conv_state, cache["conv"])
+            final_state = jnp.where(keep[:, None, None, None],
+                                    final_state, cache["ssm"])
+        new_cache = {"conv": new_conv_state, "ssm": final_state}
     return out, new_cache
 
 

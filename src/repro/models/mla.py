@@ -21,9 +21,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.core import kvquant
 from repro.dist.sharding import shard
-from repro.models.layers import (NEG_INF, apply_rope, attention_chunked,
+from repro.models.layers import (_cache_bias, _pad_block_bias, advance_pos,
+                                 apply_rope, attention_chunked,
                                  attention_dense, dense_init, qlinear,
-                                 rmsnorm)
+                                 rmsnorm, row_positions)
 
 
 def mla_params(key, cfg: ModelConfig, dtype) -> Tuple[Dict, Dict]:
@@ -63,6 +64,7 @@ def mla_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
               prepared: bool, positions: jnp.ndarray,
               cache: Optional[Dict] = None,
               kv_quant_bits: int = 16, kv_group: int = 128,
+              offsets: Optional[jnp.ndarray] = None,
               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     m = cfg.mla
     b, s, d = x.shape
@@ -103,11 +105,14 @@ def mla_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         out = out.reshape(b, s, h * m.v_head_dim)
         return qlinear(out, p["wo"], qcfg, prepared), None
 
-    # --- absorbed decode against the latent cache ---
-    pos0 = cache["pos"]
-    lat = jax.lax.dynamic_update_slice_in_dim(
-        cache["latent"], latent.astype(cache["latent"].dtype), pos0, axis=1)
-    new_cache = {"latent": lat, "pos": pos0 + s}
+    # --- absorbed decode against the latent cache (per-row positions) ---
+    pos0 = cache["pos"]                                 # (B,)
+    smax = cache["latent"].shape[1]
+    qpos = row_positions(pos0, s, offsets)              # (B, s)
+    valid_q = qpos >= pos0[:, None]
+    idx = jnp.where(valid_q, qpos, smax)                # smax => dropped
+    lat = kvquant.scatter_rows(cache["latent"], latent, idx)
+    new_cache = {"latent": lat, "pos": advance_pos(pos0, s, offsets)}
     if s > 1:
         # prefill: expanded-form flash attention on the fresh latent (no
         # (s × s_max) scores); the latent cache is kept for decode.
@@ -120,7 +125,10 @@ def mla_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
             axis=-1).astype(x.dtype)
         qq = jnp.concatenate([q_nope, q_rope], axis=-1)
         qq = shard(qq, "batch", "seq", "act_heads", None)
-        if s >= 2048:
+        if offsets is not None:
+            out = attention_dense(qq, kk, vv, causal=False,
+                                  bias=_pad_block_bias(qpos, valid_q, 0))
+        elif s >= 2048:
             out = attention_chunked(qq, kk, vv)
         else:
             out = attention_dense(qq, kk, vv)
@@ -137,11 +145,8 @@ def mla_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
     scores = (jnp.einsum("bshr,bkr->bhsk", q_abs, c_all)
               + jnp.einsum("bshr,bkr->bhsk", q_rope, kr_all)
               ).astype(jnp.float32) * scale
-    smax = c_all.shape[1]
-    qpos = jnp.arange(s) + pos0
-    valid = (jnp.arange(smax)[None, :] <= qpos[:, None]) & \
-            (jnp.arange(smax)[None, :] < pos0 + s)
-    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    scores = scores + _cache_bias(
+        qpos, jnp.arange(smax, dtype=jnp.int32)[None, :], 0)
     pr = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhsk,bkr->bshr", pr.astype(x.dtype), c_all)
     w_uv = p["w_uv"].reshape(h, m.v_head_dim, m.kv_lora_rank)

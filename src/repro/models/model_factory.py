@@ -7,6 +7,15 @@
     logits, cache     = model.step(params, tokens, cache, qcfg, ...)
 
 ``batch`` keys by family: tokens (all), patches (vlm), frames (audio).
+
+Cache contract (every family): positions are PER ROW — attention caches
+carry ``pos: (batch,)`` (stacked over layers) and recurrent families keep
+per-row state, so one ``step`` serves rows at mixed decode progress.
+``step(..., offsets=(batch,))`` marks per-row left-pad counts: padded
+entries neither attend, get cached, nor advance their row — a fully
+padded row is a frozen serving slot.  ``cache_axes`` names each leaf's
+batch dim (``dist.sharding.batch_dim_of_spec``), which is how the
+serving engine resets/refills single rows generically.
 """
 from __future__ import annotations
 

@@ -46,7 +46,7 @@ def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
     return params, axes
 
 
-def _blocks(cfg, params, x, qcfg, prepared, caches=None):
+def _blocks(cfg, params, x, qcfg, prepared, caches=None, valid=None):
     def body(carry, inputs):
         xx = carry
         if caches is None:
@@ -57,7 +57,7 @@ def _blocks(cfg, params, x, qcfg, prepared, caches=None):
         lp, lc = inputs
         h = L.rmsnorm(xx, lp["ln"], cfg.norm_eps)
         out, nc = M.mamba2_apply(lp["mamba"], h, cfg, qcfg, prepared,
-                                 cache=lc)
+                                 cache=lc, valid=valid)
         return xx + cfg.residual_scale * out, nc
 
     xs = params["layers"] if caches is None else (params["layers"], caches)
@@ -91,10 +91,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                     caches: Dict, qcfg: QuantConfig, prepared: bool = False,
-                    patches=None, last_only: bool = True):
+                    patches=None, last_only: bool = True, offsets=None):
+    """``offsets`` (B,): per-row left-pad counts (slot-serving contract) —
+    padded tokens are zeroed at the embedding and leave the recurrent
+    state untouched (see mamba2_apply)."""
+    b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    valid = L.pad_valid_mask(s, offsets)
+    if valid is not None:
+        x = x * valid[..., None].astype(x.dtype)
     x = shard(x, "batch", "seq", None)
-    x, new_caches = _blocks(cfg, params, x, qcfg, prepared, caches=caches)
+    x, new_caches = _blocks(cfg, params, x, qcfg, prepared, caches=caches,
+                            valid=valid)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if last_only and x.shape[1] > 1:
         x = x[:, -1:]

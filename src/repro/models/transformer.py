@@ -59,21 +59,22 @@ def _block_params(key, cfg: ModelConfig, kind: str, dtype):
 
 def _block_apply(p, x, cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
                  positions, cache=None, enc=None, kind: str = "dense",
-                 kv_bits: int = 16, kv_group: int = 128):
-    """Pre-norm block. Returns (x, new_cache, aux)."""
+                 kv_bits: int = 16, kv_group: int = 128, offsets=None):
+    """Pre-norm block. Returns (x, new_cache, aux).  ``offsets`` (B,) are
+    per-row left-pad counts for slot-level serving (see gqa_apply)."""
     rs = cfg.residual_scale
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
         attn_out, new_attn_cache = mla_mod.mla_apply(
             p["attn"], h, cfg, qcfg, prepared, positions,
             cache=None if cache is None else cache.get("attn"),
-            kv_quant_bits=kv_bits, kv_group=kv_group)
+            kv_quant_bits=kv_bits, kv_group=kv_group, offsets=offsets)
     else:
         attn_out, new_attn_cache = L.gqa_apply(
             p["attn"], h, cfg, qcfg, prepared, positions,
             cache=None if cache is None else cache.get("attn"),
             kv_quant_bits=kv_bits, kv_group=kv_group,
-            use_rope=not cfg.is_encoder_decoder)
+            use_rope=not cfg.is_encoder_decoder, offsets=offsets)
     x = x + rs * attn_out
     new_cache = {} if cache is not None else None
     if new_attn_cache is not None:
@@ -278,6 +279,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                ) -> Tuple[Dict, Dict]:
     """Stacked per-layer caches matching the scan structure.
 
+    Positions are PER ROW: every layer's ``pos`` is (n, batch) and the
+    sliding-window ring's ``kpos`` is (n, batch, clen) — each batch row
+    (serving slot) advances independently, which is what continuous
+    slot-level batching schedules against.
+
     kv_storage="int8": codes live as int8 at rest with per-(token, head)
     scales — half the HBM footprint/traffic of the bf16 fake-quant cache.
     """
@@ -291,19 +297,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             m = cfg.mla
             width = m.kv_lora_rank + m.qk_rope_head_dim
             c = {"latent": jnp.zeros((n, batch, max_len, width), dtype),
-                 "pos": jnp.zeros((n,), jnp.int32)}
+                 "pos": jnp.zeros((n, batch), jnp.int32)}
             a = {"latent": P(None, "batch", "cache_seq", None),
-                 "pos": P(None)}
+                 "pos": P(None, "batch")}
         else:
             kv_dtype = jnp.int8 if int8 else dtype
             c = {"k": jnp.zeros((n, batch, clen, cfg.num_kv_heads, hd),
                                 kv_dtype),
                  "v": jnp.zeros((n, batch, clen, cfg.num_kv_heads, hd),
                                 kv_dtype),
-                 "pos": jnp.zeros((n,), jnp.int32)}
+                 "pos": jnp.zeros((n, batch), jnp.int32)}
             a = {"k": P(None, "batch", "cache_seq", None, None),
                  "v": P(None, "batch", "cache_seq", None, None),
-                 "pos": P(None)}
+                 "pos": P(None, "batch")}
             if int8:
                 c["k_scale"] = jnp.zeros(
                     (n, batch, clen, cfg.num_kv_heads, 1), jnp.float32)
@@ -312,8 +318,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                 a["k_scale"] = P(None, "batch", "cache_seq", None, None)
                 a["v_scale"] = P(None, "batch", "cache_seq", None, None)
             if ring:
-                c["kpos"] = -jnp.ones((n, clen), jnp.int32)
-                a["kpos"] = P(None, None)
+                c["kpos"] = -jnp.ones((n, batch, clen), jnp.int32)
+                a["kpos"] = P(None, "batch", None)
         return {"attn": c}, {"attn": a}
 
     caches, axes = {}, {}
@@ -362,19 +368,25 @@ def _plan_with_counts(cfg: ModelConfig):
 def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                     caches: Dict, qcfg: QuantConfig, prepared: bool = False,
                     patches: Optional[jnp.ndarray] = None,
-                    last_only: bool = True,
+                    last_only: bool = True, offsets=None,
                     ) -> Tuple[jnp.ndarray, Dict]:
     """Prefill (S>1) or decode (S=1) with KV caches.
 
-    Positions derive from cache["pos"] (same for every layer).
+    Positions are PER ROW, derived from cache["pos"] (B,) (same for every
+    layer).  ``offsets`` (B,) counts left-pad tokens heading each row —
+    the slot-serving contract (see gqa_apply): padded entries neither
+    attend, get cached, nor advance their row's position, so one call can
+    prefill some rows while freezing or decoding others.
     ``last_only``: serving only needs logits at the final position —
     avoids a (B, S, V) materialization at prefill_32k.
     """
     b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
     x = shard(x, "batch", "seq", None)
-    pos0 = _first_pos(caches)
-    positions = jnp.arange(s) + pos0
+    pos0 = _first_pos(caches)                       # (B,)
+    if offsets is not None:
+        offsets = jnp.asarray(offsets, jnp.int32)
+    positions = jnp.maximum(L.row_positions(pos0, s, offsets), 0)  # (B, S)
     aux = jnp.zeros((), jnp.float32)
 
     enc = None
@@ -387,7 +399,7 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
         if name == "vlm":
             x, new_caches["vlm"], aux = _vlm_step_cached(
                 stacked, caches["vlm"], x, cfg, qcfg, prepared, positions,
-                enc, aux)
+                enc, aux, offsets=offsets)
             continue
         kind = name.split("_")[0]
 
@@ -397,7 +409,8 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
             xx, nc, a = _block_apply(lp, xx, cfg, qcfg, prepared, positions,
                                      cache=lc, kind=kind,
                                      kv_bits=qcfg.kv_bits,
-                                     kv_group=qcfg.kv_group_size)
+                                     kv_group=qcfg.kv_group_size,
+                                     offsets=offsets)
             return (xx, a1 + a), nc
 
         (x, aux), nc = jax.lax.scan(body, (x, aux),
@@ -414,14 +427,15 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
 
 
 def _first_pos(caches) -> jnp.ndarray:
+    """Per-row positions (B,) from the first pos leaf (layers stay equal)."""
     for leaf_path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
         if any(getattr(k, "key", None) == "pos" for k in leaf_path):
-            return leaf.reshape(-1)[0]
+            return leaf.reshape(-1, leaf.shape[-1])[0]
     raise ValueError("no pos in cache")
 
 
 def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
-                     enc, aux):
+                     enc, aux, offsets=None):
     def group_body(carry, inputs):
         xx, a0 = carry
         (plain_g, cross_g), (pc, cc) = inputs
@@ -432,14 +446,16 @@ def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
             x1, nc, a = _block_apply(lp, x1, cfg, qcfg, prepared, positions,
                                      cache=lc, kind="dense",
                                      kv_bits=qcfg.kv_bits,
-                                     kv_group=qcfg.kv_group_size)
+                                     kv_group=qcfg.kv_group_size,
+                                     offsets=offsets)
             return (x1, a1 + a), nc
 
         (xx, a0), npc = jax.lax.scan(plain_body, (xx, a0), (plain_g, pc))
         xx, ncc, a = _block_apply(cross_g, xx, cfg, qcfg, prepared,
                                   positions, cache=cc, enc=enc, kind="cross",
                                   kv_bits=qcfg.kv_bits,
-                                  kv_group=qcfg.kv_group_size)
+                                  kv_group=qcfg.kv_group_size,
+                                  offsets=offsets)
         return (xx, a0 + a), (npc, ncc)
 
     (x, aux), (npc, ncc) = jax.lax.scan(

@@ -124,16 +124,26 @@ def encode(cfg: ModelConfig, params: Dict, frames: jnp.ndarray,
 
 
 def _decoder(cfg, params, tokens, enc, qcfg, prepared, caches=None,
-             pos0=None, return_hidden=False, last_only=False):
+             pos0=None, return_hidden=False, last_only=False,
+             offsets=None):
     b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
-    start = 0 if pos0 is None else pos0
-    pos_emb = jax.lax.dynamic_slice_in_dim(
-        params["pos_embed"], start, s, axis=0) if pos0 is not None \
-        else params["pos_embed"][:s]
-    x = x + pos_emb[None].astype(x.dtype)
+    if pos0 is None:
+        positions = jnp.arange(s)
+        pos_emb = params["pos_embed"][:s][None]
+    else:
+        # cached: per-row positions (B, S); learned pos embeddings are
+        # gathered per row (rows decode at independent depths)
+        positions = jnp.maximum(L.row_positions(pos0, s, offsets), 0)
+        pos_emb = jnp.take(params["pos_embed"],
+                           jnp.minimum(positions,
+                                       params["pos_embed"].shape[0] - 1),
+                           axis=0)                           # (B, S, D)
+    x = x + pos_emb.astype(x.dtype)
+    valid = L.pad_valid_mask(s, offsets)
+    if valid is not None:
+        x = x * valid[..., None].astype(x.dtype)
     x = shard(x, "batch", "seq", None)
-    positions = jnp.arange(s) + (0 if pos0 is None else pos0)
 
     def body(carry, inputs):
         xx = carry
@@ -147,7 +157,7 @@ def _decoder(cfg, params, tokens, enc, qcfg, prepared, caches=None,
                                positions, cache=sc,
                                kv_quant_bits=qcfg.kv_bits,
                                kv_group=qcfg.kv_group_size,
-                               use_rope=False)
+                               use_rope=False, offsets=offsets)
         xx = xx + out
         hx = L.layernorm(xx, lp["lnx_g"], lp["lnx_b"], cfg.norm_eps)
         xout, nxc = L.xattn_apply(lp["xattn"], hx, enc, cfg, qcfg, prepared,
@@ -192,7 +202,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         "self": {
             "k": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, hd), dtype),
             "v": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, hd), dtype),
-            "pos": jnp.zeros((n,), jnp.int32)},
+            "pos": jnp.zeros((n, batch), jnp.int32)},
         "cross": {
             "k": jnp.zeros((n, batch, senc, cfg.num_kv_heads, hd), dtype),
             "v": jnp.zeros((n, batch, senc, cfg.num_kv_heads, hd), dtype)},
@@ -200,7 +210,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     axes = {
         "self": {"k": P(None, "batch", "cache_seq", None, None),
                  "v": P(None, "batch", "cache_seq", None, None),
-                 "pos": P(None)},
+                 "pos": P(None, "batch")},
         "cross": {"k": P(None, "batch", "cache_seq", None, None),
                   "v": P(None, "batch", "cache_seq", None, None)},
     }
@@ -210,11 +220,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                     caches: Dict, qcfg: QuantConfig, prepared: bool = False,
                     frames: Optional[jnp.ndarray] = None, patches=None,
-                    last_only: bool = True):
-    """Prefill (frames given → run encoder, fill cross cache) or decode."""
+                    last_only: bool = True, offsets=None):
+    """Prefill (frames given → run encoder, fill cross cache) or decode.
+
+    ``offsets`` (B,): per-row left-pad counts (slot-serving contract for
+    the decoder self-attention).  NOTE: passing ``frames`` recomputes the
+    cross-attention K/V for EVERY row — encoder inputs are batch-wide, so
+    slot-level admission with fresh audio must refill all slots at once.
+    """
     enc = None
     if frames is not None:
         enc = encode(cfg, params, frames, qcfg, prepared)
-    pos0 = caches["self"]["pos"].reshape(-1)[0]
+    b = tokens.shape[0]
+    pos0 = caches["self"]["pos"].reshape(-1, b)[0]          # (B,)
     return _decoder(cfg, params, tokens, enc, qcfg, prepared,
-                    caches=caches, pos0=pos0, last_only=last_only)
+                    caches=caches, pos0=pos0, last_only=last_only,
+                    offsets=offsets)

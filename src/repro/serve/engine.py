@@ -1,17 +1,33 @@
 """Batched serving engine over the model's prefill/decode steps, with
 quantized weights (RRS) and quantized KV cache.
 
-Scheduling model: **wave batching**.  The KV caches in this codebase track
-one shared position per layer (scalar `pos`), so a wave admits up to
-``max_batch`` queued requests with EQUAL prompt length (the scheduler
-buckets the queue by length), prefills them together, then decodes the
-whole wave until every member finishes.  Finished rows idle (their outputs
-are discarded) until the wave drains — simple, correct, and the decode
-step it lowers is exactly the assignment's ``decode_*`` shapes.
+Scheduling model: **continuous slot-level batching** (Orca/vLLM-style).
+The engine owns ``max_batch`` persistent slots backed by ONE cache pytree
+whose positions are per row (``pos: (batch,)`` in every family — see
+``models.model_factory``).  The scheduler loop:
 
-Continuous (slot-level) batching needs per-row positions in every cache
-write/mask; the layout supports it (batch-major caches), flagged as future
-work in DESIGN.md — it does not change the lowered decode graph.
+  1. *reclaim* — the step a request finishes, its slot is freed;
+  2. *admit* — free slots take queued requests immediately: the new
+     prompts are LEFT-PADDED into their rows of one batched prefill call
+     (``offsets`` marks each row's pad count; padded entries neither
+     attend, get cached, nor advance that row), while rows mid-decode
+     ride along frozen (fully-padded).  Slot rows are reset to the cache
+     init value generically via each leaf's declared batch axis
+     (``dist.sharding.batch_dim_of_spec``) — no per-family code;
+  3. *decode* — one jit'd graph steps every live row regardless of
+     progress; finished/empty rows are frozen with ``offsets == 1``.
+
+No length bucketing, no head-of-line blocking: a mixed-prompt-length
+queue keeps the batch full.  Sampling is one on-device jit'd op over the
+whole batch (greedy or gumbel), syncing a single (batch,) token array
+per step instead of a host round-trip per row.
+
+``scheduler="wave"`` keeps the legacy gang-scheduled reference policy
+(equal-length groups admitted only when ALL slots are free, drained to
+the last member) on the same step/sample machinery — used by
+``benchmarks/serve_throughput.py`` for the A/B and by the parity tests:
+on an equal-length batch both schedulers run the identical graphs, so
+greedy outputs are token-identical.
 
 ``serve_step`` (= one decode for the full batch) is the unit the dry-run
 lowers at the assignment's decode shapes.
@@ -20,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 import jax
@@ -29,6 +45,7 @@ import jax.numpy as jnp
 from repro.configs.base import QuantConfig
 from repro.core import methods
 from repro.data import tokenizer as tok
+from repro.dist.sharding import batch_dim_of_spec
 from repro.models.model_factory import Model
 from repro.serve.prepare import load_prepared, prepare_params
 
@@ -50,12 +67,17 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, qcfg: QuantConfig,
                  max_batch: int = 4, max_len: int = 512,
-                 prepare: bool = True, calib=None):
+                 prepare: bool = True, calib=None,
+                 scheduler: str = "continuous"):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
         re-prepared).  ``calib`` is forwarded to ``prepare_params`` to
-        enable GPTQ weights / static reorder at engine construction."""
+        enable GPTQ weights / static reorder at engine construction.
+        ``scheduler``: "continuous" (slot-level, default) or "wave"
+        (legacy gang-scheduled reference)."""
+        if scheduler not in ("continuous", "wave"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.model = model
         self.cfg = model.cfg
         self.qcfg = qcfg
@@ -64,14 +86,24 @@ class ServingEngine:
                        if prepare and not already else params)
         self.max_batch = max_batch
         self.max_len = max_len
+        self.scheduler = scheduler
         self.queue: List[Request] = []
         self._rid = 0
         self._prepared = prepare or already
         prepared = self._prepared
-        self._decode = jax.jit(
-            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepared))
-        self._prefill = jax.jit(
-            lambda p, t, c: model.step(p, t, c, qcfg, prepared=prepared))
+        self._step_fn = jax.jit(
+            lambda p, t, c, off: model.step(p, t, c, qcfg,
+                                            prepared=prepared,
+                                            offsets=off))
+        self._sample_fn = jax.jit(_sample_batch)
+        # persistent slot state: one cache pytree, per-row positions
+        self._cache_init, self._cache_axes = model.init_cache(max_batch,
+                                                              max_len)
+        self.cache = self._cache_init
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._reset_fn = jax.jit(self._reset_rows)
+        self.stats = {"prefill_steps": 0, "decode_steps": 0,
+                      "slot_steps": 0}
 
     @classmethod
     def from_artifact(cls, model: Model, path: str,
@@ -83,77 +115,168 @@ class ServingEngine:
 
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
+        if max_new_tokens >= self.max_len:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} must leave cache room "
+                f"for at least one prompt token (max_len={self.max_len})")
         ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
         ids = [tok.BOS] + [int(i) % self.cfg.vocab_size for i in ids]
+        # the row must hold prompt + all new tokens: keep the prompt TAIL
+        ids = ids[-(self.max_len - max_new_tokens):]
         self._rid += 1
         self.queue.append(Request(self._rid, ids, max_new_tokens,
                                   temperature))
         return self._rid
 
-    # -- wave scheduling --------------------------------------------------
+    # -- slot primitives --------------------------------------------------
 
-    def _next_wave(self) -> List[Request]:
-        """Largest same-prompt-length group, up to max_batch."""
-        if not self.queue:
-            return []
+    def _reset_rows(self, cache, mask):
+        """Return ``cache`` with rows where ``mask`` (B,) is True put back
+        to the init value (zeros / empty ring markers), any family: the
+        batch dim of each leaf comes from its declared axes spec."""
+        def one(leaf, init, spec):
+            shape = [1] * leaf.ndim
+            bdim = batch_dim_of_spec(spec)
+            shape[bdim] = leaf.shape[bdim]
+            return jnp.where(mask.reshape(shape), init, leaf)
+        return jax.tree_util.tree_map(one, cache, self._cache_init,
+                                      self._cache_axes)
+
+    def _admit(self, admit: Dict[int, Request]):
+        """Prefill newly admitted requests: reset their rows, left-pad
+        each prompt into its row, run ONE batched masked prefill (other
+        rows ride along frozen), sample first tokens."""
+        bsz = self.max_batch
+        mask = np.zeros((bsz,), bool)
+        for i in admit:
+            mask[i] = True
+        self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+        s_pad = max(len(r.prompt) for r in admit.values())
+        tokens = np.zeros((bsz, s_pad), np.int32)
+        off = np.full((bsz,), s_pad, np.int32)   # default: fully frozen
+        for i, r in admit.items():
+            n = len(r.prompt)
+            tokens[i, s_pad - n:] = r.prompt
+            off[i] = s_pad - n
+        # homogeneous admission (every slot, one length) needs no row
+        # masking: offsets=None keeps the flash-chunked prefill path for
+        # long prompts (a mixed-length gang takes the dense masked form)
+        off_arg = None if not off.any() else jnp.asarray(off)
+        logits, self.cache = self._step_fn(
+            self.params, jnp.asarray(tokens), self.cache, off_arg)
+        self.stats["prefill_steps"] += 1
+        for i, r in admit.items():
+            self.slots[i] = r
+        self._sample_into(logits, list(admit))
+
+    def _decode_step(self, live: List[int]):
+        """One decode for the full batch; rows not in ``live`` are frozen
+        (offset 1 = their single token is all padding)."""
+        bsz = self.max_batch
+        nxt = np.zeros((bsz, 1), np.int32)
+        off = np.ones((bsz,), np.int32)
+        for i in live:
+            nxt[i, 0] = self.slots[i].out_tokens[-1]
+            off[i] = 0
+        logits, self.cache = self._step_fn(
+            self.params, jnp.asarray(nxt), self.cache, jnp.asarray(off))
+        self.stats["decode_steps"] += 1
+        self.stats["slot_steps"] += len(live)
+        self._sample_into(logits, live)
+
+    def _sample_into(self, logits, rows: List[int]):
+        """Sample the whole batch on device in one jit'd op; append the
+        single synced (B,) token array into the listed rows' requests."""
+        bsz = self.max_batch
+        temps = np.zeros((bsz,), np.float32)
+        seeds = np.zeros((bsz,), np.uint32)
+        for i in rows:
+            r = self.slots[i]
+            temps[i] = r.temperature
+            seed = r.rid if not r.out_tokens \
+                else r.rid * 7919 + len(r.out_tokens)
+            seeds[i] = seed % (1 << 32)
+        toks = np.asarray(self._sample_fn(logits[:, -1],
+                                          jnp.asarray(temps),
+                                          jnp.asarray(seeds)))
+        for i in rows:
+            r = self.slots[i]
+            t = int(toks[i])
+            r.out_tokens.append(t)
+            if t == tok.EOS or len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+
+    # -- schedulers -------------------------------------------------------
+
+    def _run_continuous(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.queue or any(r is not None for r in self.slots):
+            for i, r in enumerate(self.slots):      # reclaim
+                if r is not None and r.done:
+                    finished.append(r)
+                    self.slots[i] = None
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if free and self.queue:                 # refill the step after
+                admit = {}
+                for i in free:
+                    if not self.queue:
+                        break
+                    admit[i] = self.queue.pop(0)
+                self._admit(admit)
+            live = [i for i, r in enumerate(self.slots)
+                    if r is not None and not r.done]
+            if live:
+                self._decode_step(live)
+        return finished
+
+    def _wave_group(self) -> List[Request]:
+        """Legacy admission policy: largest same-prompt-length group."""
         by_len: Dict[int, List[Request]] = defaultdict(list)
         for r in self.queue:
             by_len[len(r.prompt)].append(r)
-        length = max(by_len, key=lambda l: len(by_len[l]))
+        length = max(by_len, key=lambda n: len(by_len[n]))
         wave = by_len[length][: self.max_batch]
         for r in wave:
             self.queue.remove(r)
         return wave
 
-    def _run_wave(self, wave: List[Request]) -> List[Request]:
-        s = len(wave[0].prompt)
-        bsz = self.max_batch
-        cache, _ = self.model.init_cache(bsz, self.max_len)
-        tokens = np.zeros((bsz, s), np.int32)
-        for i, r in enumerate(wave):
-            tokens[i] = r.prompt
-        logits, cache = self._prefill(self.params, jnp.asarray(tokens),
-                                      cache)
-        live = set(range(len(wave)))
-        for i in live:
-            r = wave[i]
-            r.out_tokens.append(_sample(logits[i, -1], r.temperature,
-                                        r.rid))
-        budget = max(r.max_new_tokens for r in wave)
-        for step_i in range(budget - 1):
-            if not live:
-                break
-            nxt = np.zeros((bsz, 1), np.int32)
-            for i in list(live):
-                nxt[i, 0] = wave[i].out_tokens[-1]
-            logits, cache = self._decode(self.params, jnp.asarray(nxt),
-                                         cache)
-            for i in list(live):
-                r = wave[i]
-                t = _sample(logits[i, -1], r.temperature,
-                            r.rid * 7919 + len(r.out_tokens))
-                r.out_tokens.append(int(t))
-                if int(t) == tok.EOS or \
-                        len(r.out_tokens) >= r.max_new_tokens:
-                    r.done = True
-                    live.discard(i)
-        for r in wave:
-            r.done = True
-        return wave
-
-    def run(self) -> List[Request]:
+    def _run_waves(self) -> List[Request]:
+        """Reference wave scheduler on the slot machinery: admit a gang
+        only when every slot is free, drain it to the last member —
+        exhibits the head-of-line blocking continuous batching removes."""
         finished: List[Request] = []
         while self.queue:
-            wave = self._next_wave()
-            finished.extend(self._run_wave(wave))
+            admit = dict(enumerate(self._wave_group()))
+            self._admit(admit)
+            while True:
+                live = [i for i in admit if not self.slots[i].done]
+                if not live:
+                    break
+                self._decode_step(live)
+            for i in admit:
+                finished.append(self.slots[i])
+                self.slots[i] = None
         return finished
 
+    def run(self) -> List[Request]:
+        if self.scheduler == "wave":
+            return self._run_waves()
+        return self._run_continuous()
 
-def _sample(logits: jnp.ndarray, temperature: float, seed: int) -> int:
-    if temperature <= 0.0:
-        return int(jnp.argmax(logits))
-    g = jax.random.gumbel(jax.random.PRNGKey(seed), logits.shape)
-    return int(jnp.argmax(logits / temperature + g))
+
+def _sample_batch(logits: jnp.ndarray, temps: jnp.ndarray,
+                  seeds: jnp.ndarray) -> jnp.ndarray:
+    """Whole-batch sampling in one jit'd op: greedy rows take argmax,
+    temperature rows add per-row gumbel noise from their own seed."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def noisy(row, t, seed):
+        g = jax.random.gumbel(jax.random.PRNGKey(seed), row.shape)
+        return jnp.argmax(row / jnp.maximum(t, 1e-6) + g)
+
+    sampled = jax.vmap(noisy)(logits, temps, seeds)
+    return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
 
 
 __all__ = ["ServingEngine", "Request", "prepare_params", "load_prepared"]
