@@ -1,14 +1,26 @@
 """Paper Fig. 6: efficiency of the fused Runtime-Smooth GEMM vs
-per-channel A4W4 and sub-channel A4W4.
+per-channel A4W4 and sub-channel A4W4 — plus the two-launch fused
+pipeline's stage breakdown, decode shapes and modeled HBM traffic.
 
 On this CPU container the kernels run in interpret mode, so wall-clock is
 not TPU evidence; we report BOTH:
 
   (a) analytic overhead — extra HBM bytes and extra multiplies RS adds to
       a per-channel A4W4 GEMM tile (the paper's negligible-overhead claim,
-      computed for TPU v5e tile sizes);
-  (b) jitted CPU wall-clock of the three *fake-quant* pipelines at a few
-      GEMM shapes (relative overhead trend only).
+      computed for TPU v5e tile sizes), plus the modeled bytes-moved per
+      linear of the legacy three-launch pipeline vs the fused two-launch
+      one (``kernels.ops.modeled_linear_bytes`` — the ≥40%-drop
+      acceptance number lives in ``bytes_drop`` of the ``fused_*`` rows);
+  (b) jitted CPU wall-clock of the fake-quant pipelines and of the fused
+      integer pipeline's stages (relative overhead trend only):
+      rotate⊕absmax (kernel A) / smooth⊕quant⊕gemm (kernel B), with the
+      legacy fwht / act_quant / gemm launches timed alongside at the
+      prefill shape.
+
+Decode rows (N ∈ {1, 8, 32}) run on the small-batch grid (bn = N, zero
+row padding) and each row records ``oracle_exact`` — parity against the
+jitted jnp oracle.  ``--parity`` runs ONLY those checks and exits
+nonzero on any mismatch (the CI kernel-parity smoke step).
 """
 from __future__ import annotations
 
@@ -21,9 +33,15 @@ import jax.numpy as jnp
 from repro.configs.base import QuantConfig
 from repro.core import methods as qmethods
 from repro.core import quant, smooth
+from repro.kernels import ops
+from repro.kernels.act_quant import act_smooth_quant
+from repro.kernels.fwht import fwht_absmax, fwht_rotate
+from repro.kernels.rrs_gemm import rrs_gemm, rrs_smooth_gemm
 from benchmarks.common import emit, timeit
 
 SHAPES = [(512, 2048, 2048), (1024, 4096, 4096)]
+FUSED_PREFILL = (512, 2048, 2048)
+DECODE_SHAPES = [(1, 2048, 2048), (8, 2048, 2048), (32, 2048, 2048)]
 
 
 def analytic_overhead(n, m, k, g=128):
@@ -40,6 +58,93 @@ def analytic_overhead(n, m, k, g=128):
         "subchannel_bytes_overhead": sub_extra_bytes / base_bytes,
         "subchannel_macs_overhead": sub_extra_macs / base_macs,
     }
+
+
+def _fused_row(n, m, k, g=128, time_stages=True):
+    """One fused-pipeline measurement row: stage timings, oracle parity
+    and modeled bytes at shape (n, m, k)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((m, k)) * 0.05, jnp.float32)
+    weights = ops.RRSWeights(w, group=g, keep_codes=True)
+    bn, pad = ops._row_geometry(n)
+
+    fused = jax.jit(lambda xx: ops.rrs_linear_fused(xx, weights))
+    # oracle must be jitted too: XLA's vectorized f32 division differs
+    # from eager evaluation by 1 ulp (see kernels/ref.py)
+    oracle = jax.jit(lambda xx: ops.rrs_linear_fused_ref(xx, weights))
+    y = fused(x)
+    yr = oracle(x)
+    row = {
+        "name": f"fused_{n}x{m}x{k}",
+        "bn": bn, "row_pad": pad,
+        "oracle_exact": bool(jnp.all(y == yr)),
+        "oracle_max_err": float(jnp.max(jnp.abs(y - yr))),
+        **{kk: round(vv, 5) if isinstance(vv, float) else vv
+           for kk, vv in ops.modeled_linear_bytes(n, k, m, group=g).items()},
+    }
+    if not time_stages:
+        return row
+    # stage breakdown (two-launch pipeline)
+    xp = x if pad == 0 else jnp.concatenate(
+        [x, jnp.zeros((pad, k), x.dtype)], axis=0)
+    stage_a = jax.jit(lambda xx: fwht_absmax(
+        xx, block=weights.rotate_block, bn=bn, interpret=True))
+    x_rot, cmax = stage_a(xp)
+    s_g = smooth.group_smooth_scales(jnp.maximum(cmax, 1e-6), g)
+    bm = 128 if m % 128 == 0 else ops._largest_div_pow2(m, 128)
+    stage_b = jax.jit(lambda xx: rrs_smooth_gemm(
+        xx, weights.w_packed, s_g, weights.w_scale,
+        bn=bn, bm=bm, bk=g, interpret=True))
+    row["us_rotate_absmax"] = round(timeit(stage_a, xp), 1)
+    row["us_smooth_quant_gemm"] = round(timeit(stage_b, x_rot), 1)
+    row["us_fused2_total"] = round(timeit(fused, x), 1)
+    # legacy three-launch stages (the ones the fusion eliminates):
+    # fwht_rotate only covers power-of-two K
+    if not (k & (k - 1)):
+        leg_a = jax.jit(lambda xx: fwht_rotate(xx, bn=bn, interpret=True))
+        xr32 = leg_a(xp.astype(jnp.float32))
+        leg_q = jax.jit(lambda xx: act_smooth_quant(xx, s_g, bn=bn,
+                                                    interpret=True))
+        x_q, a_scale = leg_q(xr32)
+        leg_g = jax.jit(lambda xq, ax: rrs_gemm(
+            xq, weights.w_packed, s_g, ax, weights.w_scale,
+            bn=bn, bm=bm, bk=g, interpret=True))
+        row["us_legacy_fwht"] = round(timeit(leg_a, xp), 1)
+        row["us_legacy_act_quant"] = round(timeit(leg_q, xr32), 1)
+        row["us_legacy_gemm"] = round(timeit(leg_g, x_q, a_scale), 1)
+        row["us_legacy3_total"] = round(
+            row["us_legacy_fwht"] + row["us_legacy_act_quant"]
+            + row["us_legacy_gemm"], 1)
+    return row
+
+
+def run_parity() -> int:
+    """CI kernel-parity smoke: decode shapes (+ prefill bytes check)
+    against the jnp oracle in interpret mode.  Returns #failures."""
+    rows = []
+    failures = 0
+    for (n, m, k) in DECODE_SHAPES:
+        row = _fused_row(n, m, k, time_stages=False)
+        ok = row["oracle_exact"] and row["row_pad"] == 0 and row["bn"] == n
+        failures += 0 if ok else 1
+        row["parity_ok"] = ok
+        rows.append(row)
+        print(f"  {row['name']}: bn={row['bn']} pad={row['row_pad']} "
+              f"exact={row['oracle_exact']} "
+              f"max_err={row['oracle_max_err']:.3e}", flush=True)
+    n, m, k = FUSED_PREFILL
+    prow = _fused_row(n, m, k, time_stages=False)
+    drop_ok = prow["bytes_drop"] >= 0.40
+    failures += 0 if (prow["oracle_exact"] and drop_ok) else 1
+    prow["parity_ok"] = bool(prow["oracle_exact"] and drop_ok)
+    rows.append(prow)
+    print(f"  {prow['name']}: exact={prow['oracle_exact']} modeled bytes "
+          f"drop {prow['bytes_drop'] * 100:.1f}% (need >= 40%)", flush=True)
+    # distinct name: the smoke check must not clobber the full benchmark
+    # results recorded under fig6_kernel.json
+    emit(rows, "fig6_kernel_parity")
+    return failures
 
 
 def run(quick: bool = False):
@@ -102,9 +207,24 @@ def run(quick: bool = False):
               f"{t_sc:.0f}us rs {t_rs:.0f}us | analytic RS overhead: "
               f"bytes +{ao['rs_bytes_overhead'] * 100:.2f}% macs "
               f"+{ao['rs_macs_overhead'] * 100:.2f}%", flush=True)
+    # two-launch fused pipeline: prefill stage breakdown + decode shapes
+    n, m, k = FUSED_PREFILL
+    rows.append(_fused_row(n, m, k))
+    print(f"  {rows[-1]['name']}: A {rows[-1]['us_rotate_absmax']:.0f}us "
+          f"B {rows[-1]['us_smooth_quant_gemm']:.0f}us | modeled bytes "
+          f"drop {rows[-1]['bytes_drop'] * 100:.1f}%", flush=True)
+    for (n, m, k) in (DECODE_SHAPES[:2] if quick else DECODE_SHAPES):
+        rows.append(_fused_row(n, m, k))
+        r = rows[-1]
+        print(f"  {r['name']}: bn={r['bn']} (no padding) "
+              f"A {r['us_rotate_absmax']:.0f}us "
+              f"B {r['us_smooth_quant_gemm']:.0f}us "
+              f"exact={r['oracle_exact']}", flush=True)
     emit(rows, "fig6_kernel")
     return rows
 
 
 if __name__ == "__main__":
+    if "--parity" in sys.argv:
+        sys.exit(1 if run_parity() else 0)
     run(quick="--quick" in sys.argv)

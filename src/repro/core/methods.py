@@ -127,6 +127,13 @@ def offline_prepared(w: jnp.ndarray, cfg: QuantConfig) -> PreparedLinear:
 
 _REGISTRY: Dict[str, "QuantMethod"] = {}
 
+# Debug escape hatch: keep the dense fake-quant weight (w_dq) alongside the
+# packed int4 codes when preparing for exec_path="kernel".  The serving hot
+# path never reads the dense copy (kernel B consumes w_packed/w_scale only)
+# and it is ~8x the packed bytes, so it is dropped by default; the oracle/
+# parity tests flip this (or pass keep_dense=True per call).
+DEBUG_KEEP_DENSE = False
+
 
 def register_method(name: str):
     """Class decorator: instantiate + register a QuantMethod under
@@ -182,11 +189,15 @@ class QuantMethod:
 
     def prepare_weight(self, w: jnp.ndarray, cfg: QuantConfig,
                        calib_x: Optional[jnp.ndarray] = None,
-                       sq_scale: Optional[jnp.ndarray] = None
-                       ) -> PreparedLinear:
+                       sq_scale: Optional[jnp.ndarray] = None,
+                       keep_dense: bool = False) -> PreparedLinear:
         """rotate -> merge scales -> (static reorder) -> weight quant ->
         (pack).  ``calib_x`` enables GPTQ and static reorder; without it
-        GPTQ falls back to RTN."""
+        GPTQ falls back to RTN.  When the artifact is packed for the
+        fused kernel path (and activations are quantized, so the dense
+        matmul fallbacks are unreachable), the dense ``w_dq`` copy is
+        dropped — ``keep_dense=True`` (or the module-level
+        ``DEBUG_KEEP_DENSE``) retains it for oracles/debugging."""
         rotated, block = False, 0
         if cfg.uses_rotation:
             block = hadamard.pick_rotate_block(w.shape[-1],
@@ -215,6 +226,12 @@ class QuantMethod:
             from repro.kernels.ops import pack_int4_kblocks
             w_packed = pack_int4_kblocks(codes, cfg.group_size)
             w_scale = scale.reshape(-1)
+            if (cfg.quantize_acts and self.uses_runtime_smooth
+                    and not (keep_dense or DEBUG_KEEP_DENSE)):
+                # serving kernel path: only w_packed/w_scale are read
+                # online — shipping the dense copy would ~9x the
+                # prepared-weight memory for nothing
+                w_dq = None
         return PreparedLinear(w_dq, sq_scale, perm, w_packed, w_scale,
                               method=self.name, rotated=rotated,
                               rotate_block=block, group=cfg.group_size)
@@ -281,13 +298,15 @@ class QuantMethod:
 
     def _apply_kernel(self, x, prepared, cfg):
         """Fused integer Pallas pipeline (``cfg.exec_path == "kernel"``):
-        [rotate →] runtime-smooth → quantize → int4 GEMM.  Shared by every
-        runtime-smooth method; ``prepared.rotated`` selects the identity-
-        rotation branch (plain "rs") vs the FWHT one ("rrs")."""
+        two launches — [rotate ⊕ absmax] then [smooth ⊕ quantize ⊕ int4
+        GEMM] (see kernels/ops.py).  Shared by every runtime-smooth
+        method; ``prepared.rotated`` selects the identity-rotation branch
+        (plain "rs") vs the FWHT one ("rrs").  M comes from ``w_scale``
+        so the artifact needs no dense ``w_dq`` copy at serving time."""
         from repro.kernels import ops as kops
         y = kops.rrs_linear_fused_fields(
             x, w_packed=prepared.w_packed,
-            w_scale=prepared.w_scale, m=prepared.w_dq.shape[0],
+            w_scale=prepared.w_scale, m=prepared.w_scale.shape[-1],
             group=prepared.group, rotate_block=prepared.rotate_block,
             rotate=prepared.rotated, perm=prepared.perm)
         return y.astype(x.dtype)
@@ -326,7 +345,8 @@ class NoQuant(QuantMethod):
     """FP16/BF16 passthrough (quantize_* properties are False)."""
     is_identity = True
 
-    def prepare_weight(self, w, cfg, calib_x=None, sq_scale=None):
+    def prepare_weight(self, w, cfg, calib_x=None, sq_scale=None,
+                       keep_dense=False):
         return PreparedLinear(w, method=self.name)
 
     def _apply_quant(self, x, prepared, cfg):   # pragma: no cover

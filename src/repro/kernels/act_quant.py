@@ -1,4 +1,4 @@
-"""Fused smooth+quantize kernel for activations (paper Fig. 4 steps 1–2).
+"""Standalone smooth+quantize kernel for activations (Fig. 4 steps 1–2).
 
 Given the (already rotated) activation X (N, K) and the grouped runtime
 smoothing scales s_g (K//g,), produce in ONE pass over X:
@@ -11,6 +11,13 @@ Blocked over rows only — each VMEM tile holds ``bn`` full rows so the
 row-max reduction is local (K up to ~16k fits comfortably: 128×16384 f32
 = 8 MiB).  The smooth scales are expanded per-column inside the kernel from
 an SMEM-prefetched vector, so HBM traffic is exactly read-X + write-Xq.
+
+NOTE: the serving hot path no longer launches this kernel — the fused
+two-launch pipeline (``kernels/ops.py``) performs the identical math
+inside ``rrs_smooth_gemm``'s prologue, entirely in VMEM, so Xq and α_x
+never touch HBM.  This standalone launch is kept as a unit-testable
+building block and as the legacy-pipeline baseline that
+``benchmarks/fig6_kernel.py`` times the fusion against.
 """
 from __future__ import annotations
 

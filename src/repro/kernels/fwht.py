@@ -1,4 +1,4 @@
-"""Online Hadamard rotation kernel — MXU-native factorized FWHT.
+"""Online Hadamard rotation kernels — MXU-native factorized FWHT.
 
 QuaRot's online rotation is a memory-bound elementwise butterfly on GPU.
 On TPU the natural formulation is *matmul form*: factor H_K = H_a ⊗ H_b
@@ -6,17 +6,33 @@ On TPU the natural formulation is *matmul form*: factor H_K = H_a ⊗ H_b
 
     X·H_K = reshape( Hb-pass( Ha-pass( reshape(X, (·, a, b)) ) ) )
 
-where each pass is a small dense matmul against a 2^m Hadamard — this keeps
-the rotation on the MXU (systolic array) instead of the VPU, and the
-constant H tiles live in VMEM.  One grid step processes ``bn`` rows.
+where each pass is a small dense matmul against a constant Hadamard tile —
+this keeps the rotation on the MXU (systolic array) instead of the VPU,
+and the H tiles live in VMEM.  One grid step processes ``bn`` rows.
 
-For K that is not a power of two the model uses the Kronecker/block modes in
-``repro.core.hadamard`` (plain XLA einsum — already MXU-shaped); this kernel
-covers the hot power-of-two path used by every assigned arch's d_model.
+Two kernels share that rotation body:
+
+* :func:`fwht_rotate`   — standalone rotation (power-of-two K only); kept
+  as a unit-testable building block and for callers that only rotate.
+* :func:`fwht_absmax`   — **kernel A of the two-launch fused RRS
+  pipeline** (see ``kernels/ops.py``): rotation fused with the
+  per-channel absmax reduction of Eq. 1's runtime scales, emitting a
+  bf16 rotated activation plus channel maxes in a SINGLE read of X.  The
+  channel-max output block is grid-invariant (index map pinned to
+  (0, 0)), so it stays resident in VMEM and accumulates across row
+  blocks — the one unavoidable cross-row sync happens on-chip instead of
+  as a separate full pass over the f32 activation in HBM.
+
+:func:`rotation_plan` decides, per (K, block), whether the rotation is
+expressible as the kernel's (I|H_a) ⊗ H_b matmul form: power-of-two K,
+Kronecker-constructible K (e.g. 1536 = H_128 ⊗ H_12), and power-of-two
+block-diagonal modes all are; anything else falls back to the XLA path
+in ``repro.core.hadamard`` (callers check ``plan.supported``).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import numpy as np
 import jax
@@ -26,8 +42,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hadamard
 
+_MAX_FACTOR = 256        # largest H tile we keep in VMEM (256² f32 = 256 KiB)
 
-def _split_pow2(k: int, cap: int = 256):
+
+def _split_pow2(k: int, cap: int = _MAX_FACTOR):
     """k = a*b with a,b powers of two, both ≤ cap (k ≤ cap² = 65536)."""
     a = 1
     while k // a > cap:
@@ -37,19 +55,81 @@ def _split_pow2(k: int, cap: int = 256):
     return a, k // a
 
 
-def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)        # (bn, K)
+class RotationPlan(NamedTuple):
+    """How kernel A realizes X·(H/√K) for one (K, block) combination.
+
+    supported  — the matmul-form kernel covers this rotation; when False
+                 callers must use the ``repro.core.hadamard`` XLA path.
+    ha, hb     — normalized factor matrices with rotation = (Ha ⊗ Hb) for
+                 the full-K modes, or (I ⊗ Hb) block-diagonal when
+                 ``apply_ha`` is False.  ``ha`` is a (1, 1) placeholder
+                 when unused (pallas_call needs a concrete operand).
+    apply_ha   — run the second (outer-factor) matmul pass.
+    """
+    supported: bool
+    ha: Optional[np.ndarray] = None
+    hb: Optional[np.ndarray] = None
+    apply_ha: bool = False
+
+
+@functools.lru_cache(maxsize=None)
+def rotation_plan(k: int, block: int = 0) -> RotationPlan:
+    dummy = np.ones((1, 1), np.float32)
+    if block not in (0, k):
+        # block-diagonal: X reshaped (·, K/b, b), each b-block rotated —
+        # that is right-multiplication by I_{K/b} ⊗ H_b (one Hb pass).
+        if k % block or block & (block - 1) or block > _MAX_FACTOR:
+            return RotationPlan(False)
+        hb = hadamard.hadamard_matrix(block)
+        return RotationPlan(True, dummy, np.asarray(hb, np.float32), False)
+    if not (k & (k - 1)):                         # full K, power of two
+        a, b = _split_pow2(k)
+        ha = np.asarray(hadamard.hadamard_matrix(a), np.float32)
+        hb = np.asarray(hadamard.hadamard_matrix(b), np.float32)
+        return RotationPlan(True, ha if a > 1 else dummy, hb, a > 1)
+    # full K with an odd factor: mirror hadamard.hadamard_matrix's
+    # Kronecker construction H_K = H_rem ⊗ H_{b·j} (e.g. 1536 = 128 ⊗ 12)
+    p2, odd = hadamard._factor_pow2(k)
+    if odd == 1:
+        return RotationPlan(False)
+    j = hadamard._small_pow2_for_base(odd, p2)
+    rem = p2 // j if j else 0
+    if not j or rem * j * odd != k or odd * j > _MAX_FACTOR \
+            or rem > _MAX_FACTOR:
+        return RotationPlan(False)
+    try:
+        base = hadamard.base_hadamard(odd * j)
+    except ValueError:
+        return RotationPlan(False)
+    hb = (base / np.sqrt(odd * j)).astype(np.float32)
+    ha = np.asarray(hadamard.hadamard_matrix(rem), np.float32) \
+        if rem > 1 else dummy
+    return RotationPlan(True, ha, hb, rem > 1)
+
+
+def _rotate_body(x: jnp.ndarray, ha, hb, apply_ha: bool) -> jnp.ndarray:
+    """Shared matmul-form rotation: x (bn, K) f32 -> rotated (bn, K) f32.
+
+    Right-multiply by Ha ⊗ Hb on X viewed as (bn, a, b): Hb pass on the
+    minor factor, Ha pass on the major one (both MXU matmuls).
+    """
     bn, k = x.shape
+    b = hb.shape[0]
+    y = x.reshape(bn * (k // b), b) @ hb                  # Hb pass (MXU)
+    if apply_ha:
+        a = ha.shape[0]
+        y = y.reshape(bn, a, b)
+        y = jax.lax.dot_general(                          # Ha pass (MXU)
+            y, ha, dimension_numbers=(((1,), (0,)), ((), ())))  # (bn, b, a)
+        y = jnp.transpose(y, (0, 2, 1))                   # (bn, a, b)
+    return y.reshape(bn, k)
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (bn, K)
     a = ha_ref.shape[0]
-    b = hb_ref.shape[0]
-    # right-multiply by H_a ⊗ H_b:  X (bn, a, b):  out = Haᵀ · X · Hb per row
-    x3 = x.reshape(bn * a, b) @ hb_ref[...]               # Hb pass (MXU)
-    x3 = x3.reshape(bn, a, b)
-    x3 = jax.lax.dot_general(                             # Ha pass (MXU)
-        x3, ha_ref[...],
-        dimension_numbers=(((1,), (0,)), ((), ())))       # (bn, b, a)
-    x3 = jnp.transpose(x3, (0, 2, 1))                     # (bn, a, b)
-    o_ref[...] = x3.reshape(bn, k).astype(o_ref.dtype)
+    y = _rotate_body(x, ha_ref[...], hb_ref[...], a > 1)
+    o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -61,21 +141,88 @@ def fwht_rotate(x: jnp.ndarray, *, bn: int = 128,
         raise ValueError(f"fwht_rotate needs power-of-2 K, got {k}")
     if n % bn:
         raise ValueError(f"N={n} not divisible by bn={bn}")
-    a, b = _split_pow2(k)
-    ha = jnp.asarray(hadamard.hadamard_matrix(a), jnp.float32)
-    hb = jnp.asarray(hadamard.hadamard_matrix(b), jnp.float32)
-    # normalization: H_K/√K = (H_a/√a) ⊗ (H_b/√b); hadamard_matrix is
-    # already normalized per factor.
+    plan = rotation_plan(k)
     kernel = pl.pallas_call(
         _fwht_kernel,
         grid=(n // bn,),
         in_specs=[
             pl.BlockSpec((bn, k), lambda i: (i, 0)),
-            pl.BlockSpec((a, a), lambda i: (0, 0)),
-            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec(plan.ha.shape, lambda i: (0, 0)),
+            pl.BlockSpec(plan.hb.shape, lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
         interpret=interpret,
     )
-    return kernel(x, ha, hb)
+    return kernel(x, jnp.asarray(plan.ha), jnp.asarray(plan.hb))
+
+
+# ---------------------------------------------------------------------------
+# kernel A: rotation (or identity) fused with the channel-absmax reduction
+# ---------------------------------------------------------------------------
+
+def _fwht_absmax_kernel(x_ref, ha_ref, hb_ref, xo_ref, cmax_ref, *,
+                        rotate: bool, apply_ha: bool):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                    # (bn, K)
+    if rotate:
+        x = _rotate_body(x, ha_ref[...], hb_ref[...], apply_ha)
+    y = x.astype(xo_ref.dtype)
+    xo_ref[...] = y
+    # channel max is taken on the STORED (bf16-rounded) values, so the
+    # runtime scales downstream are consistent with what kernel B reads.
+    m = jnp.max(jnp.abs(y.astype(jnp.float32)), axis=0, keepdims=True)
+
+    @pl.when(i == 0)
+    def _init():
+        cmax_ref[...] = m
+
+    @pl.when(i > 0)
+    def _accum():
+        cmax_ref[...] = jnp.maximum(cmax_ref[...], m)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rotate", "bn",
+                                             "interpret", "out_dtype"))
+def fwht_absmax(x: jnp.ndarray, *, block: int = 0, rotate: bool = True,
+                bn: int = 128, interpret: bool = True,
+                out_dtype=jnp.bfloat16):
+    """One read of X -> (rotated activation in ``out_dtype``, channel
+    absmax (K,) f32) — the two-launch pipeline's kernel A.
+
+    ``rotate=False`` is the identity branch (plain Runtime Smooth):
+    the pass still fuses the dtype cast with the absmax reduction so the
+    scale computation never costs a separate trip over X.  ``block``
+    selects full-K (0) or block-diagonal rotation; the (K, block) combo
+    must be kernel-expressible (``rotation_plan(...).supported``).
+    """
+    n, k = x.shape
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    plan = rotation_plan(k, block) if rotate else RotationPlan(
+        True, np.ones((1, 1), np.float32), np.ones((1, 1), np.float32),
+        False)
+    if not plan.supported:
+        raise ValueError(f"rotation (K={k}, block={block}) not "
+                         f"kernel-expressible; use the XLA fallback")
+    kernel = pl.pallas_call(
+        functools.partial(_fwht_absmax_kernel, rotate=rotate,
+                          apply_ha=plan.apply_ha),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec(plan.ha.shape, lambda i: (0, 0)),
+            pl.BlockSpec(plan.hb.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),   # grid-invariant:
+        ],                                            # accumulates in VMEM
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), out_dtype),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    x_rot, cmax = kernel(x, jnp.asarray(plan.ha), jnp.asarray(plan.hb))
+    return x_rot, cmax.reshape(k)

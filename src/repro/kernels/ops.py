@@ -1,23 +1,48 @@
 """Public jit'd wrappers around the Pallas kernels + the end-to-end fused
 RRS linear (rotate → smooth → quantize → int4 GEMM) integer pipeline.
 
+Two-launch contract (see ROADMAP "Kernel fusion & HBM budget"):
+
+* **kernel A** (``fwht.fwht_absmax``) fuses the online rotation with the
+  per-channel absmax reduction of Eq. 1's runtime scales — one read of
+  X, emitting a bf16 rotated activation plus channel maxes.  The only
+  inter-kernel traffic is that bf16 intermediate (plus a (K,) f32 max
+  vector); no f32 activation ever touches HBM.
+* **kernel B** (``rrs_gemm.rrs_smooth_gemm``) folds smooth + per-token
+  quantize into the int4 GEMM prologue: the (bn, K) strip is divided by
+  s_g, α_x-scaled and cast to int8 inside VMEM, so the standalone
+  ``act_smooth_quant`` launch and the int8 x_q HBM round-trip are gone.
+
+Between the launches only O(K) work happens in XLA: max(cmax, eps) and
+the per-group max — bytes moved are negligible next to the activation.
+
+Decode-path selection rule: N ≤ 32 rows run with ``bn = N`` (no row
+padding at all) on a weight-optimal GEMV-style grid — every packed
+weight tile is read exactly once while the tiny activation strip stays
+resident in VMEM; N > 32 pads to the MXU-aligned 128-row prefill grid
+(mid sizes pad to their largest power-of-two row block, as before).
+
 ``interpret`` defaults to True off-TPU (the kernels execute in Python on
 CPU for validation); on a real TPU backend it compiles to Mosaic.
+
+The legacy three-launch composition (fwht_rotate → act_smooth_quant →
+rrs_gemm) survives as unit-testable building blocks and as the
+benchmark baseline in ``benchmarks/fig6_kernel.py``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import hadamard, quant, smooth
+from repro.kernels import fwht as kfwht
 from repro.kernels import ref as kref
-from repro.kernels.act_quant import act_smooth_quant
-from repro.kernels.fwht import fwht_rotate
-from repro.kernels.rrs_gemm import rrs_gemm
+from repro.kernels.fwht import fwht_absmax
+from repro.kernels.rrs_gemm import rrs_smooth_gemm
 
 
 def default_interpret() -> bool:
@@ -43,11 +68,17 @@ class RRSWeights:
     from the calibration batch's rotated channel scales and folded into
     the packed weights, so the runtime cost is one activation gather.
     The smoothing *scales* stay runtime (the paper's key property).
+
+    ``keep_codes``: debug flag — retain the unpacked int8 ``w_codes``
+    alongside the packed nibbles.  The serving path never reads them
+    (they double prepared-weight memory); only the jnp oracle
+    (:func:`rrs_linear_fused_ref`) and kernel-parity tests do.
     """
 
     def __init__(self, w: jnp.ndarray, group: int = 128,
                  rotate_block: int = 0, w_bits: int = 4,
-                 calib_x: Optional[jnp.ndarray] = None):
+                 calib_x: Optional[jnp.ndarray] = None,
+                 keep_codes: bool = False):
         k = w.shape[-1]
         self.group = group
         self.rotate_block = hadamard.pick_rotate_block(k, rotate_block)
@@ -60,9 +91,21 @@ class RRSWeights:
             w_rot = jnp.take(w_rot, self.perm, axis=-1)
         w_codes, w_scale = quant.quantize_per_channel(w_rot, w_bits, axis=-1)
         self.w_packed = pack_int4_kblocks(w_codes, group)
-        self.w_codes = w_codes          # kept for the oracle/tests
+        self.w_codes = w_codes if keep_codes else None
         self.w_scale = w_scale.reshape(-1)
         self.m, self.k = w.shape
+
+
+def _row_geometry(n: int) -> Tuple[int, int]:
+    """(bn, pad) for N rows: the decode-path selection rule.
+
+    N ≤ 32 → bn = N exactly, zero padding (GEMV-style small-batch grid);
+    N ≥ 128 → the MXU-aligned 128-row prefill grid; in between, the
+    largest power-of-two row block ≤ N (minimal padding)."""
+    if n <= 32:
+        return n, 0
+    bn = 128 if n >= 128 else _pow2_floor(n)
+    return bn, (-n) % bn
 
 
 def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
@@ -71,18 +114,25 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
                             rotate: bool = True,
                             perm: Optional[jnp.ndarray] = None,
                             interpret: Optional[bool] = None,
-                            out_dtype=jnp.float32) -> jnp.ndarray:
+                            out_dtype=jnp.float32,
+                            intermediate_dtype=jnp.bfloat16) -> jnp.ndarray:
     """End-to-end integer RRS linear from raw prepared fields — the seam
     the method registry's ``exec_path == "kernel"`` apply plugs into
     (fields are exactly what a ``PreparedLinear`` artifact carries).
 
+    Executes as exactly TWO Pallas launches (kernel A: rotate ⊕ channel
+    absmax; kernel B: smooth ⊕ quantize ⊕ int4 GEMM) with a bf16
+    activation as the only inter-kernel HBM traffic — see the module
+    docstring for the contract and the decode-path selection rule.
+
     x: (..., K) bf16/f32 activation.  ``rotate=False`` is the identity-
     rotation branch: the plain Runtime Smooth method ("rs", no FWHT)
-    reuses the same fused smooth-quantize + int4 GEMM pipeline, skipping
-    step 1.  ``perm`` is an optional FROZEN channel permutation already
-    folded into the packed weights (static reorder): the runtime cost is
-    one activation gather; the smoothing *scales* stay runtime (the
-    paper's key property).
+    reuses the same fused pipeline, skipping the rotation matmuls inside
+    kernel A (the absmax fusion still applies).  ``perm`` is an optional
+    FROZEN channel permutation already folded into the packed weights
+    (static reorder): the runtime cost is one bf16 activation gather
+    between the launches plus a (K,) gather on the channel maxes; the
+    smoothing *scales* stay runtime (the paper's key property).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -90,33 +140,37 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     n = x2.shape[0]
-    # pad rows to a block multiple
-    bn = 128 if n >= 128 else _pow2_floor(n)
-    pad = (-n) % bn
+    bn, pad = _row_geometry(n)
     if pad:
         x2 = jnp.concatenate(
             [x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
-    # 1. online rotation (identity for "rs")
+    # launch 1: (rotation ⊕) channel absmax — ONE read of X
     if not rotate:
-        x_rot = x2.astype(jnp.float32)
-    elif rotate_block in (0, k) and not (k & (k - 1)):
-        x_rot = fwht_rotate(x2.astype(jnp.float32), bn=bn,
-                            interpret=interpret)
+        x_rot, cmax = fwht_absmax(x2, rotate=False, bn=bn,
+                                  interpret=interpret,
+                                  out_dtype=intermediate_dtype)
+    elif kfwht.rotation_plan(k, rotate_block).supported:
+        x_rot, cmax = fwht_absmax(x2, block=rotate_block, bn=bn,
+                                  interpret=interpret,
+                                  out_dtype=intermediate_dtype)
     else:
+        # rare non-factorable (K, block): XLA rotation (still no separate
+        # smooth/quantize passes — kernel B unchanged)
         x_rot = hadamard.rotate(x2.astype(jnp.float32),
                                 block=rotate_block)
+        x_rot = x_rot.astype(intermediate_dtype)
+        cmax = jnp.max(jnp.abs(x_rot.astype(jnp.float32)), axis=0)
     if perm is not None:
         x_rot = jnp.take(x_rot, perm, axis=-1)
-    # 2. runtime smoothing scales (channel absmax -> group max)
-    s = smooth.runtime_scales(x_rot)
+        cmax = jnp.take(cmax, perm)
+    # O(K) scale prep in XLA: Eq. 1 eps floor + per-group max
+    s = jnp.maximum(cmax, 1e-6)
     s_g = smooth.group_smooth_scales(s, group)
-    # 3. fused smooth+quantize
-    x_q, a_scale = act_smooth_quant(x_rot, s_g, bn=bn, interpret=interpret)
-    # 4. fused int4 GEMM with runtime scales in the epilogue chain
+    # launch 2: smooth ⊕ quantize ⊕ int4 GEMM (prologue fusion)
     bm = 128 if m % 128 == 0 else _largest_div_pow2(m, 128)
-    y = rrs_gemm(x_q, w_packed, s_g, a_scale, w_scale,
-                 bn=bn, bm=bm, bk=group, out_dtype=out_dtype,
-                 interpret=interpret)
+    y = rrs_smooth_gemm(x_rot, w_packed, s_g, w_scale,
+                        bn=bn, bm=bm, bk=group, out_dtype=out_dtype,
+                        interpret=interpret)
     if pad:
         y = y[:n]
     return y.reshape(*lead, m)
@@ -149,19 +203,91 @@ def _largest_div_pow2(m: int, cap: int) -> int:
     return b
 
 
-def rrs_linear_fused_ref(x: jnp.ndarray, weights: RRSWeights,
-                         out_dtype=jnp.float32) -> jnp.ndarray:
-    """Oracle for the full fused pipeline (pure jnp, same integer math)."""
+def rrs_linear_fused_fields_ref(x: jnp.ndarray, *, w_codes: jnp.ndarray,
+                                w_scale: jnp.ndarray, m: int, group: int,
+                                rotate_block: int = 0, rotate: bool = True,
+                                perm: Optional[jnp.ndarray] = None,
+                                out_dtype=jnp.float32,
+                                intermediate_dtype=jnp.bfloat16
+                                ) -> jnp.ndarray:
+    """Field-level oracle of :func:`rrs_linear_fused_fields` (pure jnp,
+    same integer math, UNPACKED int8 weight codes).
+
+    Mirrors the two-launch kernels' op structure exactly (matmul-form
+    rotation with the same factors, bf16 intermediate, kernel-ordered
+    K-block accumulation), so interpret-mode kernels match BIT-EXACTLY.
+    ``intermediate_dtype=jnp.float32`` reproduces the legacy three-launch
+    pipeline's numerics (no bf16 rounding between rotate and quantize).
+    """
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k).astype(jnp.float32)
-    x_rot = hadamard.rotate(x2, block=weights.rotate_block)
-    if weights.perm is not None:
-        x_rot = jnp.take(x_rot, weights.perm, axis=-1)
-    s = smooth.runtime_scales(x_rot)
-    s_g = smooth.group_smooth_scales(s, weights.group)
-    x_q, a_scale = kref.act_smooth_quant_ref(x_rot, s_g)
-    y = kref.rrs_gemm_ref(x_q, weights.w_codes, s_g, a_scale,
-                          weights.w_scale, bk=weights.group,
-                          out_dtype=out_dtype)
-    return y.reshape(*lead, weights.m)
+    x_rot, cmax = kref.fwht_absmax_ref(x2, block=rotate_block,
+                                       rotate=rotate,
+                                       out_dtype=intermediate_dtype)
+    if perm is not None:
+        x_rot = jnp.take(x_rot, perm, axis=-1)
+        cmax = jnp.take(cmax, perm)
+    s = jnp.maximum(cmax, 1e-6)
+    s_g = smooth.group_smooth_scales(s, group)
+    y = kref.rrs_smooth_gemm_ref(x_rot, w_codes, s_g, w_scale, bk=group,
+                                 out_dtype=out_dtype)
+    return y.reshape(*lead, m)
+
+
+def rrs_linear_fused_ref(x: jnp.ndarray, weights: RRSWeights,
+                         out_dtype=jnp.float32,
+                         intermediate_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """RRSWeights-object oracle (see :func:`rrs_linear_fused_fields_ref`).
+
+    Requires ``RRSWeights(..., keep_codes=True)`` (the serving path drops
+    the unpacked codes; only this oracle consumes them).
+    """
+    if weights.w_codes is None:
+        raise ValueError("oracle needs unpacked codes: construct "
+                         "RRSWeights(..., keep_codes=True)")
+    return rrs_linear_fused_fields_ref(
+        x, w_codes=weights.w_codes, w_scale=weights.w_scale, m=weights.m,
+        group=weights.group, rotate_block=weights.rotate_block,
+        perm=weights.perm, out_dtype=out_dtype,
+        intermediate_dtype=intermediate_dtype)
+
+
+# ---------------------------------------------------------------------------
+# modeled HBM traffic (the fig6 "bytes-moved per linear" accounting)
+# ---------------------------------------------------------------------------
+
+def modeled_linear_bytes(n: int, k: int, m: int, *, group: int = 128,
+                         in_bytes: int = 4, mid_bytes: int = 2,
+                         out_bytes: int = 4) -> Dict[str, float]:
+    """Modeled HBM bytes moved for ONE fused RRS linear at (N, K, M),
+    legacy three-launch pipeline vs the fused two-launch one.
+
+    legacy3: fwht (read X, write x_rot f32) + the XLA channel-scale pass
+    (read x_rot) + act_smooth_quant (read x_rot, write x_q int8 + α_x) +
+    rrs_gemm (read x_q + α_x).  fused2: kernel A (read X, write bf16
+    x_rot + (K,) maxes) + kernel B (read bf16 x_rot); α_x/x_q never leave
+    VMEM.  Weights (packed nibbles + scales) and the output are common to
+    both.
+    """
+    weights = m * k / 2 + m * 4 + (k // group) * 4
+    out = n * m * out_bytes
+    legacy_act = (n * k * in_bytes          # fwht read
+                  + n * k * 4               # fwht write (f32)
+                  + n * k * 4               # runtime_scales read
+                  + n * k * 4               # act_smooth_quant read
+                  + n * k + n * 4           # x_q + α_x write
+                  + n * k + n * 4)          # gemm reads x_q + α_x
+    fused_act = (n * k * in_bytes           # kernel A read
+                 + n * k * mid_bytes + k * 4  # bf16 x_rot + channel maxes
+                 + n * k * mid_bytes + k * 4)  # kernel B reads them back
+    legacy = legacy_act + weights + out
+    fused = fused_act + weights + out
+    return {
+        "legacy3_bytes": float(legacy),
+        "fused2_bytes": float(fused),
+        "bytes_drop": float(1.0 - fused / legacy),
+        "legacy3_act_bytes": float(legacy_act),
+        "fused2_act_bytes": float(fused_act),
+        "act_bytes_drop": float(1.0 - fused_act / legacy_act),
+    }

@@ -71,3 +71,63 @@ def act_smooth_quant_ref(x: jnp.ndarray, s_g: jnp.ndarray):
 
 def fwht_rotate_ref(x: jnp.ndarray) -> jnp.ndarray:
     return hadamard.fwht(x)
+
+
+# ---------------------------------------------------------------------------
+# two-launch fused pipeline oracles (kernels A and B)
+#
+# These mirror the KERNELS' op structure — matmul-form rotation with the
+# same (Ha, Hb) factors, the same reduction/round order — so that under
+# interpret mode (where Pallas ops execute as plain jax ops) the
+# END-TO-END bf16-intermediate pipeline matches them BIT-EXACTLY,
+# integer codes and f32 epilogue alike.  Two caveats, pinned by tests:
+# (1) compare jit-vs-jit — XLA's vectorized f32 division differs from
+# EAGER evaluation by 1 ulp; (2) standalone kernel/oracle pairings fed
+# full-entropy random scales can differ by ≤1 ulp of the accumulator
+# (per-lowering FMA/reassociation choices).
+# ---------------------------------------------------------------------------
+
+def rotate_matmul_ref(x: jnp.ndarray, k: int, block: int = 0) -> jnp.ndarray:
+    """Matmul-form rotation with kernel A's exact factorization; falls
+    back to ``hadamard.rotate`` when the plan is not kernel-expressible
+    (mirroring ops.py's XLA fallback)."""
+    from repro.kernels import fwht as kfwht
+    plan = kfwht.rotation_plan(k, block)
+    if not plan.supported:
+        return hadamard.rotate(x.astype(jnp.float32), block=block)
+    return kfwht._rotate_body(x.astype(jnp.float32),
+                              jnp.asarray(plan.ha), jnp.asarray(plan.hb),
+                              plan.apply_ha)
+
+
+def fwht_absmax_ref(x: jnp.ndarray, block: int = 0, rotate: bool = True,
+                    out_dtype=jnp.bfloat16):
+    """Kernel A oracle: (rotated activation in out_dtype, channel absmax
+    of the STORED values (K,) f32)."""
+    n, k = x.shape
+    y = rotate_matmul_ref(x, k, block) if rotate else x.astype(jnp.float32)
+    y16 = y.astype(out_dtype)
+    cmax = jnp.max(jnp.abs(y16.astype(jnp.float32)), axis=0)
+    return y16, cmax
+
+
+def rrs_smooth_gemm_ref(x: jnp.ndarray, w_q: jnp.ndarray, s_g: jnp.ndarray,
+                        w_scale: jnp.ndarray, bk: int,
+                        out_dtype=jnp.float32) -> jnp.ndarray:
+    """Kernel B oracle: smooth+quantize prologue (== act_smooth_quant_ref)
+    then the integer GEMM with kernel-ordered sequential f32 accumulation
+    over K-blocks (the einsum in rrs_gemm_ref reduces in an unspecified
+    order; bit-exactness needs the kernel's l-loop order)."""
+    n, k = x.shape
+    m = w_q.shape[0]
+    ng = k // bk
+    x_q, alpha = act_smooth_quant_ref(x, s_g)
+    acc = jnp.zeros((n, m), jnp.float32)
+    for g in range(ng):
+        part = jax.lax.dot_general(
+            x_q[:, g * bk:(g + 1) * bk], w_q[:, g * bk:(g + 1) * bk],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + part.astype(jnp.float32) * s_g[g].astype(jnp.float32)
+    y = acc * alpha * w_scale.reshape(1, m).astype(jnp.float32)
+    return y.astype(out_dtype)

@@ -1,4 +1,4 @@
-"""Fused Runtime-Smooth INT4 GEMM — the paper's kernel (Fig. 4), TPU-native.
+"""Fused Runtime-Smooth INT4 GEMM kernels — the paper's Fig. 4, TPU-native.
 
 Computes  Y[n,m] = α_x[n] · α_w[m] · Σ_g s_g · Σ_{j∈g} Xq[n,j] · Wq[m,j]
 
@@ -11,12 +11,30 @@ Computes  Y[n,m] = α_x[n] · α_w[m] · Σ_g s_g · Σ_{j∈g} Xq[n,j] · Wq[m,
 * α_x : per-token activation quant scale;  α_w: per-output-channel weight
         quant scale — both applied once at the epilogue.
 
-Grid (n, m, k) with K innermost; an f32 VMEM scratch accumulates partial
-products; the k-th partial is scaled by s_g[k] exactly like the paper's
-"multiply the runtime scale on the dequantized result" (Fig. 4 step 3).
+Two entry points:
+
+* :func:`rrs_gemm` — the plain integer GEMM over PRE-quantized codes
+  (grid (n, m, k), K innermost, f32 VMEM accumulator).  Kept as a
+  unit-testable building block.
+* :func:`rrs_smooth_gemm` — **kernel B of the two-launch fused RRS
+  pipeline** (see ``kernels/ops.py``): smooth + per-token quantize folded
+  into the GEMM *prologue*.  Its activation operand is the bf16 rotated
+  strip from kernel A; at the first (m, k) step of each row block the
+  whole (bn, K) strip is divided by s_g, per-token scaled and cast to
+  int8 **inside VMEM** (int8 codes land in a scratch buffer, α_x in a
+  (bn, 1) scratch), so neither the f32 smoothed activation nor the int8
+  codes ever round-trip through HBM.  Every subsequent (m, k) step
+  slices its (bn, bk) tile straight out of the resident scratch.  The
+  activation strip's index map depends only on the row-block index, so
+  Pallas keeps it (and the scratches) in VMEM across the m/k loops —
+  HBM activation traffic is exactly ONE bf16 read of X per linear.
 
 Block sizes default to MXU-aligned (128): bn×bk int8 activations and
 bm×bk/2 packed weights comfortably fit VMEM (≈48 KiB for 128³ tiles).
+The decode path (see ops.py) instead runs bn = the true batch (≤ 32) on
+a weight-optimal grid: each packed-weight tile is read exactly once and
+the tiny activation strip stays resident — a GEMV-style schedule with
+zero row padding.
 
 Packing layout is block-local (see ``pack_int4_kblocks`` in ops.py): within
 each K-block of ``bk`` columns, the low nibbles hold columns [0, bk/2) and
@@ -113,3 +131,108 @@ def rrs_gemm(x_q: jnp.ndarray,          # (N, K) int8
     )
     return kernel(s_g.astype(jnp.float32), x_q, w_packed,
                   a_scale.astype(jnp.float32), w_scale_row)
+
+
+# ---------------------------------------------------------------------------
+# kernel B: smooth + per-token quantize folded into the GEMM prologue
+# ---------------------------------------------------------------------------
+
+QMAX = 7.0  # int4 symmetric (shared with act_quant / the jnp oracles)
+
+
+def _rrs_smooth_gemm_kernel(sg_ref,        # SMEM: (K//bk,) f32 smooth scales
+                            x_ref,         # VMEM: (bn, K) bf16 rotated strip
+                            w_ref,         # VMEM: (bm, bk//2) uint8 packed
+                            aw_ref,        # VMEM: (1, bm) f32
+                            o_ref,         # VMEM out: (bn, bm)
+                            xq_ref,        # VMEM scratch: (bn, K) int8
+                            ax_ref,        # VMEM scratch: (bn, 1) f32 α_x
+                            acc_ref):      # VMEM scratch: (bn, bm) f32
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bk = 2 * w_ref.shape[1]
+
+    @pl.when((j == 0) & (l == 0))
+    def _prologue():
+        # first (m, k) step of this row block: smooth + quantize the WHOLE
+        # resident strip once; α_x is the first-k-block reduction into
+        # scratch the rest of the grid reuses (ops.py pipeline docs).
+        x = x_ref[...].astype(jnp.float32)               # (bn, K)
+        k = x.shape[-1]
+        g = k // sg_ref.shape[0]
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) // g
+        s = sg_ref[col[0]]                               # (K,) from SMEM
+        x_sm = x / s[None, :]
+        absmax = jnp.max(jnp.abs(x_sm), axis=-1, keepdims=True)  # (bn, 1)
+        alpha = jnp.maximum(absmax, 1e-8) / QMAX
+        q = jnp.clip(jnp.round(x_sm / alpha), -QMAX, QMAX)
+        xq_ref[...] = q.astype(jnp.int8)
+        ax_ref[...] = alpha
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_q = _unpack_nibbles(w_ref[...])                    # (bm, bk) int8
+    x_q = xq_ref[:, pl.ds(pl.multiple_of(l * bk, bk), bk)]
+    part = jax.lax.dot_general(                          # MXU int8 path
+        x_q, w_q,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                # (bn, bm)
+    acc_ref[...] += part.astype(jnp.float32) * sg_ref[l]
+
+    @pl.when(l == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] * ax_ref[...] * aw_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk", "out_dtype",
+                                             "interpret"))
+def rrs_smooth_gemm(x: jnp.ndarray,         # (N, K) rotated activation
+                    w_packed: jnp.ndarray,  # (M, K//2) uint8 packed
+                    s_g: jnp.ndarray,       # (K//bk,) f32 smooth scales
+                    w_scale: jnp.ndarray,   # (M,) or (M, 1) f32
+                    *, bn: int = 128, bm: int = 128, bk: int = 128,
+                    out_dtype=jnp.float32,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Pallas-call wrapper for kernel B.  K-block size bk == smooth group;
+    the per-token quant scale α_x is computed in the prologue and never
+    materialized in HBM."""
+    n, k = x.shape
+    m = w_packed.shape[0]
+    if k % bk or n % bn or m % bm:
+        raise ValueError(f"shape ({n},{m},{k}) not divisible by blocks "
+                         f"({bn},{bm},{bk})")
+    if w_packed.shape[1] != k // 2:
+        raise ValueError("w_packed must be (M, K//2)")
+    if s_g.shape != (k // bk,):
+        raise ValueError(f"s_g must have one scale per K-block: "
+                         f"{s_g.shape} != ({k // bk},)")
+    w_scale_row = w_scale.reshape(1, m).astype(jnp.float32)
+
+    grid = (n // bn, m // bm, k // bk)
+    kernel = pl.pallas_call(
+        _rrs_smooth_gemm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # full row strip, index map constant over (j, l): fetched
+                # once per row block, resident across the m/k loops
+                pl.BlockSpec((bn, k), lambda i, j, l, s: (i, 0)),
+                pl.BlockSpec((bm, bk // 2), lambda i, j, l, s: (j, l)),
+                pl.BlockSpec((1, bm), lambda i, j, l, s: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bn, bm), lambda i, j, l, s: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((bn, k), jnp.int8),
+                pltpu.VMEM((bn, 1), jnp.float32),
+                pltpu.VMEM((bn, bm), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, m), out_dtype),
+        interpret=interpret,
+    )
+    return kernel(s_g.astype(jnp.float32), x, w_packed, w_scale_row)

@@ -17,6 +17,12 @@ to expert GEMMs (important for an honest roofline; see DESIGN.md).
 RRS integration: expert GEMMs go through the same ``qlinear`` dispatch,
 vmapped over the expert axis — the runtime smoothing scales are computed
 per expert slice, exactly as described in DESIGN.md §5 (MoE applicability).
+
+Slot-serving integration: ``moe_apply`` accepts a ``valid`` (B, S) token
+mask (derived from the engine's left-pad ``offsets``); pad/frozen-slot
+tokens are routed to a sentinel expert so they occupy zero capacity and
+are excluded from the load-balancing loss — continuous-batching
+admission is capacity-neutral.
 """
 from __future__ import annotations
 
@@ -78,8 +84,15 @@ def _stack_init(key, e: int, m: int, k: int, cfg: ModelConfig, dtype,
 # ---------------------------------------------------------------------------
 
 def _route(x2: jnp.ndarray, router_w: jnp.ndarray, topk: int,
-           capacity: int):
+           capacity: int, valid: Optional[jnp.ndarray] = None):
     """x2: (T, d) -> dispatch metadata + buffer (E, C, d).
+
+    ``valid`` (T,) bool marks REAL tokens (slot-serving left-pad /
+    frozen-slot entries are False).  Invalid tokens are routed to a
+    sentinel expert id E which sorts AFTER every real assignment, so
+    they consume NO capacity slots and cannot displace real tokens —
+    slot admission is capacity-neutral.  They are also excluded from
+    the load-balancing statistics.
 
     Returns (buffer, combine_w (T,k), expert_pos (T*k,), expert_id (T*k,),
     keep (T*k,), aux_loss).
@@ -91,27 +104,41 @@ def _route(x2: jnp.ndarray, router_w: jnp.ndarray, topk: int,
     top_p, top_i = jax.lax.top_k(probs, topk)                    # (T, k)
     top_p = top_p / jnp.maximum(
         jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
-    # aux load-balancing loss (Switch-style)
-    me = jnp.mean(probs, axis=0)
-    ce = jnp.mean(
-        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1),
-        axis=0) / topk
+    # aux load-balancing loss (Switch-style), over REAL tokens only
+    hot = jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1)
+    if valid is None:
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(hot, axis=0) / topk
+    else:
+        vw = valid.astype(jnp.float32)[:, None]                  # (T, 1)
+        cnt = jnp.maximum(jnp.sum(vw), 1.0)
+        me = jnp.sum(probs * vw, axis=0) / cnt
+        ce = jnp.sum(hot * vw, axis=0) / cnt / topk
     aux = e * jnp.sum(me * ce)
 
     flat_e = top_i.reshape(-1)                                   # (T*k,)
+    if valid is not None:
+        vflat = jnp.repeat(valid, topk)                          # (T*k,)
+        flat_e = jnp.where(vflat, flat_e, e)        # sentinel: sorts last
     # position of each assignment within its expert, via stable sort
     order = jnp.argsort(flat_e, stable=True)                     # (T*k,)
     # rank within sorted segment
     sorted_e = flat_e[order]
     seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))        # (E,)
-    pos_sorted = jnp.arange(t * topk) - seg_start[sorted_e]
+    # sentinel entries index seg_start with the (clamped) last expert —
+    # their pos is garbage, but keep below force-drops them anyway
+    pos_sorted = jnp.arange(t * topk) - seg_start[
+        jnp.minimum(sorted_e, e - 1)]
     pos = jnp.zeros((t * topk,), jnp.int32).at[order].set(
         pos_sorted.astype(jnp.int32))
     keep = pos < capacity
+    if valid is not None:
+        keep = keep & vflat
     token_idx = jnp.repeat(jnp.arange(t), topk)
     # scatter tokens into (E, C, d)
     buf = jnp.zeros((e, capacity, d), x2.dtype)
-    buf = buf.at[flat_e, jnp.where(keep, pos, capacity - 1)].add(
+    buf = buf.at[jnp.minimum(flat_e, e - 1),
+                 jnp.where(keep, pos, capacity - 1)].add(
         jnp.where(keep[:, None], x2[token_idx], 0).astype(x2.dtype))
     return buf, top_p, pos, flat_e, keep, aux
 
@@ -143,13 +170,21 @@ def _expert_ffn(buf: jnp.ndarray, w_gate, w_up, w_down,
 # ---------------------------------------------------------------------------
 
 def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
-              prepared: bool, capacity_factor: float = 1.25
+              prepared: bool, capacity_factor: float = 1.25,
+              valid: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) -> (y, aux_loss)."""
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``valid`` (B, S) bool marks real tokens under the slot-serving
+    left-pad contract (None = all real): pad/frozen-slot tokens neither
+    occupy expert capacity nor skew the aux loss (see :func:`_route`), so
+    continuous-batching admission is capacity-neutral for co-batched
+    rows."""
     b, s, d = x.shape
     e = cfg.moe
     mesh = shd.active_mesh()
     x2 = x.reshape(b * s, d)
+    valid2 = None if valid is None else valid.reshape(b * s)
 
     ep_axes = shd.resolved_rule("experts")
     is_decode = s == 1 or b * s <= 4 * e.num_experts
@@ -157,16 +192,18 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         # serving EP: experts spread over the whole mesh (e.g. 1/chip),
         # tokens replicated — DeepSeek-style inference dispatch
         y2, aux = _moe_ep_inference(p, x2, cfg, qcfg, prepared,
-                                    capacity_factor, mesh, ep_axes)
+                                    capacity_factor, mesh, ep_axes,
+                                    valid=valid2)
     elif mesh is not None and ep_axes:
         y2, aux = _moe_ep_shard_map(p, x2, cfg, qcfg, prepared,
-                                    capacity_factor, mesh, ep_axes)
+                                    capacity_factor, mesh, ep_axes,
+                                    valid=valid2)
     else:
         t = b * s
         cap = max(int(t * e.experts_per_token * capacity_factor
                       / e.num_experts), 4)
         buf, top_p, pos, flat_e, keep, aux = _route(
-            x2, p["router"], e.experts_per_token, cap)
+            x2, p["router"], e.experts_per_token, cap, valid=valid2)
         y_buf = _expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"],
                             qcfg, prepared)
         y2 = _unroute(y_buf, top_p, pos, flat_e, keep, t,
@@ -181,7 +218,7 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
 
 
 def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
-                      ep_axes):
+                      ep_axes, valid=None):
     """Decode-time EP: experts sharded over ``ep_axes`` (e.g. data×model =
     256-way), every device routes the (small, replicated) token batch and
     computes its local expert slice; one psum combines (DESIGN.md §6)."""
@@ -201,15 +238,17 @@ def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
     ep = _prod(ep_axes) if ep_axes else 1
     if not ep_axes or ep == 1:
         return _moe_ep_shard_map(p, x2, cfg, qcfg, prepared,
-                                 capacity_factor, mesh)
+                                 capacity_factor, mesh, valid=valid)
     e_loc = e.num_experts // ep
     t = x2.shape[0]
     cap = max(int(t * e.experts_per_token * capacity_factor
                   / e.num_experts), 1)
+    # a concrete (replicated) mask keeps the shard_map arity static
+    valid_arr = jnp.ones((t,), bool) if valid is None else valid
 
-    def local_fn(x_all, router_w, w_gate, w_up, w_down):
+    def local_fn(x_all, v_all, router_w, w_gate, w_up, w_down):
         buf, top_p, pos, flat_e, keep, aux = _route(
-            x_all, router_w, e.experts_per_token, cap)
+            x_all, router_w, e.experts_per_token, cap, valid=v_all)
         # flattened device index along ep_axes (major-to-minor order)
         idx = jax.lax.axis_index(ep_axes[0])
         for a in ep_axes[1:]:
@@ -226,15 +265,16 @@ def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
 
     fn = jax.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(), P(None, None), P(ep_axes, None, None),
+        in_specs=(P(), P(), P(None, None), P(ep_axes, None, None),
                   P(ep_axes, None, None), P(ep_axes, None, None)),
         out_specs=(P(), P()),
         check_vma=False)
-    return fn(x2, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return fn(x2, valid_arr, p["router"], p["w_gate"], p["w_up"],
+              p["w_down"])
 
 
 def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
-                      ep_axes=("model",)):
+                      ep_axes=("model",), valid=None):
     """Expert-parallel training/prefill dispatch: tokens sharded over the
     data axes, experts sharded over ``ep_axes`` (one or more mesh axes —
     multi-axis EP = chained tiled all_to_alls, the DeepSeek-style
@@ -254,7 +294,7 @@ def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
         cap = max(int(t * e.experts_per_token * capacity_factor
                       / e.num_experts), 4)
         buf, top_p, pos, flat_e, keep, aux = _route(
-            x2, p["router"], e.experts_per_token, cap)
+            x2, p["router"], e.experts_per_token, cap, valid=valid)
         y_buf = _expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"],
                             qcfg, prepared)
         return _unroute(y_buf, top_p, pos, flat_e, keep, t,
@@ -275,11 +315,12 @@ def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
     t_loc = t_global // tp_all
     cap_loc = max(math.ceil(t_loc * e.experts_per_token * capacity_factor
                             / e.num_experts), 4)
+    valid_arr = jnp.ones((t_global,), bool) if valid is None else valid
 
-    def local_fn(x_loc, router_w, w_gate, w_up, w_down):
+    def local_fn(x_loc, v_loc, router_w, w_gate, w_up, w_down):
         # x_loc: (T_loc, d); w_*: (E/(∏ep_axes), ...) expert shards
         buf, top_p, pos, flat_e, keep, aux = _route(
-            x_loc, router_w, e.experts_per_token, cap_loc)
+            x_loc, router_w, e.experts_per_token, cap_loc, valid=v_loc)
         for a in ep_axes:                       # (E, C, d) → (E/Π, ΠC, d)
             buf = jax.lax.all_to_all(buf, a, split_axis=0,
                                      concat_axis=1, tiled=True)
@@ -293,12 +334,15 @@ def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
             aux = jax.lax.pmean(aux, a)
         return y_loc, aux
 
-    x_spec = P(token_axes if len(token_axes) > 1 else
-               (token_axes[0] if token_axes else None), None)
+    tok_axes = (token_axes if len(token_axes) > 1 else
+                (token_axes[0] if token_axes else None))
+    x_spec = P(tok_axes, None)
+    v_spec = P(tok_axes)
     w_spec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
     fn = jax.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+        in_specs=(x_spec, v_spec, P(None, None), w_spec, w_spec, w_spec),
         out_specs=(x_spec, P()),
         check_vma=False)
-    return fn(x2, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return fn(x2, valid_arr, p["router"], p["w_gate"], p["w_up"],
+              p["w_down"])

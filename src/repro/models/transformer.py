@@ -93,7 +93,11 @@ def _block_apply(p, x, cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
     h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if kind == "moe":
-        ffn_out, aux = moe_mod.moe_apply(p["moe"], h2, cfg, qcfg, prepared)
+        # slot-serving contract: left-pad/frozen-slot tokens must not
+        # consume expert capacity (see moe_apply's ``valid``)
+        valid = L.pad_valid_mask(x.shape[1], offsets)
+        ffn_out, aux = moe_mod.moe_apply(p["moe"], h2, cfg, qcfg, prepared,
+                                         valid=valid)
     else:
         ffn_out = L.mlp_apply(p["mlp"], h2, qcfg, prepared)
     x = x + rs * ffn_out

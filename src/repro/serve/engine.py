@@ -47,7 +47,8 @@ from repro.core import methods
 from repro.data import tokenizer as tok
 from repro.dist.sharding import batch_dim_of_spec
 from repro.models.model_factory import Model
-from repro.serve.prepare import load_prepared, prepare_params
+from repro.serve.prepare import (load_prepared, prepare_params,
+                                 prepared_nbytes)
 
 
 @dataclasses.dataclass
@@ -104,6 +105,10 @@ class ServingEngine:
         self._reset_fn = jax.jit(self._reset_rows)
         self.stats = {"prefill_steps": 0, "decode_steps": 0,
                       "slot_steps": 0}
+        # kernel-path artifacts carry no dense w_dq copy — the per-field
+        # split makes that saving observable.  NOT in ``stats`` (that
+        # dict is a resettable step counter, see serve_throughput.py).
+        self.prepared_bytes = prepared_nbytes(self.params)
 
     @classmethod
     def from_artifact(cls, model: Model, path: str,

@@ -20,6 +20,14 @@ QuantConfig via the ``configs.base.config_to_json`` machinery shared
 with ckpt/), so a model can be prepared once offline and served from the
 artifact.
 
+Memory: for ``exec_path == "kernel"`` artifacts the runtime-smooth
+methods drop the dense fake-quant ``w_dq`` copy at prepare time — the
+fused two-launch kernel path reads only ``w_packed``/``w_scale``, so a
+prepared+packed linear is ~K/2 bytes per weight instead of ~4.5·K
+(dense f32 + nibbles).  ``repro.core.methods.DEBUG_KEEP_DENSE`` (or
+``prepare_weight(..., keep_dense=True)``) restores the old behavior for
+oracles/debugging; :func:`prepared_nbytes` reports the per-field split.
+
 Weight classification is by leaf name: projection weights are 2-D (or
 stacked (L, M, K) / (L, E, M, K)) and rotate along the LAST axis.
 """
@@ -115,6 +123,28 @@ def prepare_params(params, qcfg: QuantConfig, calib=None):
         return _prepare_stacked(method, leaf, qcfg, calib_x)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def prepared_nbytes(params) -> Dict[str, int]:
+    """Per-field byte totals of the PreparedLinear leaves in a tree (plus
+    ``other`` for raw leaves and ``total``) — what the serving engine
+    reports so the dropped-dense-copy saving is observable."""
+    out: Dict[str, int] = {f: 0 for f in PreparedLinear.ARRAY_FIELDS}
+    out["other"] = 0
+
+    def one(leaf):
+        if isinstance(leaf, PreparedLinear):
+            for f in PreparedLinear.ARRAY_FIELDS:
+                v = getattr(leaf, f)
+                if v is not None:
+                    out[f] += int(np.prod(v.shape)) * v.dtype.itemsize
+        elif hasattr(leaf, "dtype"):
+            out["other"] += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return leaf
+
+    jax.tree.map(one, params, is_leaf=methods.is_prepared)
+    out["total"] = sum(out.values())
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,261 @@
+"""Two-launch fused RRS pipeline: launch-count contract, decode-path
+geometry, and bit-exact parity against the jnp oracle across awkward
+shapes (non-multiple-of-128 N/M/K, rotate=False, perm set/unset).
+
+The oracle comparisons run the oracle UNDER JIT: XLA's vectorized f32
+division differs from eager evaluation by 1 ulp (see kernels/ref.py), so
+jit-vs-jit is the bit-exact pairing the kernels are pinned to.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core import methods, quant, rrs
+from repro.kernels import ops, ref
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                n += _count_pallas_calls(v.jaxpr)
+            elif isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        n += _count_pallas_calls(vv.jaxpr)
+    return n
+
+
+def _mk(n, m, k, seed=0, w_scale_mag=0.05):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((m, k)) * w_scale_mag, jnp.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# the tentpole contract: exactly 2 Pallas launches, no f32 intermediate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 100, 256])
+def test_pipeline_is_exactly_two_launches(n):
+    x, w = _mk(n, 128, 512)
+    weights = ops.RRSWeights(w, group=128)
+    jaxpr = jax.make_jaxpr(
+        lambda xx: ops.rrs_linear_fused(xx, weights))(x)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 2
+
+
+def test_pipeline_intermediate_is_bf16_not_f32():
+    """The inter-kernel activation (kernel A's big output) is bf16 —
+    no f32 activation intermediate ever hits HBM."""
+    x, w = _mk(128, 128, 512)
+    weights = ops.RRSWeights(w, group=128)
+    jaxpr = jax.make_jaxpr(
+        lambda xx: ops.rrs_linear_fused(xx, weights))(x)
+
+    def pallas_out_dtypes(jaxpr, acc):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                for ov in eqn.outvars:
+                    acc.append((tuple(ov.aval.shape), ov.aval.dtype))
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    pallas_out_dtypes(v.jaxpr, acc)
+                elif isinstance(v, (list, tuple)):
+                    for vv in v:
+                        if hasattr(vv, "jaxpr"):
+                            pallas_out_dtypes(vv.jaxpr, acc)
+        return acc
+
+    outs = pallas_out_dtypes(jaxpr.jaxpr, [])
+    # kernel A emits the (N, K) rotated activation: must be bf16
+    acts = [dt for shape, dt in outs if shape == (128, 512)]
+    assert acts and all(dt == jnp.bfloat16 for dt in acts)
+
+
+def test_kernel_method_apply_is_two_launches_without_dense_copy():
+    """Through the registry seam: prepared kernel artifacts carry no
+    dense w_dq and still lower to exactly two Pallas launches."""
+    x, w = _mk(32, 128, 256)
+    cfg = QuantConfig(4, 4, method="rrs", group_size=128,
+                      exec_path="kernel")
+    pl_ = rrs.prepare_weight(w, cfg)
+    assert pl_.w_dq is None and pl_.w_packed is not None
+    jaxpr = jax.make_jaxpr(
+        lambda xx: methods.get_method("rrs").apply(xx, pl_, cfg))(x)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 2
+    y = methods.get_method("rrs").apply(x, pl_, cfg)
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+def test_keep_dense_debug_flag():
+    x, w = _mk(8, 128, 256)
+    cfg = QuantConfig(4, 4, method="rrs", group_size=128,
+                      exec_path="kernel")
+    kept = methods.get_method("rrs").prepare_weight(w, cfg,
+                                                    keep_dense=True)
+    assert kept.w_dq is not None and kept.w_packed is not None
+    # module-level escape hatch
+    methods.DEBUG_KEEP_DENSE = True
+    try:
+        kept2 = rrs.prepare_weight(w, cfg)
+        assert kept2.w_dq is not None
+    finally:
+        methods.DEBUG_KEEP_DENSE = False
+
+
+# ---------------------------------------------------------------------------
+# decode-path geometry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bn,pad", [
+    (1, 1, 0), (4, 4, 0), (8, 8, 0), (17, 17, 0), (32, 32, 0),
+    (33, 32, 31), (100, 64, 28), (128, 128, 0), (200, 128, 56),
+])
+def test_row_geometry_decode_rule(n, bn, pad):
+    assert ops._row_geometry(n) == (bn, pad)
+
+
+@pytest.mark.parametrize("n", [1, 8, 32])
+def test_decode_shapes_bit_exact_no_padding(n):
+    """N ≤ 32 runs bn = N on the GEMV-style grid, zero row padding,
+    bit-exact vs the (jitted) oracle — the acceptance shape set."""
+    x, w = _mk(n, 256, 512, seed=n)
+    weights = ops.RRSWeights(w, group=128, keep_codes=True)
+    assert ops._row_geometry(n) == (n, 0)
+    y = ops.rrs_linear_fused(x, weights)
+    yr = jax.jit(lambda xx: ops.rrs_linear_fused_ref(xx, weights))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# ---------------------------------------------------------------------------
+# parity sweeps: awkward N/M/K, rotate=False, perm set/unset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,k,group", [
+    (100, 256, 512, 128),     # N not multiple of 128 (pads to pow2 grid)
+    (200, 192, 512, 128),     # M not multiple of 128 (bm=64)
+    (37, 96, 384, 64),        # none of N/M/K multiples of 128
+    (130, 128, 1536, 128),    # Kronecker (non-pow2) K
+])
+def test_fused_fields_parity_awkward_shapes(n, m, k, group):
+    x, w = _mk(n, m, k)
+    weights = ops.RRSWeights(w, group=group, keep_codes=True)
+    y = ops.rrs_linear_fused(x, weights)
+    yr = jax.jit(lambda xx: ops.rrs_linear_fused_ref(xx, weights))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("n", [8, 100])
+def test_fused_fields_rotate_false_identity_branch(n):
+    """rs (no rotation): same two-launch pipeline, kernel A runs the
+    identity branch — still bit-exact vs the oracle."""
+    k, m, g = 512, 128, 128
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((m, k)) * 0.05, jnp.float32)
+    codes, scale = quant.quantize_per_channel(w, 4, axis=-1)
+    w_packed = ops.pack_int4_kblocks(codes, g)
+    w_scale = scale.reshape(-1)
+    fused = lambda xx: ops.rrs_linear_fused_fields(
+        xx, w_packed=w_packed, w_scale=w_scale, m=m, group=g,
+        rotate=False)
+    jaxpr = jax.make_jaxpr(fused)(x)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 2
+    y = fused(x)
+    yr = jax.jit(lambda xx: ops.rrs_linear_fused_fields_ref(
+        xx, w_codes=codes, w_scale=w_scale, m=m, group=g,
+        rotate=False))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("n", [8, 100])
+def test_fused_fields_static_reorder_perm(n):
+    """perm set (static reorder folded into the packed weights): the
+    pipeline gathers the bf16 intermediate + channel maxes and stays
+    bit-exact vs the oracle."""
+    k, m = 512, 256
+    x, w = _mk(n, m, k, seed=3)
+    weights = ops.RRSWeights(w, group=128, calib_x=x[: max(n // 2, 1)],
+                             keep_codes=True)
+    assert weights.perm is not None
+    y = ops.rrs_linear_fused(x, weights)
+    yr = jax.jit(lambda xx: ops.rrs_linear_fused_ref(xx, weights))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    # and the reorder actually helps an outliered activation (sanity)
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+def test_legacy_f32_intermediate_oracle_mode():
+    """intermediate_dtype=f32 reproduces the legacy three-launch
+    numerics: the fused pipeline run at f32 matches that oracle too (to
+    f32 reassociation tolerance — full-entropy f32 intermediates expose
+    XLA's per-lowering FMA choices; the shipping bf16 mode is exact)."""
+    x, w = _mk(64, 128, 256, seed=5)
+    weights = ops.RRSWeights(w, group=128, keep_codes=True)
+    y = ops.rrs_linear_fused_fields(
+        x, w_packed=weights.w_packed, w_scale=weights.w_scale,
+        m=weights.m, group=weights.group,
+        rotate_block=weights.rotate_block,
+        intermediate_dtype=jnp.float32)
+    yr = jax.jit(lambda xx: ops.rrs_linear_fused_ref(
+        xx, weights, intermediate_dtype=jnp.float32))(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# property test (hypothesis): random shapes through the full pipeline
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                               # pragma: no cover
+    _HAVE_HYP = False
+
+if _HAVE_HYP:
+    _prop_deco = [
+        settings(max_examples=12, deadline=None),
+        given(st.integers(1, 150), st.sampled_from([64, 96, 128, 192]),
+              st.sampled_from([(256, 128), (512, 128), (384, 64)]),
+              st.booleans(), st.integers(0, 2 ** 16))]
+else:
+    _prop_deco = [pytest.mark.skip(
+        reason="hypothesis not in the pinned container image")]
+
+
+def _apply_decos(fn):
+    for d in reversed(_prop_deco):
+        fn = d(fn)
+    return fn
+
+
+@_apply_decos
+def test_fused_pipeline_parity_property(n=1, m=64, kg=(256, 128),
+                                        rotate=True, seed=0):
+    k, group = kg
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((m, k)) * 0.05, jnp.float32)
+    if rotate:
+        weights = ops.RRSWeights(w, group=group, keep_codes=True)
+        y = ops.rrs_linear_fused(x, weights)
+        yr = jax.jit(lambda xx: ops.rrs_linear_fused_ref(xx, weights))(x)
+    else:
+        codes, scale = quant.quantize_per_channel(w, 4, axis=-1)
+        w_packed = ops.pack_int4_kblocks(codes, group)
+        w_scale = scale.reshape(-1)
+        y = ops.rrs_linear_fused_fields(
+            x, w_packed=w_packed, w_scale=w_scale, m=m, group=group,
+            rotate=False)
+        yr = jax.jit(lambda xx: ops.rrs_linear_fused_fields_ref(
+            xx, w_codes=codes, w_scale=w_scale, m=m, group=group,
+            rotate=False))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
