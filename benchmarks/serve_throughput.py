@@ -1,13 +1,21 @@
-"""Serving throughput: wave vs continuous slot-level scheduling.
+"""Serving throughput: wave vs continuous scheduling, dense vs paged KV.
 
-A mixed-prompt-length, staggered-budget request queue is served twice by
-the SAME model/weights/step graphs — once under the legacy wave policy
-(equal-length gangs, admitted only when all slots drain: head-of-line
-blocking) and once under continuous slot batching (slots reclaimed and
-refilled the step a request finishes).  Both runs are repeated once
-untimed to amortize jit compilation, then timed; tokens/s and scheduler
-step counts land in ``benchmarks/results/serve_throughput.json`` so the
-BENCH trajectory records serving performance.
+Two studies on the same tiny model:
+
+* **Scheduling A/B** — a mixed-prompt-length, staggered-budget queue is
+  served under the legacy wave policy (head-of-line blocking) and under
+  continuous slot batching; tokens/s and step counts land in
+  ``benchmarks/results/serve_throughput.json``.
+* **Paging / prefix-reuse study** — a multi-tenant SHARED-PREFIX mix
+  (a few long "system prompts", many distinct user suffixes) is served
+  by the dense cache, the paged cache, and the paged cache with
+  int4-at-rest blocks.  Reported per engine: tokens/s, prefill tokens
+  (dense row minus paged row = prefill tokens SAVED by radix reuse),
+  prefix-cache hit rate, and resident/peak/capacity KV bytes — written
+  to ``benchmarks/results/serve_paging.json``.
+
+Every engine is warmed once untimed (jit + radix steady state), then
+timed on a fresh copy of the queue.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
 """
@@ -68,6 +76,90 @@ def run_sched(model, params, qcfg, scheduler, n_requests, max_batch,
     }
 
 
+def build_prefix_queue(engine: ServingEngine, n_requests: int,
+                       seed: int = 0):
+    """Multi-tenant shared-prefix workload: 3 'system prompts' of 31
+    tokens (4 full blocks incl BOS at block_size 8) shared round-robin,
+    each followed by a distinct short user suffix."""
+    prefixes = [[1 + (p * 97 + j) % 200 for j in range(31)]
+                for p in range(3)]
+    for i in range(n_requests):
+        suffix = [1 + (seed + i * 13 + j) % 200 for j in range(3 + i % 4)]
+        engine.submit(prefixes[i % 3] + suffix,
+                      max_new_tokens=6 + (i % 3) * 4)
+
+
+def run_paged(model, params, qcfg, variant, n_requests, max_batch,
+              max_len):
+    kw = {} if variant == "dense" else {"cache": "paged", "block_size": 8}
+    eng = ServingEngine(model, params, qcfg, max_batch=max_batch,
+                        max_len=max_len, prepare=False, **kw)
+    # TWO untimed passes: the first (cold radix) compiles the full-prompt
+    # prefill shapes, the second the radix-warm suffix-admission shapes —
+    # only then does the SAME queue replay measure serving, not jit
+    for _ in range(2):
+        build_prefix_queue(eng, n_requests)
+        eng.run()
+    eng.stats = dict.fromkeys(eng.stats, 0)
+    if eng.pager is not None:
+        eng.pager.pool.peak_allocated = 0
+    build_prefix_queue(eng, n_requests)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    st, kv = eng.stats, eng.kv_cache_stats()
+    prompt_toks = st["prefill_tokens"] + st["prefix_hit_tokens"]
+    return {
+        "name": f"serve_kv_{variant}",
+        "kv_cache": variant,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(dt, 4),
+        "tok_s": round(toks / dt, 2),
+        "prompt_tokens": prompt_toks,
+        "prefill_tokens": st["prefill_tokens"],
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "prefix_hit_rate": round(st["prefix_hit_tokens"]
+                                 / max(prompt_toks, 1), 3),
+        "kv_bytes_capacity": kv["kv_bytes_capacity"],
+        "kv_bytes_peak": kv["kv_bytes_peak"],
+        "kv_bytes_resident_end": kv["kv_bytes_resident"],
+    }
+
+
+def run_paging_study(model, params, qcfg, quick: bool):
+    """dense vs paged vs paged+int4-at-rest on the shared-prefix mix."""
+    n_requests = 9 if quick else 18
+    qcfg_int4 = QuantConfig(qcfg.a_bits, qcfg.w_bits, 4,
+                            method=qcfg.method,
+                            group_size=qcfg.group_size,
+                            kv_storage="int8")
+    rows = []
+    for variant, q in (("dense", qcfg), ("paged", qcfg),
+                       ("paged_int4_at_rest", qcfg_int4)):
+        rows.append(run_paged(model, params, q, variant, n_requests,
+                              max_batch=4, max_len=128))
+        r = rows[-1]
+        print(f"{variant}: {r['tok_s']} tok/s, hit rate "
+              f"{r['prefix_hit_rate']}, peak KV {r['kv_bytes_peak']}B "
+              f"/ cap {r['kv_bytes_capacity']}B")
+    dense, paged = rows[0], rows[1]
+    rows.append({
+        "name": "serve_paging_summary",
+        "prefill_tokens_saved": dense["prefill_tokens"]
+        - paged["prefill_tokens"],
+        "paged_over_dense_tok_s": round(paged["tok_s"] / dense["tok_s"],
+                                        3),
+        "peak_kv_bytes_vs_dense": round(paged["kv_bytes_peak"]
+                                        / dense["kv_bytes_capacity"], 3),
+        "int4_peak_kv_bytes_vs_dense": round(
+            rows[2]["kv_bytes_peak"] / dense["kv_bytes_capacity"], 3),
+    })
+    emit(rows, "serve_paging")
+    return rows
+
+
 def run(quick: bool = False):
     cfg = ModelConfig(name="serve-bench", family="dense", num_layers=2,
                       d_model=128, num_heads=4, num_kv_heads=2,
@@ -96,6 +188,7 @@ def run(quick: bool = False):
             1.0 - cont["decode_steps"] / max(wave["decode_steps"], 1), 3),
     })
     emit(rows, "serve_throughput")
+    rows += run_paging_study(model, prepped, qcfg, quick)
     return rows
 
 

@@ -9,6 +9,12 @@ cached attention family (fp, fake-quant and int8-at-rest codes+scales):
 each batch row lands at its OWN sequence index, which is what lets the
 serving engine run continuous slot-level batching (mixed-progress rows in
 one decode graph) instead of a shared scalar position per layer.
+
+:func:`paged_scatter` / :func:`paged_gather` are the block-granular
+equivalents for the paged KV cache: the arena has NO batch dim — rows
+reach their blocks through a ``(B, max_blocks)`` block table of physical
+block ids, so cache memory is pooled across slots instead of shaped
+``(max_batch, max_len)``.
 """
 from __future__ import annotations
 
@@ -28,33 +34,114 @@ def scatter_rows(cache_arr: jnp.ndarray, fresh: jnp.ndarray,
     idx: (B, S) int32 target index along the C axis for every fresh entry.
     Entries with ``idx >= C`` (or < 0) are DROPPED — callers route padding
     / inactive-row writes to ``C`` so a left-padded prefill or a finished
-    slot leaves the cache row untouched.
+    slot leaves the cache row untouched.  (Negative indices are remapped
+    to ``C`` before the scatter: jnp's ``mode="drop"`` only drops
+    out-of-bounds indices, while a raw negative index would WRAP to the
+    end of the row — a silent corruption, pinned by tests/test_paging.py.)
     """
+    c = cache_arr.shape[1]
+    idx = jnp.where(idx < 0, c, idx)
     rows = jnp.arange(cache_arr.shape[0])[:, None]
     return cache_arr.at[rows, idx].set(fresh.astype(cache_arr.dtype),
                                        mode="drop")
 
 
+# ---------------------------------------------------------------------------
+# paged (block-table) cache primitives
+# ---------------------------------------------------------------------------
+
+def paged_scatter(arena: jnp.ndarray, fresh: jnp.ndarray,
+                  tables: jnp.ndarray, qpos: jnp.ndarray,
+                  valid: jnp.ndarray) -> jnp.ndarray:
+    """Write ``fresh`` into a block arena at per-row LOGICAL positions.
+
+    arena: (num_blocks, block_size, ...); fresh: (B, S, ...) matching
+    trailing dims; tables: (B, max_blocks) physical block ids (-1 =
+    unallocated); qpos: (B, S) logical sequence position per fresh entry;
+    valid: (B, S) bool.  Invalid entries, negative positions and entries
+    whose logical block is unallocated are DROPPED — the engine owns
+    exclusive write rights to every allocated block in a row's table, so
+    distinct rows never collide (shared prefix blocks are complete and
+    only ever read).
+    """
+    nb, bs = arena.shape[0], arena.shape[1]
+    mb = tables.shape[1]
+    lb = jnp.clip(qpos // bs, 0, mb - 1)
+    phys = jnp.take_along_axis(tables, lb, axis=1)           # (B, S)
+    ok = valid & (phys >= 0) & (qpos >= 0)
+    flat_idx = jnp.where(ok, phys * bs + qpos % bs, nb * bs)  # OOB => drop
+    flat = arena.reshape(nb * bs, *arena.shape[2:])
+    upd = fresh.reshape(-1, *fresh.shape[2:]).astype(flat.dtype)
+    flat = flat.at[flat_idx.reshape(-1)].set(upd, mode="drop")
+    return flat.reshape(arena.shape)
+
+
+def paged_gather(arena: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather a (B, max_blocks*block_size, ...) logical-order view of the
+    arena through a block table.  Unallocated entries (table id -1) read
+    block 0 — callers mask them out via the table (see ``paged_key_pos``).
+    """
+    nb, bs = arena.shape[0], arena.shape[1]
+    b, mb = tables.shape
+    flat = arena.reshape(nb * bs, *arena.shape[2:])
+    slot = (jnp.clip(tables, 0, nb - 1)[:, :, None] * bs
+            + jnp.arange(bs, dtype=tables.dtype)[None, None, :])
+    return flat[slot.reshape(b, mb * bs)]
+
+
+def paged_key_pos(tables: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """(B, max_blocks*block_size) absolute position of each gathered slot
+    (-1 for slots of unallocated blocks, which attention masks out)."""
+    b, mb = tables.shape
+    alloc = jnp.repeat(tables >= 0, block_size, axis=1)
+    logical = jnp.arange(mb * block_size, dtype=jnp.int32)[None, :]
+    return jnp.where(alloc, logical, -1)
+
+
+# ---------------------------------------------------------------------------
+# sub-channel quantization
+# ---------------------------------------------------------------------------
+
 class QuantizedKV(NamedTuple):
     codes: jnp.ndarray     # int8 codes, same shape as the fp tensor
     scales: jnp.ndarray    # (..., groups, 1) f32
+    group: int = 0         # EFFECTIVE group size used (see effective_group)
+
+
+def effective_group(k: int, group: int) -> int:
+    """The group size :func:`kv_quantize` actually uses for a last axis
+    of length ``k``.
+
+    Contract: the requested ``group`` is honored only when it divides
+    ``k`` (after clamping to ``k``).  Otherwise the row DEGENERATES to a
+    single group of size ``k`` — per-row (coarser) scales, a different
+    accuracy regime than sub-channel.  Callers that depend on g=128
+    semantics must check the emitted ``QuantizedKV.group``.
+    """
+    g = min(group, k)
+    return k if k % g else g
 
 
 def kv_quantize(kv: jnp.ndarray, bits: int = 4,
                 group: int = 128) -> QuantizedKV:
     """Quantize along the last axis in groups (last axis = head_dim or a
-    flattened (heads*head_dim) lane, padded by the caller if needed)."""
+    flattened (heads*head_dim) lane, padded by the caller if needed).
+
+    Group-size contract: see :func:`effective_group` — when ``group``
+    does not divide the last axis the whole row collapses to ONE group
+    (coarser scales, changed accuracy semantics).  The group size
+    actually used is emitted as ``QuantizedKV.group`` so callers and
+    tests can assert the granularity they got.
+    """
     if bits >= 16:
         raise ValueError("kv_quantize called with >=16 bits")
-    g = min(group, kv.shape[-1])
-    if kv.shape[-1] % g:
-        g = kv.shape[-1]  # degenerate: one group per row
+    g = effective_group(kv.shape[-1], group)
     codes, scales = quant.quantize_group(kv, bits, g)
-    return QuantizedKV(codes, scales)
+    return QuantizedKV(codes, scales, g)
 
 
 def kv_dequantize(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jnp.ndarray:
-    codes, scales = qkv
+    codes, scales = qkv.codes, qkv.scales
     *lead, K = codes.shape
     groups = scales.shape[-2]
     g = K // groups
@@ -64,10 +151,10 @@ def kv_dequantize(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jnp.ndarray:
 
 def kv_fakequant(kv: jnp.ndarray, bits: int = 4, group: int = 128
                  ) -> jnp.ndarray:
-    """QDQ path used inside attention for accuracy experiments/lowering."""
+    """QDQ path used inside attention for accuracy experiments/lowering.
+
+    Same group-size contract as :func:`kv_quantize`."""
     if bits >= 16:
         return kv
-    g = min(group, kv.shape[-1])
-    if kv.shape[-1] % g:
-        g = kv.shape[-1]
+    g = effective_group(kv.shape[-1], group)
     return quant.fake_quant_group(kv, bits, g)

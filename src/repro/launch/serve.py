@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "wave"])
+    ap.add_argument("--cache", default="dense",
+                    choices=["dense", "paged"],
+                    help="paged: pooled KV blocks + radix prefix reuse")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: full provisioning)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--ckpt", default=None)
@@ -69,7 +75,9 @@ def main():
                        kv_storage=args.kv_storage)
     engine = ServingEngine(model, params, qcfg, max_batch=args.max_batch,
                            max_len=args.max_len,
-                           scheduler=args.scheduler)
+                           scheduler=args.scheduler, cache=args.cache,
+                           block_size=args.block_size,
+                           num_blocks=args.num_blocks)
     prompts = ["the quick brown fox jumps", "one two three four",
                "a quantized model serves", "hello world again"]
     for i in range(args.requests):
@@ -85,6 +93,13 @@ def main():
           f"{toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s "
           f"({st['prefill_steps']} prefills, {st['decode_steps']} decode "
           f"steps)")
+    if args.cache == "paged":
+        kv = engine.kv_cache_stats()
+        print(f"paged KV: hit {st['prefix_hit_tokens']} / prefilled "
+              f"{st['prefill_tokens']} prompt tokens; peak KV "
+              f"{kv['kv_bytes_peak']}B of {kv['kv_bytes_capacity']}B "
+              f"({kv['evicted_blocks'] if 'evicted_blocks' in kv else 0} "
+              f"blocks evicted)")
 
 
 if __name__ == "__main__":

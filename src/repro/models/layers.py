@@ -366,6 +366,84 @@ def _cache_bias(qpos: jnp.ndarray, kpos: jnp.ndarray,
     return jnp.where(m, 0.0, NEG_INF)[:, None]
 
 
+def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
+                      kv_quant_bits: int, kv_group: int, x_dtype
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """Attention through a block-table paged KV cache (prefill AND decode).
+
+    cache: {"k"/"v": (num_blocks, block_size, KVH, Dc) arenas (bf16, int8
+    codes, or packed-int4 nibbles with Dc = D//2), optional "k_scale"/
+    "v_scale": (num_blocks, block_size, KVH, G, 1) at-rest scales, "pos":
+    (B,), "block_tables": (B, max_blocks) physical block ids (-1 =
+    unallocated)}.  Fresh K/V is written through the table FIRST (reusing
+    the per-row left-pad validity contract), then queries attend the
+    gathered logical-order view — so a suffix prefill whose row starts at
+    pos > 0 (radix prefix hit) sees the reused blocks' K/V with zero
+    recompute, and a no-hit admission reproduces the dense path's exposed
+    key set exactly (extra masked slots soften to exp(-inf) = 0).
+    """
+    from repro.core import kvquant
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s = q.shape[0], q.shape[1]
+    bt = cache["block_tables"]
+    pos = cache["pos"]
+    bs = cache["k"].shape[1]
+    qpos = row_positions(pos, s, offsets)
+    valid_q = qpos >= pos[:, None]
+    at_rest = "k_scale" in cache
+    packed = at_rest and cache["k"].shape[-1] * 2 == hd
+
+    if at_rest:
+        bits = 4 if packed else min(kv_quant_bits, 8)
+        kq = kvquant.kv_quantize(k.astype(jnp.float32), bits, kv_group)
+        vq = kvquant.kv_quantize(v.astype(jnp.float32), bits, kv_group)
+        k_codes = quant.pack_int4(kq.codes) if packed else kq.codes
+        v_codes = quant.pack_int4(vq.codes) if packed else vq.codes
+        ck = kvquant.paged_scatter(cache["k"], k_codes, bt, qpos, valid_q)
+        cv = kvquant.paged_scatter(cache["v"], v_codes, bt, qpos, valid_q)
+        cks = kvquant.paged_scatter(cache["k_scale"], kq.scales, bt, qpos,
+                                    valid_q)
+        cvs = kvquant.paged_scatter(cache["v_scale"], vq.scales, bt, qpos,
+                                    valid_q)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                     "pos": advance_pos(pos, s, offsets),
+                     "block_tables": bt}
+        gk, gv = kvquant.paged_gather(ck, bt), kvquant.paged_gather(cv, bt)
+        if packed:
+            gk, gv = quant.unpack_int4(gk), quant.unpack_int4(gv)
+        kk = kvquant.kv_dequantize(
+            kvquant.QuantizedKV(gk, kvquant.paged_gather(cks, bt)), x_dtype)
+        vv = kvquant.kv_dequantize(
+            kvquant.QuantizedKV(gv, kvquant.paged_gather(cvs, bt)), x_dtype)
+    else:
+        ck = kvquant.paged_scatter(cache["k"], k, bt, qpos, valid_q)
+        cv = kvquant.paged_scatter(cache["v"], v, bt, qpos, valid_q)
+        new_cache = {"k": ck, "v": cv,
+                     "pos": advance_pos(pos, s, offsets),
+                     "block_tables": bt}
+        kk, vv = kvquant.paged_gather(ck, bt), kvquant.paged_gather(cv, bt)
+        if kv_quant_bits < 16 and s == 1:
+            # decode reads the cache fake-quantized, mirroring the dense
+            # path (prefill attends raw fresh values there too)
+            kk = kvquant.kv_fakequant(kk, kv_quant_bits, kv_group)
+            vv = kvquant.kv_fakequant(vv, kv_quant_bits, kv_group)
+
+    kk = shard(kk.astype(x_dtype), "batch", "cache_seq", None, None)
+    vv = shard(vv.astype(x_dtype), "batch", "cache_seq", None, None)
+    kk = _repeat_kv(kk, h // kvh)
+    vv = _repeat_kv(vv, h // kvh)
+    bias = _cache_bias(qpos, kvquant.paged_key_pos(bt, bs),
+                       cfg.sliding_window)
+    out = attention_dense(q, kk, vv, causal=False, bias=bias)
+    # queries with NO visible key (left-pad / empty frozen rows) must
+    # output exactly 0, matching the dense path's freshly-reset rows —
+    # otherwise stale block contents would leak into the batch-global
+    # runtime-smooth scales and break dense/paged parity
+    visible = jnp.any(bias[:, 0] >= 0.0, axis=-1)          # (B, S)
+    out = out * visible[:, :, None, None].astype(out.dtype)
+    return out, new_cache
+
+
 def _fresh_block_attn(q, k, v, cfg: ModelConfig, offsets, qpos, valid_q,
                       causal: bool) -> jnp.ndarray:
     """Prefill attention answered from the fresh K/V block (slots prefill
@@ -397,7 +475,10 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
 
     cache: {"k": (B, Smax, KVH, D), "v": ..., "pos": (B,)} or None; the
     sliding-window ring variant adds "kpos": (B, Smax) absolute positions
-    (-1 = empty).  Positions, cache writes and attention masks are all
+    (-1 = empty); the PAGED variant replaces the dense rows with pooled
+    block arenas plus "block_tables": (B, max_blocks) — see
+    :func:`_paged_cache_attn`.  Positions, cache writes and attention
+    masks are all
     PER ROW: ``offsets`` (B,) counts left-pad tokens heading each row of
     this call's token block — padded entries are masked out of attention,
     never written to the cache, and do not advance that row's position (a
@@ -415,6 +496,18 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     q = shard(q, "batch", "seq", "act_heads", None)
+
+    if cache is not None and "block_tables" in cache:
+        # paged KV cache: K/V live in a pooled block arena reached
+        # through a (B, max_blocks) block table — serving memory is
+        # decoupled from max_batch x max_len and prefix blocks are
+        # shareable (see serve.paging).  Must be checked before the
+        # dense int8 branch: at-rest paged caches also carry scales.
+        out, new_cache = _paged_cache_attn(q, k, v, cache, cfg, offsets,
+                                           kv_quant_bits, kv_group,
+                                           x.dtype)
+        out = out.reshape(b, s, h * hd)
+        return qlinear(out, p["wo"], qcfg, prepared), new_cache
 
     if cache is not None and "k_scale" in cache:
         # int8-at-rest KV cache (QuantConfig.kv_storage == "int8"):

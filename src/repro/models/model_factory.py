@@ -15,7 +15,12 @@ per-row state, so one ``step`` serves rows at mixed decode progress.
 entries neither attend, get cached, nor advance their row — a fully
 padded row is a frozen serving slot.  ``cache_axes`` names each leaf's
 batch dim (``dist.sharding.batch_dim_of_spec``), which is how the
-serving engine resets/refills single rows generically.
+serving engine resets/refills single rows generically.  Exception: the
+PAGED cache's pooled block arenas (transformer families,
+``init_cache(..., paged=...)``) have no batch dim — per-row state there
+is the ``pos`` + ``block_tables`` leaves, and row reset is a host-side
+block-table operation (``serve.paging.PagedKVManager``), not a leaf
+reset.
 """
 from __future__ import annotations
 
@@ -46,10 +51,16 @@ class Model:
                              prepared=prepared, return_hidden=return_hidden)
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_storage: str = "fake"):
+                   kv_storage: str = "fake", **kw):
+        """``kw`` (transformer families only): ``paged=(num_blocks,
+        block_size)`` selects the pooled block-arena layout, ``kv_group``
+        the at-rest sub-channel group (see ``transformer.init_cache``)."""
         if self.cfg.family in ("dense", "moe", "vlm"):
             return self._init_cache(self.cfg, batch, max_len, dtype=dtype,
-                                    kv_storage=kv_storage)
+                                    kv_storage=kv_storage, **kw)
+        if kw:
+            raise TypeError(f"family {self.cfg.family!r} does not support "
+                            f"cache options {sorted(kw)}")
         return self._init_cache(self.cfg, batch, max_len, dtype=dtype)
 
     def step(self, params, tokens, cache, qcfg: QuantConfig,

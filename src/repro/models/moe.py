@@ -217,6 +217,21 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
     return y2.reshape(b, s, d), aux
 
 
+def _expert_specs(w, ep_axes):
+    """shard_map in_specs for an expert-stacked weight leaf: experts
+    (the leading axis of EVERY array) over ``ep_axes``, the rest
+    replicated.  Raw ``(E, M, K)`` arrays yield one PartitionSpec;
+    :class:`~repro.core.methods.PreparedLinear` leaves yield a spec
+    PYTREE of per-field specs (every array field of a stacked prepared
+    leaf is expert-stacked with leading E — see
+    ``serve.prepare._prepare_stacked``), which is what lets PREPARED MoE
+    weights run on a mesh (closes the ROADMAP open item: the old raw
+    three-dim spec did not match the PreparedLinear pytree structure)."""
+    ep = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    return jax.tree.map(
+        lambda a: P(*((ep,) + (None,) * (a.ndim - 1))), w)
+
+
 def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
                       ep_axes, valid=None):
     """Decode-time EP: experts sharded over ``ep_axes`` (e.g. data×model =
@@ -265,8 +280,10 @@ def _moe_ep_inference(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
 
     fn = jax.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(), P(), P(None, None), P(ep_axes, None, None),
-                  P(ep_axes, None, None), P(ep_axes, None, None)),
+        in_specs=(P(), P(), P(None, None), _expert_specs(p["w_gate"],
+                                                         ep_axes),
+                  _expert_specs(p["w_up"], ep_axes),
+                  _expert_specs(p["w_down"], ep_axes)),
         out_specs=(P(), P()),
         check_vma=False)
     return fn(x2, valid_arr, p["router"], p["w_gate"], p["w_up"],
@@ -338,10 +355,12 @@ def _moe_ep_shard_map(p, x2, cfg, qcfg, prepared, capacity_factor, mesh,
                 (token_axes[0] if token_axes else None))
     x_spec = P(tok_axes, None)
     v_spec = P(tok_axes)
-    w_spec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
     fn = jax.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(x_spec, v_spec, P(None, None), w_spec, w_spec, w_spec),
+        in_specs=(x_spec, v_spec, P(None, None),
+                  _expert_specs(p["w_gate"], ep_axes),
+                  _expert_specs(p["w_up"], ep_axes),
+                  _expert_specs(p["w_down"], ep_axes)),
         out_specs=(x_spec, P()),
         check_vma=False)
     return fn(x2, valid_arr, p["router"], p["w_gate"], p["w_up"],

@@ -279,8 +279,9 @@ def _vlm_stack_apply(stacked, x, cfg, qcfg, prepared, positions, enc,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16, kv_storage: str = "fake"
-               ) -> Tuple[Dict, Dict]:
+               dtype=jnp.bfloat16, kv_storage: str = "fake",
+               paged: Optional[Tuple[int, int]] = None,
+               kv_group: int = 128) -> Tuple[Dict, Dict]:
     """Stacked per-layer caches matching the scan structure.
 
     Positions are PER ROW: every layer's ``pos`` is (n, batch) and the
@@ -290,13 +291,59 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
     kv_storage="int8": codes live as int8 at rest with per-(token, head)
     scales — half the HBM footprint/traffic of the bf16 fake-quant cache.
+
+    ``paged=(num_blocks, block_size)``: PAGED layout — K/V arenas are
+    pooled ``(n, num_blocks, block_size, KVH, D)`` leaves with NO batch
+    dim, reached through per-row ``block_tables: (n, batch, max_blocks)``
+    of physical block ids (-1 = unallocated; the serving engine's
+    BlockPool owns the id space, shared by every layer's arena).  Cache
+    memory then scales with *allocated blocks*, not max_batch × max_len.
+    At-rest storage composes: kv_storage="int8" stores sub-channel codes
+    + scales (``core.kvquant.kv_quantize``, group ``kv_group``);
+    "int4" additionally packs two codes per byte.  Paged caches do not
+    support the sliding-window ring or MLA latent layout.
     """
     hd = cfg.resolved_head_dim
     ring = cfg.sliding_window > 0 and max_len > cfg.sliding_window
     clen = min(max_len, cfg.sliding_window) if ring else max_len
-    int8 = kv_storage == "int8" and not ring and cfg.mla is None
+    int8 = kv_storage == "int8" and not ring and cfg.mla is None \
+        and paged is None
+    if paged is not None and (ring or cfg.mla is not None):
+        raise ValueError("paged KV cache supports neither the "
+                         "sliding-window ring nor the MLA latent layout")
+    if kv_storage == "int4" and paged is None:
+        raise ValueError("kv_storage='int4' (packed nibbles) requires a "
+                         "paged cache")
+
+    def paged_attn_cache(n):
+        from repro.core.kvquant import effective_group
+        nb, bs = paged
+        mb = -(-max_len // bs)
+        at_rest = kv_storage in ("int8", "int4")
+        dc = hd // 2 if kv_storage == "int4" else hd
+        kv_dtype = {"int8": jnp.int8, "int4": jnp.uint8}.get(kv_storage,
+                                                             dtype)
+        c = {"k": jnp.zeros((n, nb, bs, cfg.num_kv_heads, dc), kv_dtype),
+             "v": jnp.zeros((n, nb, bs, cfg.num_kv_heads, dc), kv_dtype),
+             "pos": jnp.zeros((n, batch), jnp.int32),
+             "block_tables": jnp.full((n, batch, mb), -1, jnp.int32)}
+        a = {"k": P(None, None, None, None, None),
+             "v": P(None, None, None, None, None),
+             "pos": P(None, "batch"),
+             "block_tables": P(None, "batch", None)}
+        if at_rest:
+            g = hd // effective_group(hd, kv_group)
+            c["k_scale"] = jnp.zeros((n, nb, bs, cfg.num_kv_heads, g, 1),
+                                     jnp.float32)
+            c["v_scale"] = jnp.zeros((n, nb, bs, cfg.num_kv_heads, g, 1),
+                                     jnp.float32)
+            a["k_scale"] = P(None, None, None, None, None, None)
+            a["v_scale"] = P(None, None, None, None, None, None)
+        return {"attn": c}, {"attn": a}
 
     def attn_cache(n):
+        if paged is not None:
+            return paged_attn_cache(n)
         if cfg.mla is not None:
             m = cfg.mla
             width = m.kv_lora_rank + m.qk_rope_head_dim

@@ -29,6 +29,15 @@ the last member) on the same step/sample machinery — used by
 on an equal-length batch both schedulers run the identical graphs, so
 greedy outputs are token-identical.
 
+``cache="paged"`` swaps the dense per-slot cache for the paged KV
+subsystem (``repro.serve.paging``): K/V blocks come from a fixed
+refcounted pool (memory decoupled from ``max_batch × max_len``), prompt
+prefixes already resident in the radix cache are REUSED at admission
+(zero recompute for the shared blocks — only the suffix is prefilled),
+and blocks can be stored quantized at rest.  ``cache="dense"`` remains
+the reference path; on an equal-length, no-prefix-hit batch the two
+produce token-identical greedy outputs (``tests/test_paging.py``).
+
 ``serve_step`` (= one decode for the full batch) is the unit the dry-run
 lowers at the assignment's decode shapes.
 """
@@ -47,6 +56,7 @@ from repro.core import methods
 from repro.data import tokenizer as tok
 from repro.dist.sharding import batch_dim_of_spec
 from repro.models.model_factory import Model
+from repro.serve.paging import BlockPool, PagedKVManager
 from repro.serve.prepare import (load_prepared, prepare_params,
                                  prepared_nbytes)
 
@@ -59,6 +69,9 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # the prompt did not fit max_len - max_new_tokens and lost its HEAD
+    # tokens at submit time (never silent: callers check this flag)
+    truncated: bool = False
 
     @property
     def text(self) -> str:
@@ -69,16 +82,26 @@ class ServingEngine:
     def __init__(self, model: Model, params, qcfg: QuantConfig,
                  max_batch: int = 4, max_len: int = 512,
                  prepare: bool = True, calib=None,
-                 scheduler: str = "continuous"):
+                 scheduler: str = "continuous", cache: str = "dense",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
         re-prepared).  ``calib`` is forwarded to ``prepare_params`` to
         enable GPTQ weights / static reorder at engine construction.
         ``scheduler``: "continuous" (slot-level, default) or "wave"
-        (legacy gang-scheduled reference)."""
+        (legacy gang-scheduled reference).  ``cache``: "dense" (reference
+        per-slot rows) or "paged" (pooled block arena + radix prefix
+        reuse; transformer families without MLA or a sliding-window
+        ring).  ``num_blocks`` sizes the paged pool (default: full
+        provisioning, max_batch * ceil(max_len / block_size) — shrink it
+        to over-commit); ``prefix_cache=False`` disables radix reuse
+        (blocks still pooled)."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if cache not in ("dense", "paged"):
+            raise ValueError(f"unknown cache {cache!r}")
         self.model = model
         self.cfg = model.cfg
         self.qcfg = qcfg
@@ -88,6 +111,7 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.scheduler = scheduler
+        self.cache_kind = cache
         self.queue: List[Request] = []
         self._rid = 0
         self._prepared = prepare or already
@@ -98,13 +122,36 @@ class ServingEngine:
                                             offsets=off))
         self._sample_fn = jax.jit(_sample_batch)
         # persistent slot state: one cache pytree, per-row positions
-        self._cache_init, self._cache_axes = model.init_cache(max_batch,
-                                                              max_len)
+        if cache == "paged":
+            if self.cfg.family not in ("dense", "moe", "vlm") \
+                    or self.cfg.mla is not None:
+                raise ValueError("cache='paged' needs a transformer "
+                                 "family without MLA")
+            if 0 < self.cfg.sliding_window < max_len:
+                raise ValueError("cache='paged' does not support the "
+                                 "sliding-window ring")
+            mb = -(-max_len // block_size)
+            nb = num_blocks if num_blocks is not None else max_batch * mb
+            storage = qcfg.kv_storage
+            if storage == "int8" and qcfg.kv_bits == 4:
+                storage = "int4"               # pack two codes per byte
+            self.pager: Optional[PagedKVManager] = PagedKVManager(
+                max_batch, max_len, BlockPool(nb, block_size),
+                prefix_cache=prefix_cache)
+            self._cache_init, self._cache_axes = model.init_cache(
+                max_batch, max_len, kv_storage=storage,
+                paged=(nb, block_size), kv_group=qcfg.kv_group_size)
+            self._paged_set_fn = jax.jit(_paged_set_rows)
+        else:
+            self.pager = None
+            self._cache_init, self._cache_axes = model.init_cache(
+                max_batch, max_len)
         self.cache = self._cache_init
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._reset_fn = jax.jit(self._reset_rows)
         self.stats = {"prefill_steps": 0, "decode_steps": 0,
-                      "slot_steps": 0}
+                      "slot_steps": 0, "prefill_tokens": 0,
+                      "prefix_hit_tokens": 0}
         # kernel-path artifacts carry no dense w_dq copy — the per-field
         # split makes that saving observable.  NOT in ``stats`` (that
         # dict is a resettable step counter, see serve_throughput.py).
@@ -126,11 +173,15 @@ class ServingEngine:
                 f"for at least one prompt token (max_len={self.max_len})")
         ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
         ids = [tok.BOS] + [int(i) % self.cfg.vocab_size for i in ids]
-        # the row must hold prompt + all new tokens: keep the prompt TAIL
-        ids = ids[-(self.max_len - max_new_tokens):]
+        # the row must hold prompt + all new tokens: keep the prompt TAIL,
+        # and RECORD the loss — dropped leading tokens change the model's
+        # context, so the caller must be able to see it happened
+        keep = self.max_len - max_new_tokens
+        truncated = len(ids) > keep
+        ids = ids[-keep:]
         self._rid += 1
         self.queue.append(Request(self._rid, ids, max_new_tokens,
-                                  temperature))
+                                  temperature, truncated=truncated))
         return self._rid
 
     # -- slot primitives --------------------------------------------------
@@ -151,6 +202,8 @@ class ServingEngine:
         """Prefill newly admitted requests: reset their rows, left-pad
         each prompt into its row, run ONE batched masked prefill (other
         rows ride along frozen), sample first tokens."""
+        if self.pager is not None:
+            return self._admit_paged(admit)
         bsz = self.max_batch
         mask = np.zeros((bsz,), bool)
         for i in admit:
@@ -163,6 +216,7 @@ class ServingEngine:
             n = len(r.prompt)
             tokens[i, s_pad - n:] = r.prompt
             off[i] = s_pad - n
+            self.stats["prefill_tokens"] += n
         # homogeneous admission (every slot, one length) needs no row
         # masking: offsets=None keeps the flash-chunked prefill path for
         # long prompts (a mixed-length gang takes the dense masked form)
@@ -174,10 +228,86 @@ class ServingEngine:
             self.slots[i] = r
         self._sample_into(logits, list(admit))
 
+    def _admit_paged(self, admit: Dict[int, Request]):
+        """Paged admission: radix-match each prompt, reuse cached prefix
+        blocks (their K/V is already resident — NOT recomputed), allocate
+        fresh blocks for the rest, and prefill only the suffixes in ONE
+        left-padded batched step.  Requests the pool cannot hold are
+        re-queued and retried as blocks free up."""
+        bsz = self.max_batch
+        planned: Dict[int, int] = {}        # slot -> reused token count
+        deferred: List[Request] = []
+        for i in sorted(admit):
+            r = admit[i]
+            reuse = self.pager.admit(i, r.prompt, r.max_new_tokens)
+            if reuse is None:
+                deferred.append(r)
+            else:
+                planned[i] = reuse
+        self.queue[:0] = deferred           # retry later, FIFO preserved
+        if not planned:
+            if not any(s is not None for s in self.slots):
+                pool = self.pager.pool
+                raise RuntimeError(
+                    f"KV block pool ({pool.num_blocks} blocks x "
+                    f"{pool.block_size} tokens) cannot hold a single "
+                    "queued prompt; raise num_blocks")
+            return
+        s_pad = max(len(admit[i].prompt) - planned[i] for i in planned)
+        tokens = np.zeros((bsz, s_pad), np.int32)
+        off = np.full((bsz,), s_pad, np.int32)   # default: fully frozen
+        mask = np.zeros((bsz,), bool)
+        pos_vals = np.zeros((bsz,), np.int32)
+        for i, reuse in planned.items():
+            suffix = admit[i].prompt[reuse:]
+            tokens[i, s_pad - len(suffix):] = suffix
+            off[i] = s_pad - len(suffix)
+            mask[i] = True
+            pos_vals[i] = reuse               # row resumes past the hit
+        self._upload_tables(mask, pos_vals, mask)
+        off_arg = None if not off.any() else jnp.asarray(off)
+        logits, self.cache = self._step_fn(
+            self.params, jnp.asarray(tokens), self.cache, off_arg)
+        self.stats["prefill_steps"] += 1
+        for i, reuse in planned.items():
+            r = admit[i]
+            self.slots[i] = r
+            self.pager.commit_prompt(i, r.prompt)
+            self.stats["prefix_hit_tokens"] += reuse
+            self.stats["prefill_tokens"] += len(r.prompt) - reuse
+        self._sample_into(logits, list(planned))
+
+    def _upload_tables(self, pos_mask, pos_vals, table_mask):
+        """Mirror the host-authoritative block tables into the device
+        cache for rows in ``table_mask`` (admitted or grown), resetting
+        positions for rows in ``pos_mask`` (admitted).  Released slots
+        are deliberately NOT uploaded until readmission: their stale
+        device tables keep frozen-row reads identical to the dense
+        path's untouched cache rows — and the manager PARKS their blocks
+        (refs held until readmission or pool-pressure reclaim) so those
+        reads cannot alias another request's recycled blocks.  Together
+        this preserves dense/paged parity under batch-global
+        quantization scales for arbitrary finish orderings."""
+        self.cache = self._paged_set_fn(
+            self.cache, jnp.asarray(pos_mask), jnp.asarray(pos_vals),
+            jnp.asarray(table_mask), jnp.asarray(self.pager.tables))
+
+    def _free_slot(self, i: int):
+        self.slots[i] = None
+        if self.pager is not None:
+            self.pager.release(i)
+
     def _decode_step(self, live: List[int]):
         """One decode for the full batch; rows not in ``live`` are frozen
         (offset 1 = their single token is all padding)."""
         bsz = self.max_batch
+        if self.pager is not None:
+            grown = np.zeros((bsz,), bool)
+            for i in live:                    # on-demand block growth
+                grown[i] = self.pager.ensure_decode_room(i)
+            if grown.any():
+                self._upload_tables(np.zeros((bsz,), bool),
+                                    np.zeros((bsz,), np.int32), grown)
         nxt = np.zeros((bsz, 1), np.int32)
         off = np.ones((bsz,), np.int32)
         for i in live:
@@ -187,6 +317,8 @@ class ServingEngine:
             self.params, jnp.asarray(nxt), self.cache, jnp.asarray(off))
         self.stats["decode_steps"] += 1
         self.stats["slot_steps"] += len(live)
+        if self.pager is not None:
+            self.pager.advance(live)
         self._sample_into(logits, live)
 
     def _sample_into(self, logits, rows: List[int]):
@@ -219,7 +351,7 @@ class ServingEngine:
             for i, r in enumerate(self.slots):      # reclaim
                 if r is not None and r.done:
                     finished.append(r)
-                    self.slots[i] = None
+                    self._free_slot(i)
             free = [i for i, r in enumerate(self.slots) if r is None]
             if free and self.queue:                 # refill the step after
                 admit = {}
@@ -253,20 +385,74 @@ class ServingEngine:
         while self.queue:
             admit = dict(enumerate(self._wave_group()))
             self._admit(admit)
+            # paged admission may defer members back to the queue; the
+            # gang is whatever actually landed in a slot
+            landed = [i for i in admit if self.slots[i] is not None]
             while True:
-                live = [i for i in admit if not self.slots[i].done]
+                live = [i for i in landed if not self.slots[i].done]
                 if not live:
                     break
                 self._decode_step(live)
-            for i in admit:
+            for i in landed:
                 finished.append(self.slots[i])
-                self.slots[i] = None
+                self._free_slot(i)
         return finished
 
     def run(self) -> List[Request]:
         if self.scheduler == "wave":
             return self._run_waves()
         return self._run_continuous()
+
+    # -- reporting --------------------------------------------------------
+
+    def kv_cache_stats(self) -> Dict[str, object]:
+        """KV-cache memory accounting: ``kv_bytes_capacity`` is what the
+        arena occupies, ``kv_bytes_resident`` what live + prefix-cached
+        blocks actually use (== capacity for the dense cache, which is
+        worst-case-shaped by construction), ``kv_bytes_peak`` the
+        high-water mark.  Paged engines add pool/radix counters."""
+        leaves = jax.tree.leaves(self.cache)
+        capacity = int(sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                           for x in leaves))
+        out: Dict[str, object] = {"kind": self.cache_kind,
+                                  "kv_bytes_capacity": capacity}
+        if self.pager is None:
+            out["kv_bytes_resident"] = capacity
+            out["kv_bytes_peak"] = capacity
+            return out
+        pool = self.pager.pool
+        arena = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]:
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("k", "v", "k_scale", "v_scale"):
+                arena += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        per_block = arena // pool.num_blocks
+        out["kv_block_bytes"] = per_block
+        out["kv_bytes_resident"] = pool.allocated_blocks * per_block
+        out["kv_bytes_peak"] = pool.peak_allocated * per_block
+        out.update(self.pager.stats())
+        return out
+
+
+def _paged_set_rows(cache, pos_mask, pos_vals, table_mask, tables):
+    """Functional cache update for paged admission/growth: block-table
+    leaves take the host-authoritative table on rows in ``table_mask``
+    (other rows — including released-but-not-readmitted slots — keep
+    their device values); ``pos`` leaves take ``pos_vals`` on rows in
+    ``pos_mask`` (admitted rows resume past their prefix hit).  Arena
+    leaves pass through untouched — stale block contents are unreachable
+    via the tables."""
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name == "pos":                       # (..., B)
+            m = pos_mask.reshape((1,) * (leaf.ndim - 1) + (-1,))
+            return jnp.where(m, pos_vals.astype(leaf.dtype), leaf)
+        if name == "block_tables":              # (..., B, MB)
+            m = table_mask.reshape((1,) * (leaf.ndim - 2) + (-1, 1))
+            return jnp.where(m, tables.astype(leaf.dtype), leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def _sample_batch(logits: jnp.ndarray, temps: jnp.ndarray,

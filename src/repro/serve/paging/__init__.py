@@ -1,0 +1,20 @@
+"""Paged KV-cache subsystem for the serving engine.
+
+Three host-side pieces (device-side gather/scatter primitives live in
+:mod:`repro.core.kvquant`, the paged attention path in
+:mod:`repro.models.layers`):
+
+* :class:`BlockPool`        — fixed arena of fixed-size KV blocks:
+  free list, refcounts; block ids index every layer's device arena.
+* :class:`RadixPrefixCache` — token-prefix -> refcounted block chains;
+  shared-prefix admission with zero recompute, LRU eviction.
+* :class:`PagedKVManager`   — per-engine block tables + row positions +
+  the admit / commit / ensure-room / release protocol.
+
+See the ROADMAP "Paged KV & prefix reuse" section for the contract.
+"""
+from repro.serve.paging.block_pool import BlockPool
+from repro.serve.paging.manager import PagedKVManager
+from repro.serve.paging.radix_cache import RadixNode, RadixPrefixCache
+
+__all__ = ["BlockPool", "RadixPrefixCache", "RadixNode", "PagedKVManager"]

@@ -1,0 +1,90 @@
+"""Fixed-arena block allocator for the paged KV cache.
+
+The device arenas — one ``(num_blocks, block_size, kv_heads, head_dim)``
+leaf per layer, living inside the model's cache pytree — are indexed by
+the integer block ids this pool hands out.  The pool itself never touches
+device memory: allocation and refcounting are pure host-side scheduling,
+so the jit'd step graph only ever consumes block tables (``(B,
+max_blocks)`` int32 arrays of physical block ids).
+
+Blocks are **refcounted**.  A block is owned by every request whose block
+table references it (requests take a ref at :meth:`alloc` time) plus,
+optionally, the radix prefix cache (:meth:`retain` when a prompt chain is
+indexed).  A block returns to the free list exactly when its refcount
+drops to 0 — so a finished request's prompt blocks survive as a reusable
+prefix chain for as long as the cache holds them, and a chain shared by N
+live requests survives all of them.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Optional
+
+
+class BlockPool:
+    """Host-side allocator over a fixed arena of ``num_blocks`` KV blocks
+    of ``block_size`` tokens each (ids ``0..num_blocks-1``)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = deque(range(num_blocks))
+        self._ref = [0] * num_blocks
+        self.peak_allocated = 0
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref[block_id]
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_blocks": self.num_blocks,
+                "block_size": self.block_size,
+                "allocated_blocks": self.allocated_blocks,
+                "free_blocks": self.free_blocks,
+                "peak_allocated_blocks": self.peak_allocated}
+
+    # -- lifecycle --------------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Atomically take ``n`` blocks (each with refcount 1), or return
+        None leaving the pool untouched when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        for i in ids:
+            self._ref[i] = 1
+        self.peak_allocated = max(self.peak_allocated, self.allocated_blocks)
+        return ids
+
+    def retain(self, ids: Iterable[int]) -> None:
+        """Add a reference to already-allocated blocks (prefix sharing)."""
+        for i in ids:
+            if self._ref[i] <= 0:
+                raise ValueError(f"retain of free block {i}")
+            self._ref[i] += 1
+
+    def release(self, ids: Iterable[int]) -> int:
+        """Drop one reference per id; blocks hitting refcount 0 return to
+        the free list.  Returns how many blocks were actually freed."""
+        freed = 0
+        for i in ids:
+            if self._ref[i] <= 0:
+                raise ValueError(f"release of free block {i}")
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                self._free.append(i)
+                freed += 1
+        return freed

@@ -1,0 +1,179 @@
+"""Host-side paging state for one ServingEngine: block tables, per-row
+positions, prompt-chain bookkeeping, and the admission/decode/release
+protocol tying the :class:`BlockPool` and :class:`RadixPrefixCache` to
+the device cache.
+
+The manager owns the authoritative ``(max_batch, max_blocks)`` block
+table and the per-row next-write position; the engine mirrors changed
+rows into the device cache pytree (admission, or a decode step that
+crosses a block boundary).  The jit'd model step only ever *reads*
+tables — every allocation decision happens here on the host.
+
+Admission protocol (per request):
+
+1. ``admit`` — radix-match the prompt (full blocks only, always leaving
+   at least one token to prefill so the admission step has a logit to
+   sample from), pin the matched chain, allocate fresh blocks for the
+   remainder of the prompt.  Decode blocks are NOT reserved — they are
+   allocated on demand by ``ensure_decode_room``, which is what lets the
+   pool over-commit relative to ``max_batch × max_len``.  Returns the
+   reused token count, or None when the pool (after radix eviction and
+   parked-slot reclaim) cannot cover the prompt — the engine re-queues
+   the request.
+2. engine runs the suffix prefill (reused blocks are NOT recomputed),
+3. ``commit_prompt`` — index the prompt's full blocks into the radix
+   cache so later requests can share them.
+
+A finished slot is ``park``-ed, not released: its blocks keep their pool
+refs (and radix pins) until the slot is readmitted or the pool runs dry
+(``_reclaim_parked`` inside the allocation fallback).  The frozen row's
+stale device table therefore keeps pointing at UNCHANGED block contents
+— exactly what the dense path's untouched cache rows read — so frozen
+rows never attend another request's recycled K/V and dense/paged parity
+survives arbitrary finish orderings whenever the pool is not under
+pressure.  Blocks whose chains were indexed survive reclaim under the
+cache's own ref until evicted.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.paging.block_pool import BlockPool
+from repro.serve.paging.radix_cache import RadixNode, RadixPrefixCache
+
+
+class PagedKVManager:
+    def __init__(self, max_batch: int, max_len: int, pool: BlockPool,
+                 prefix_cache: bool = True):
+        bs = pool.block_size
+        self.pool = pool
+        self.block_size = bs
+        self.max_len = max_len
+        self.max_blocks_per_row = -(-max_len // bs)
+        self.tables = np.full((max_batch, self.max_blocks_per_row), -1,
+                              np.int32)
+        self.row_pos = np.zeros((max_batch,), np.int64)
+        self._owned: List[List[int]] = [[] for _ in range(max_batch)]
+        self._pinned: List[List[RadixNode]] = [[] for _ in range(max_batch)]
+        self._parked: set = set()
+        self.radix: Optional[RadixPrefixCache] = (
+            RadixPrefixCache(pool) if prefix_cache else None)
+
+    # -- allocation helpers -----------------------------------------------
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate with radix eviction, then parked-slot reclaim, as the
+        fallbacks (cheapest memory first: evicting an idle chain loses a
+        possible future hit, reclaiming a parked slot only perturbs a
+        frozen row's garbage)."""
+        if n > self.pool.free_blocks and self.radix is not None:
+            self.radix.evict_until(n)
+        if n > self.pool.free_blocks and self._parked:
+            for slot in sorted(self._parked):
+                self._drop_holdings(slot)
+                if self.radix is not None:
+                    self.radix.evict_until(n)
+                if n <= self.pool.free_blocks:
+                    break
+        return self.pool.alloc(n)
+
+    def _drop_holdings(self, slot: int) -> None:
+        """Release a slot's pool refs and radix pins (park/readmit)."""
+        self._parked.discard(slot)
+        if self._owned[slot]:
+            self.pool.release(self._owned[slot])
+            self._owned[slot] = []
+        if self._pinned[slot]:
+            self.radix.unlock(self._pinned[slot])
+            self._pinned[slot] = []
+
+    # -- request lifecycle ------------------------------------------------
+
+    def admit(self, slot: int, prompt: Sequence[int],
+              max_new_tokens: int) -> Optional[int]:
+        """Plan one admission; returns the reused (skipped-prefill) token
+        count or None if the pool cannot hold the prompt's fresh blocks."""
+        bs = self.block_size
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new_tokens}) "
+                f"exceeds max_len={self.max_len}")
+        self._drop_holdings(slot)       # the parked predecessor, if any
+        # reuse only full blocks, and never the whole prompt — the final
+        # token must run through prefill to produce the first logit
+        usable_blocks = (len(prompt) - 1) // bs
+        pinned = (self.radix.match_and_lock(prompt, usable_blocks)
+                  if self.radix is not None else [])
+        reuse = len(pinned) * bs
+        need = -(-len(prompt) // bs) - len(pinned)
+        fresh = self._alloc(need)
+        if fresh is None:
+            if self.radix is not None:
+                self.radix.unlock(pinned)
+            return None
+        chain = [n.block_id for n in pinned] + fresh
+        self.tables[slot, :] = -1
+        self.tables[slot, :len(chain)] = chain
+        self.row_pos[slot] = reuse
+        self._owned[slot] = fresh
+        self._pinned[slot] = pinned
+        return reuse
+
+    def commit_prompt(self, slot: int, prompt: Sequence[int]) -> None:
+        """After the admission prefill: the prompt's K/V is materialized
+        in this row's chain — index its full blocks for future sharing
+        and advance the row's next-write position past the prompt."""
+        n_full = len(prompt) // self.block_size
+        if self.radix is not None and n_full:
+            self.radix.insert(prompt, list(self.tables[slot, :n_full]))
+        self.row_pos[slot] = len(prompt)
+
+    def ensure_decode_room(self, slot: int) -> bool:
+        """Allocate this row's next decode block if its next write
+        position crosses into an unallocated block; returns whether a
+        block was allocated (the engine re-uploads grown rows).  Raises
+        when the pool (after eviction and reclaim) is exhausted —
+        over-committed admission policy is the engine's to tune, this is
+        the backstop."""
+        lb = int(self.row_pos[slot]) // self.block_size
+        if lb >= self.max_blocks_per_row:
+            raise RuntimeError(f"slot {slot} overflowed max_len "
+                               f"{self.max_len}")
+        if self.tables[slot, lb] >= 0:
+            return False
+        ids = self._alloc(1)
+        if ids is None:
+            raise RuntimeError(
+                "KV block pool exhausted mid-decode "
+                f"({self.pool.num_blocks} blocks x {self.block_size} "
+                "tokens); raise num_blocks or lower concurrency")
+        self.tables[slot, lb] = ids[0]
+        self._owned[slot].append(ids[0])
+        return True
+
+    def advance(self, slots: Sequence[int]) -> None:
+        """Mirror the device-side per-row position advance of one decode
+        step for the live rows."""
+        for i in slots:
+            self.row_pos[i] += 1
+
+    def release(self, slot: int) -> None:
+        """PARK a finished/reset slot: its block refs and radix pins are
+        kept until readmission or pool-pressure reclaim, so the frozen
+        row's stale device table keeps reading unchanged contents (see
+        the module docstring).  Host table/pos are cleared — the slot is
+        schedulable immediately."""
+        self._parked.add(slot)
+        self.tables[slot, :] = -1
+        self.row_pos[slot] = 0
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        out = dict(self.pool.stats())
+        out["parked_slots"] = len(self._parked)
+        if self.radix is not None:
+            out.update(self.radix.stats())
+        return out

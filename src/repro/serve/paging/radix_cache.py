@@ -1,0 +1,173 @@
+"""Radix-tree prefix cache: token-prefix paths -> refcounted block chains.
+
+One tree node per **full** KV block (``block_size`` tokens); a node's key
+is the exact token tuple its block holds, so a root-to-node path spells a
+token prefix and carries the physical block chain that already contains
+its K/V.  A new request whose prompt starts with a cached path admits
+with ZERO recompute for the shared part: the engine copies the chain's
+block ids into the request's block table and prefills only the suffix.
+
+Partial trailing blocks are never indexed.  That choice makes shared
+blocks immutable-by-construction — a cached block is always complete, so
+divergence between two requests necessarily starts inside a block the
+newer request exclusively owns (its own freshly allocated suffix blocks).
+Copy-on-write therefore never has to copy device memory: "divergence"
+just means the radix walk stops and the request writes into its own
+blocks from there on.
+
+Reference lifecycle:
+
+* ``insert`` takes a pool ref per newly indexed block (the cache's own
+  ownership) — the chain outlives the request that produced it.
+* ``match_and_lock`` pins the matched nodes (``lock`` count) for the
+  lifetime of the borrowing request; locked nodes are never evicted, so
+  a chain in use cannot be freed under a live request.
+* ``evict_until`` walks refcount-0 (unlocked), childless nodes in LRU
+  order (leaf-first, so chains shrink from the tail) releasing their pool
+  refs until the free-list target is met.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.paging.block_pool import BlockPool
+
+
+class RadixNode:
+    __slots__ = ("key", "block_id", "children", "parent", "lock", "stamp")
+
+    def __init__(self, key: Tuple[int, ...], block_id: int,
+                 parent: Optional["RadixNode"]):
+        self.key = key
+        self.block_id = block_id
+        self.children: Dict[Tuple[int, ...], RadixNode] = {}
+        self.parent = parent
+        self.lock = 0          # pins held by live borrowing requests
+        self.stamp = 0         # LRU clock value of the last touch
+
+
+class RadixPrefixCache:
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self._root = RadixNode((), -1, None)
+        self._clock = 0
+        self.lookups = 0
+        self.hit_blocks = 0
+        self.evicted_blocks = 0
+
+    # -- helpers ----------------------------------------------------------
+
+    def _touch(self, node: RadixNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def _nodes(self) -> List[RadixNode]:
+        out, stack = [], list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._nodes())
+
+    # -- lookup / pin -----------------------------------------------------
+
+    def match_and_lock(self, tokens: Sequence[int],
+                       max_blocks: Optional[int] = None) -> List[RadixNode]:
+        """Longest cached full-block prefix of ``tokens`` (at most
+        ``max_blocks`` blocks), pinned against eviction.  The caller owns
+        the returned nodes until it calls :meth:`unlock`."""
+        bs = self.block_size
+        limit = len(tokens) // bs
+        if max_blocks is not None:
+            limit = min(limit, max_blocks)
+        self.lookups += 1
+        node, matched = self._root, []
+        for j in range(limit):
+            key = tuple(tokens[j * bs:(j + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.lock += 1
+            self._touch(child)
+            matched.append(child)
+            node = child
+        self.hit_blocks += len(matched)
+        return matched
+
+    def unlock(self, nodes: Sequence[RadixNode]) -> None:
+        for n in nodes:
+            if n.lock <= 0:
+                raise ValueError("unlock of unpinned radix node")
+            n.lock -= 1
+
+    # -- insertion --------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int],
+               block_ids: Sequence[int]) -> int:
+        """Index the full-block prefix of ``tokens`` whose K/V lives in
+        ``block_ids`` (the owning request's block chain, one id per full
+        block).  Existing nodes are kept (first writer wins — the newer
+        duplicate block stays private to its request and is freed with
+        it); each NEWLY indexed block gains a pool ref held by the cache.
+        Returns the number of newly indexed blocks."""
+        bs = self.block_size
+        n_full = min(len(tokens) // bs, len(block_ids))
+        node, created = self._root, 0
+        for j in range(n_full):
+            key = tuple(tokens[j * bs:(j + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(key, block_ids[j], node)
+                self.pool.retain([block_ids[j]])
+                node.children[key] = child
+                created += 1
+            self._touch(child)
+            node = child
+        return created
+
+    # -- eviction ---------------------------------------------------------
+
+    def evict_until(self, free_target: int) -> bool:
+        """Evict LRU unlocked leaves (releasing the cache's pool refs)
+        until the pool has ``free_target`` free blocks or nothing more is
+        evictable.  Returns whether the target was met.
+
+        One DFS collects the evictable frontier into a min-heap by LRU
+        stamp; parents are pushed as their last child is evicted — O((n +
+        evicted) log n) instead of a full rescan per victim."""
+        import heapq
+        if self.pool.free_blocks >= free_target:
+            return True
+        heap = [(n.stamp, id(n), n) for n in self._nodes()
+                if not n.children and n.lock == 0]
+        heapq.heapify(heap)
+        while self.pool.free_blocks < free_target:
+            while heap:
+                _, _, victim = heapq.heappop(heap)
+                # entry may be stale: re-check attachment and guards
+                if (victim.parent is not None
+                        and victim.parent.children.get(victim.key)
+                        is victim
+                        and not victim.children and victim.lock == 0):
+                    break
+            else:
+                return False
+            parent = victim.parent
+            del parent.children[victim.key]
+            self.pool.release([victim.block_id])
+            self.evicted_blocks += 1
+            if parent is not self._root and not parent.children \
+                    and parent.lock == 0:
+                heapq.heappush(heap, (parent.stamp, id(parent), parent))
+        return True
+
+    def stats(self) -> Dict[str, int]:
+        return {"cached_blocks": self.cached_blocks,
+                "lookups": self.lookups,
+                "hit_blocks": self.hit_blocks,
+                "evicted_blocks": self.evicted_blocks}

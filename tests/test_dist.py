@@ -99,6 +99,49 @@ def test_moe_shard_map_matches_local():
     assert "OK" in out
 
 
+def test_moe_prepared_expert_parallel():
+    """PREPARED MoE serving on a mesh: expert leaves are PreparedLinear
+    pytrees, so ``moe_apply``'s shard_map needs per-field in_specs (the
+    old raw (E, M, K) spec did not match the artifact structure) — both
+    the training/prefill EP dispatch and the decode-style inference EP
+    must accept a prepared tree (closes the ROADMAP open item)."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.base import ModelConfig, MoEConfig, QuantConfig
+        from repro.dist import sharding as shd
+        from repro.models import moe as moe_mod
+        from repro.serve.prepare import prepare_params
+
+        cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                          num_heads=2, num_kv_heads=2, d_ff=64,
+                          vocab_size=64,
+                          moe=MoEConfig(num_experts=8, experts_per_token=2,
+                                        expert_d_ff=32))
+        qcfg = QuantConfig(4, 4, method="rrs", group_size=16)
+        p, _ = moe_mod.moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+        p = prepare_params(p, qcfg)          # stacked PreparedLinear leaves
+        from repro.core.methods import PreparedLinear
+        assert isinstance(p["w_gate"], PreparedLinear)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+        y_local, _ = moe_mod.moe_apply(p, x, cfg, qcfg, True)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with shd.use_rules(mesh, shd.make_rules("train")):
+            y_ep, _ = jax.jit(
+                lambda p, x: moe_mod.moe_apply(p, x, cfg, qcfg, True))(p, x)
+        rel = float(jnp.linalg.norm(y_ep - y_local)
+                    / jnp.linalg.norm(y_local))
+        assert rel < 0.35, rel
+        with shd.use_rules(mesh, shd.make_rules("decode")):
+            y_inf, _ = jax.jit(
+                lambda p, x: moe_mod.moe_apply(p, x, cfg, qcfg, True))(p, x)
+        rel2 = float(jnp.linalg.norm(y_inf - y_local)
+                     / jnp.linalg.norm(y_local))
+        assert rel2 < 0.35, rel2
+        print("OK", rel, rel2)
+    """)
+    assert "OK" in out
+
+
 def test_pipeline_parallel_matches_sequential():
     out = run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp

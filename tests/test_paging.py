@@ -1,0 +1,378 @@
+"""Paged KV-cache subsystem: block-pool allocator, radix prefix reuse,
+block-table attention parity with the dense cache, quantized-at-rest
+blocks, and the serving-engine integration (admission skip-prefill,
+on-demand decode growth, eviction under pool pressure, submit-truncation
+flag, kv_quantize group contract)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import kvquant
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.paging import BlockPool, PagedKVManager, RadixPrefixCache
+
+TINY = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256)
+QRRS = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+
+
+def _mk_engine(qcfg=QRRS, cache="paged", max_batch=2, max_len=96,
+               block_size=8, **kw):
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, qcfg, max_batch=max_batch,
+                         max_len=max_len, cache=cache,
+                         block_size=block_size, **kw)
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator / radix cache
+# ---------------------------------------------------------------------------
+
+def test_block_pool_refcount_lifecycle():
+    pool = BlockPool(4, 8)
+    a = pool.alloc(3)
+    assert sorted(a) == [0, 1, 2] and pool.free_blocks == 1
+    assert pool.alloc(2) is None          # atomic: pool untouched
+    assert pool.free_blocks == 1
+    pool.retain([a[0]])                   # shared with the radix cache
+    assert pool.release(a) == 2           # a[0] survives its first ref
+    assert pool.refcount(a[0]) == 1
+    assert pool.release([a[0]]) == 1
+    assert pool.free_blocks == 4
+    with pytest.raises(ValueError):
+        pool.release([a[0]])              # double free
+    with pytest.raises(ValueError):
+        pool.retain([3])                  # retain of never-allocated
+
+
+def test_radix_match_insert_partial_blocks_and_lru_eviction():
+    pool = BlockPool(8, 4)
+    radix = RadixPrefixCache(pool)
+    toks_a = list(range(10))              # 2 full blocks + partial tail
+    ids_a = pool.alloc(3)
+    assert radix.insert(toks_a, ids_a[:2]) == 2   # partial NEVER indexed
+    assert radix.cached_blocks == 2
+    # full-block-granular match; max_blocks caps the walk
+    m = radix.match_and_lock(toks_a)      # full-block-granular match
+    assert [n.block_id for n in m] == ids_a[:2]
+    capped = radix.match_and_lock(toks_a[:7], max_blocks=99)
+    assert len(capped) == 1               # 7 tokens = 1 full block only
+    radix.unlock(capped)
+    pool.release(ids_a)                   # request done: cache refs remain
+    assert pool.free_blocks == 6          # only the partial-tail block
+    # locked chains are never evicted
+    assert not radix.evict_until(7)
+    assert radix.cached_blocks == 2
+    radix.unlock(m)
+    assert radix.evict_until(7)           # leaf first: chain tail
+    assert radix.cached_blocks == 1
+    assert radix.evict_until(8)
+    assert radix.cached_blocks == 0 and pool.free_blocks == 8
+
+
+def test_radix_chain_survives_owner_release():
+    """A finished request's slot is PARKED (blocks keep their refs so the
+    frozen row's stale table stays valid); readmission drops the parked
+    holdings and the prompt chain — now cache-held — is reused."""
+    pool = BlockPool(4, 2)
+    mgr = PagedKVManager(max_batch=1, max_len=8, pool=pool)
+    prompt = [1, 2, 3, 4, 5]
+    assert mgr.admit(0, prompt, 2) == 0
+    mgr.commit_prompt(0, prompt)
+    mgr.release(0)
+    assert pool.allocated_blocks == 3     # parked: nothing freed yet
+    assert mgr.stats()["parked_slots"] == 1
+    reuse = mgr.admit(0, prompt + [9], 2)
+    assert reuse == 4                     # both full blocks reused
+    assert pool.allocated_blocks == 3     # 2 shared + 1 fresh
+    # readmitting the parked slot drops its holdings, and radix eviction
+    # then frees enough chain blocks for an unrelated prompt
+    mgr.commit_prompt(0, prompt + [9])
+    mgr.release(0)
+    assert mgr.admit(0, [7, 8, 9, 10, 11, 12], 2) == 0  # needs 3 fresh
+    assert mgr.stats()["parked_slots"] == 0
+
+
+# ---------------------------------------------------------------------------
+# scatter/gather primitives (satellite: drop-mode edge cases)
+# ---------------------------------------------------------------------------
+
+def test_scatter_rows_drop_edges():
+    """idx == C and idx < 0 are both DROPPED (a raw negative index would
+    wrap to the end of the row in jnp — the remap guards that), and a
+    fully-dropped row comes back bit-identical."""
+    cache = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+    fresh = 100.0 + jnp.arange(2 * 2 * 3, dtype=jnp.float32).reshape(2, 2, 3)
+    idx = jnp.array([[4, -1], [0, 2]])    # row 0: all dropped
+    out = kvquant.scatter_rows(cache, fresh, idx)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(cache[0]))
+    np.testing.assert_array_equal(np.asarray(out[1, 0]),
+                                  np.asarray(fresh[1, 0]))
+    np.testing.assert_array_equal(np.asarray(out[1, 2]),
+                                  np.asarray(fresh[1, 1]))
+    np.testing.assert_array_equal(np.asarray(out[1, 1]),
+                                  np.asarray(cache[1, 1]))
+
+
+def test_paged_scatter_gather_matches_dense_rows():
+    """Writing through a block table then gathering the logical view
+    reproduces the dense (B, C, ...) cache layout exactly; unallocated
+    blocks are flagged -1 in paged_key_pos."""
+    B, S, H, D, bs = 2, 6, 2, 4, 4
+    mb = 3
+    key = jax.random.PRNGKey(0)
+    fresh = jax.random.normal(key, (B, S, H, D))
+    tables = jnp.array([[5, 1, -1], [0, 3, -1]], jnp.int32)
+    arena = jnp.zeros((6, bs, H, D))
+    qpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    valid = jnp.ones((B, S), bool)
+    arena = kvquant.paged_scatter(arena, fresh, tables, qpos, valid)
+    view = kvquant.paged_gather(arena, tables)       # (B, mb*bs, H, D)
+    np.testing.assert_allclose(np.asarray(view[:, :S]), np.asarray(fresh),
+                               rtol=0, atol=0)
+    kpos = kvquant.paged_key_pos(tables, bs)
+    assert kpos.shape == (B, mb * bs)
+    np.testing.assert_array_equal(np.asarray(kpos[0]),
+                                  [0, 1, 2, 3, 4, 5, 6, 7,
+                                   -1, -1, -1, -1])
+    # invalid / unallocated / negative-position writes are dropped
+    bad = kvquant.paged_scatter(arena, fresh + 7.0, tables,
+                                qpos - 100, valid)
+    np.testing.assert_array_equal(np.asarray(bad), np.asarray(arena))
+    bad2 = kvquant.paged_scatter(arena, fresh + 7.0, tables, qpos,
+                                 jnp.zeros((B, S), bool))
+    np.testing.assert_array_equal(np.asarray(bad2), np.asarray(arena))
+
+
+# ---------------------------------------------------------------------------
+# kv_quantize group contract (satellite)
+# ---------------------------------------------------------------------------
+
+def test_kv_quantize_emits_effective_group():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 64))
+    q = kvquant.kv_quantize(x, 4, 32)
+    assert q.group == 32 and q.scales.shape == (3, 2, 1)
+    # degenerate: group does not divide K -> ONE group per row, and the
+    # collapse is OBSERVABLE in the emitted group size
+    y = jax.random.normal(jax.random.PRNGKey(1), (3, 48))
+    qd = kvquant.kv_quantize(y, 4, 32)
+    assert qd.group == 48 == kvquant.effective_group(48, 32)
+    assert qd.scales.shape == (3, 1, 1)
+    # round trip stays sane under both regimes
+    for src, qq in ((x, q), (y, qd)):
+        back = kvquant.kv_dequantize(qq, jnp.float32)
+        rel = float(jnp.linalg.norm(back - src) / jnp.linalg.norm(src))
+        assert rel < 0.2, rel
+    assert kvquant.effective_group(128, 128) == 128
+    assert kvquant.effective_group(96, 128) == 96
+
+
+# ---------------------------------------------------------------------------
+# block-table attention vs dense-cache attention (satellite)
+# ---------------------------------------------------------------------------
+
+def test_paged_model_step_matches_dense_cache():
+    """Full model: prefill + 3 decode steps through the paged cache are
+    token- and logit-identical to the dense cache (same stored dtype →
+    same exposed key/value sets; extra masked slots soften to exactly
+    zero probability)."""
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    q = QuantConfig()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1, 260)
+    dense, _ = model.init_cache(2, 32)
+    paged, _ = model.init_cache(2, 32, paged=(8, 4))
+    # rows 0/1 -> disjoint block chains covering 8 prompt + 4 decode
+    tables = jnp.array([[0, 1, 2, -1, -1, -1, -1, -1],
+                        [3, 4, 5, -1, -1, -1, -1, -1]], jnp.int32)
+    paged = jax.tree_util.tree_map_with_path(
+        lambda p, l: (jnp.broadcast_to(tables, l.shape)
+                      if str(getattr(p[-1], "key", "")) == "block_tables"
+                      else l), paged)
+    ld, dense = model.step(params, toks, dense, q)
+    lp, paged = model.step(params, toks, paged, q)
+    np.testing.assert_array_equal(np.asarray(ld[:, -1]),
+                                  np.asarray(lp[:, -1]))
+    nxt = jnp.argmax(ld[:, -1:], -1).astype(jnp.int32)
+    for _ in range(3):
+        ld, dense = model.step(params, nxt, dense, q)
+        lp, paged = model.step(params, nxt, paged, q)
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+        nxt = jnp.argmax(ld[:, -1:], -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs dense parity (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qcfg", [QuantConfig(), QRRS],
+                         ids=["fp", "rrs-a4w4kv4"])
+def test_paged_token_identical_to_dense_no_prefix_hits(qcfg):
+    """Greedy decode through cache="paged" is TOKEN-IDENTICAL to
+    cache="dense" on an equal-length batch with no prefix hits — the
+    acceptance pin for the paged attention path."""
+    prompts = ["abcdef", "ghijkl", "mnopqr", "stuvwx"]
+    outs = {}
+    for kind in ("dense", "paged"):
+        eng = _mk_engine(qcfg, cache=kind, max_batch=4, max_len=64)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=4 + 3 * i)
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert len(done) == 4
+        outs[kind] = [r.out_tokens for r in done]
+    assert outs["dense"] == outs["paged"]
+    # nothing could have hit: all prompts distinct, engine was cold
+    assert eng.stats["prefix_hit_tokens"] == 0
+
+
+def test_paged_mixed_length_queue_and_decode_block_growth():
+    """Mixed-length queue over paged slots: blocks are allocated on
+    demand as decode crosses block boundaries, every request completes,
+    and outputs match the dense engine."""
+    outs = {}
+    for kind in ("dense", "paged"):
+        # fp config + prefix_cache off: a radix hit (the repeated-letter
+        # prompts share prefixes) or quantized batch-global smooth scales
+        # would legitimately perturb tokens vs the dense reference — this
+        # test pins pure paging + on-demand growth, where parity is exact
+        kw = {"prefix_cache": False} if kind == "paged" else {}
+        eng = _mk_engine(QuantConfig(), cache=kind, max_batch=2,
+                         max_len=64, block_size=4, **kw)
+        for i in range(5):
+            eng.submit("x" * (3 + 5 * i), max_new_tokens=9)  # crosses blocks
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert len(done) == 5
+        outs[kind] = [r.out_tokens for r in done]
+        if kind == "paged":
+            assert all(s is None for s in eng.slots)
+            assert eng.pager.pool.peak_allocated > 0
+    # schedulers are identical; only the cache layout differs
+    assert outs["dense"] == outs["paged"]
+
+
+# ---------------------------------------------------------------------------
+# engine: shared-prefix admission (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_admission_skips_prefill():
+    """A second request sharing a cached prompt prefix admits WITHOUT
+    recomputing the shared blocks: the engine prefills only the suffix
+    (token-count assertion), still in one prefill step, and the greedy
+    continuation is identical to a cold engine (fp config: prefix reuse
+    is bit-invisible)."""
+    common = list(range(40, 73))                  # +BOS = 34 shared tokens
+    eng = _mk_engine(QuantConfig(), max_batch=2, max_len=96, block_size=8)
+    eng.submit(common + [5, 6, 7], max_new_tokens=5)
+    eng.run()
+    assert eng.stats["prefix_hit_tokens"] == 0
+    base_prefill = eng.stats["prefill_tokens"]    # 37: full first prompt
+    assert base_prefill == 37
+    eng.submit(common + [9, 10, 11, 12], max_new_tokens=5)
+    warm = eng.run()[0].out_tokens
+    # 4 full blocks (32 tokens incl BOS) reused; only 6 tokens prefilled
+    assert eng.stats["prefix_hit_tokens"] == 32
+    assert eng.stats["prefill_tokens"] - base_prefill == 6
+    assert eng.stats["prefill_steps"] == 2        # one step per admission
+    cold = _mk_engine(QuantConfig(), max_batch=2, max_len=96, block_size=8)
+    cold.submit(common + [9, 10, 11, 12], max_new_tokens=5)
+    assert cold.run()[0].out_tokens == warm
+    assert cold.stats["prefill_tokens"] == 38     # the work warm skipped
+
+
+def test_shared_prefix_divergence_mid_block():
+    """Divergence inside a block: only the full blocks BEFORE the
+    divergence point are ever shared (partial blocks are never indexed),
+    so copy-on-write never has to copy — the diverging request writes
+    into its own freshly allocated blocks from the boundary on."""
+    common = list(range(10, 29))                  # +BOS = 20 tokens
+    eng = _mk_engine(QuantConfig(), max_batch=2, max_len=96, block_size=8)
+    eng.submit(common + [1, 2, 3], max_new_tokens=4)
+    out_a = eng.run()[0].out_tokens
+    eng.submit(common[:14] + [7, 8, 9], max_new_tokens=4)  # diverges @15
+    out_b = eng.run()[0].out_tokens
+    # shared full blocks: floor(15/8) = 1 block = 8 tokens
+    assert eng.stats["prefix_hit_tokens"] == 8
+    # and request A's chain was not perturbed: resubmitting A replays it
+    eng.submit(common + [1, 2, 3], max_new_tokens=4)
+    assert eng.run()[0].out_tokens == out_a
+    cold = _mk_engine(QuantConfig(), max_batch=2, max_len=96, block_size=8)
+    cold.submit(common[:14] + [7, 8, 9], max_new_tokens=4)
+    assert cold.run()[0].out_tokens == out_b
+
+
+def test_pool_pressure_evicts_and_completes():
+    """A pool much smaller than max_batch x max_len still serves a
+    stream of distinct prompts: finished chains are evicted LRU to make
+    room (the memory-decoupling point of paging)."""
+    eng = _mk_engine(QRRS, max_batch=2, max_len=64, block_size=4,
+                     num_blocks=10)               # 10*4 << 2*64
+    for i in range(6):
+        eng.submit([(17 * i + j) % 251 for j in range(11)],
+                   max_new_tokens=4)
+    done = eng.run()
+    assert len(done) == 6
+    assert all(r.done for r in done)
+    assert eng.pager.radix.evicted_blocks > 0
+    assert eng.pager.pool.peak_allocated <= 10
+
+
+def test_paged_int4_at_rest_blocks():
+    """kv_storage="int8" + kv_bits=4 stores paged blocks as packed int4
+    nibbles + sub-channel scales: resident bytes per block drop well
+    below bf16, and serving still completes with sane tokens."""
+    q4 = QuantConfig(4, 4, 4, method="rrs", group_size=32,
+                     kv_storage="int8")
+    eng4 = _mk_engine(q4, max_batch=2, max_len=96, block_size=8)
+    engb = _mk_engine(QRRS, max_batch=2, max_len=96, block_size=8)
+    assert eng4.kv_cache_stats()["kv_block_bytes"] < \
+        engb.kv_cache_stats()["kv_block_bytes"]
+    # packed nibbles: code arenas are uint8 with head_dim/2 lanes
+    k_leaf = jax.tree_util.tree_flatten_with_path(eng4.cache)[0]
+    k = [l for p, l in k_leaf
+         if str(getattr(p[-1], "key", "")) == "k"][0]
+    assert k.dtype == jnp.uint8 and \
+        k.shape[-1] == TINY.resolved_head_dim // 2     # packed nibbles
+    eng4.submit(list(range(30)), max_new_tokens=6)
+    done = eng4.run()
+    assert done[0].done and len(done[0].out_tokens) == 6
+    assert all(0 <= t < TINY.vocab_size for t in done[0].out_tokens)
+
+
+def test_paged_wave_scheduler_parity():
+    """The wave reference policy runs on the paged cache too: greedy
+    outputs token-identical to continuous on an equal-length batch (fp —
+    the schedulers free slots at different times, and under quantized
+    batch-global scales frozen-row garbage is allowed to differ)."""
+    prompts = ["aaaa", "bbbb", "cccc"]
+    outs = {}
+    for sched in ("wave", "continuous"):
+        eng = _mk_engine(QuantConfig(), max_batch=3, max_len=64,
+                         scheduler=sched)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=3 + 2 * i)
+        outs[sched] = [r.out_tokens
+                       for r in sorted(eng.run(), key=lambda r: r.rid)]
+    assert outs["wave"] == outs["continuous"]
+
+
+# ---------------------------------------------------------------------------
+# submit truncation flag (satellite)
+# ---------------------------------------------------------------------------
+
+def test_submit_records_truncation():
+    """A prompt that cannot fit max_len - max_new_tokens loses its HEAD
+    tokens — no longer silently: the Request carries ``truncated``."""
+    eng = _mk_engine(QRRS, cache="dense", max_batch=2, max_len=32)
+    eng.submit(list(range(100)), max_new_tokens=8)   # 101 ids > 24 keep
+    eng.submit(list(range(5)), max_new_tokens=8)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert done[0].truncated and len(done[0].prompt) == 24
+    assert not done[1].truncated
+    # paged admission guards the same invariant upstream of the pool
+    with pytest.raises(ValueError):
+        PagedKVManager(1, 16, BlockPool(4, 4)).admit(0, list(range(15)), 8)
