@@ -15,13 +15,18 @@ Two studies on the same tiny model:
   to ``benchmarks/results/serve_paging.json``.
 
 Every engine is warmed once untimed (jit + radix steady state), then
-timed on a fresh copy of the queue.
+timed on a fresh copy of the queue.  Both queues are drawn from a fixed
+RNG key (``--seed``), so an A/B on two machines (or two commits) serves
+the SAME request stream — rerunning with the same seed reproduces the
+workload exactly, and a different seed gives an independent draw.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+        [--seed N]
 """
 import argparse
 import time
 
+import numpy as np
 import jax
 
 from repro.configs.base import ModelConfig, QuantConfig
@@ -33,17 +38,22 @@ from benchmarks.common import emit
 def build_queue(engine: ServingEngine, n_requests: int, seed: int = 0):
     """Mixed prompt lengths + staggered budgets — the anti-wave workload:
     no two adjacent requests share a length, so wave batching degrades to
-    small gangs while slots stay full."""
+    small gangs while slots stay full.  Drawn from ``seed`` via a
+    platform-stable RNG (``np.random.default_rng``): the same seed
+    reproduces the same queue on any machine, and warmup/timed passes
+    rebuild identical copies (so the warm jit shapes cover the timed
+    run)."""
+    rng = np.random.default_rng(seed)
     lengths = [4, 7, 10, 13]
-    budgets = [8, 24, 40]     # coprime cycles: a wave gang (one length)
+    budgets = [8, 24, 40]     # coprime-ish mix: a wave gang (one length)
     for i in range(n_requests):   # spans budgets, so its slots drain idle
-        prompt = [1 + (seed + i * 37 + j) % 200
-                  for j in range(lengths[i % len(lengths)])]
+        n = lengths[i % len(lengths)]
+        prompt = (1 + rng.integers(0, 200, size=n)).tolist()
         engine.submit(prompt, max_new_tokens=budgets[i % len(budgets)])
 
 
 def run_sched(model, params, qcfg, scheduler, n_requests, max_batch,
-              max_len):
+              max_len, seed=0):
     # ONE engine for warmup + timed run: the jitted step/sample/reset
     # graphs live on the engine, so the untimed pass compiles every
     # shape this workload needs and the timed pass measures scheduling,
@@ -51,10 +61,10 @@ def run_sched(model, params, qcfg, scheduler, n_requests, max_batch,
     eng = ServingEngine(model, params, qcfg, max_batch=max_batch,
                         max_len=max_len, prepare=False,
                         scheduler=scheduler)
-    build_queue(eng, n_requests)
+    build_queue(eng, n_requests, seed=seed)
     eng.run()                     # untimed warmup
-    eng.stats = dict.fromkeys(eng.stats, 0)
-    build_queue(eng, n_requests)
+    eng.reset_stats()
+    build_queue(eng, n_requests, seed=seed)
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -80,17 +90,20 @@ def build_prefix_queue(engine: ServingEngine, n_requests: int,
                        seed: int = 0):
     """Multi-tenant shared-prefix workload: 3 'system prompts' of 31
     tokens (4 full blocks incl BOS at block_size 8) shared round-robin,
-    each followed by a distinct short user suffix."""
-    prefixes = [[1 + (p * 97 + j) % 200 for j in range(31)]
-                for p in range(3)]
+    each followed by a distinct short user suffix.  Same fixed-RNG-key
+    contract as :func:`build_queue` — one rng drawn in order keeps the
+    prefixes AND suffixes reproducible for a given seed."""
+    rng = np.random.default_rng(seed)
+    prefixes = [(1 + rng.integers(0, 200, size=31)).tolist()
+                for _ in range(3)]
     for i in range(n_requests):
-        suffix = [1 + (seed + i * 13 + j) % 200 for j in range(3 + i % 4)]
+        suffix = (1 + rng.integers(0, 200, size=3 + i % 4)).tolist()
         engine.submit(prefixes[i % 3] + suffix,
                       max_new_tokens=6 + (i % 3) * 4)
 
 
 def run_paged(model, params, qcfg, variant, n_requests, max_batch,
-              max_len):
+              max_len, seed=0):
     kw = {} if variant == "dense" else {"cache": "paged", "block_size": 8}
     eng = ServingEngine(model, params, qcfg, max_batch=max_batch,
                         max_len=max_len, prepare=False, **kw)
@@ -98,12 +111,10 @@ def run_paged(model, params, qcfg, variant, n_requests, max_batch,
     # prefill shapes, the second the radix-warm suffix-admission shapes —
     # only then does the SAME queue replay measure serving, not jit
     for _ in range(2):
-        build_prefix_queue(eng, n_requests)
+        build_prefix_queue(eng, n_requests, seed=seed)
         eng.run()
-    eng.stats = dict.fromkeys(eng.stats, 0)
-    if eng.pager is not None:
-        eng.pager.pool.peak_allocated = 0
-    build_prefix_queue(eng, n_requests)
+    eng.reset_stats()
+    build_prefix_queue(eng, n_requests, seed=seed)
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -128,7 +139,7 @@ def run_paged(model, params, qcfg, variant, n_requests, max_batch,
     }
 
 
-def run_paging_study(model, params, qcfg, quick: bool):
+def run_paging_study(model, params, qcfg, quick: bool, seed: int = 0):
     """dense vs paged vs paged+int4-at-rest on the shared-prefix mix."""
     n_requests = 9 if quick else 18
     qcfg_int4 = QuantConfig(qcfg.a_bits, qcfg.w_bits, 4,
@@ -139,7 +150,7 @@ def run_paging_study(model, params, qcfg, quick: bool):
     for variant, q in (("dense", qcfg), ("paged", qcfg),
                        ("paged_int4_at_rest", qcfg_int4)):
         rows.append(run_paged(model, params, q, variant, n_requests,
-                              max_batch=4, max_len=128))
+                              max_batch=4, max_len=128, seed=seed))
         r = rows[-1]
         print(f"{variant}: {r['tok_s']} tok/s, hit rate "
               f"{r['prefix_hit_rate']}, peak KV {r['kv_bytes_peak']}B "
@@ -160,7 +171,7 @@ def run_paging_study(model, params, qcfg, quick: bool):
     return rows
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, seed: int = 0):
     cfg = ModelConfig(name="serve-bench", family="dense", num_layers=2,
                       d_model=128, num_heads=4, num_kv_heads=2,
                       head_dim=32, d_ff=384, vocab_size=260,
@@ -175,7 +186,7 @@ def run(quick: bool = False):
     rows = []
     for sched in ("wave", "continuous"):
         rows.append(run_sched(model, prepped, qcfg, sched, n_requests,
-                              max_batch=4, max_len=128))
+                              max_batch=4, max_len=128, seed=seed))
         print(f"{sched}: {rows[-1]['tok_s']} tok/s "
               f"({rows[-1]['decode_steps']} decode steps, "
               f"occupancy {rows[-1]['decode_occupancy']})")
@@ -188,11 +199,16 @@ def run(quick: bool = False):
             1.0 - cont["decode_steps"] / max(wave["decode_steps"], 1), 3),
     })
     emit(rows, "serve_throughput")
-    rows += run_paging_study(model, prepped, qcfg, quick)
+    rows += run_paging_study(model, prepped, qcfg, quick, seed=seed)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG key for the request queues — the same "
+                         "seed reproduces the same workload on any "
+                         "machine (A/B reproducibility)")
+    args = ap.parse_args()
+    run(quick=args.quick, seed=args.seed)

@@ -1,0 +1,147 @@
+"""Speculative decoding study: int4-RRS draft / fp-activation target.
+
+Serves the same mixed-length queue three ways on one tiny model whose
+weights were RRS-prepared once (the spec engines draft through the
+packed artifact's quantized apply path and verify through its dense
+``w_dq`` — one artifact, two execution paths):
+
+* ``plain``          — the non-speculative target engine (the reference
+                       both for tokens AND for token identity);
+* ``spec_k{K}``      — self-speculative engines for each K, recording
+                       acceptance rate, mean accepted length and
+                       tokens per verify step (the decode-depth
+                       compression: a plain engine runs one target
+                       forward per token, a spec engine commits
+                       ``tokens/step`` per target forward).
+
+The headline column is ``target_step_reduction`` — on this CPU test
+substrate the draft runs the QDQ fake-quant path, which is MORE
+expensive per forward than the fp target, so wall-clock tok/s
+understates the win; on the packed-int4 kernel path the draft forward
+is the cheap one and step compression translates to wall clock.
+
+Greedy spec decoding is LOSSLESS, so the run asserts every spec
+engine's outputs are token-identical to the plain target engine — CI
+runs this as the spec smoke (``--quick``: k=2 only).  The bench model
+runs f32: chunked verify scoring is structurally per-token-exact, and
+the f32 reduction-order slack between the (B, k+1) and (B, 1) graphs
+(~1e-6) sits far below greedy argmax gaps; bf16's ~1e-2 slack can flip
+a near-tied argmax — see the ROADMAP's speculative-decoding caveat.
+
+    PYTHONPATH=src python -m benchmarks.spec_decode [--quick]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.prepare import prepare_params
+from benchmarks.common import emit
+# the SAME seeded anti-wave workload as the scheduling A/B — one
+# builder, so the two benches always measure one request stream
+from benchmarks.serve_throughput import build_queue
+
+
+def run_engine(model, prepped, qcfg, n_requests, spec_k=None):
+    kw = {} if spec_k is None else {"spec": "rrs_draft", "spec_k": spec_k}
+    eng = ServingEngine(model, prepped, qcfg, max_batch=4, max_len=128,
+                        prepare=False, **kw)
+    build_queue(eng, n_requests)
+    eng.run()                      # untimed warmup (jit all round shapes)
+    eng.reset_stats()
+    build_queue(eng, n_requests)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    st = eng.stats
+    name = "spec_plain" if spec_k is None else f"spec_k{spec_k}"
+    row = {
+        "name": name,
+        "spec_k": spec_k or 0,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(dt, 4),
+        "tok_s": round(toks / dt, 2),
+        # one target forward per generated token (plain) vs per round
+        "target_steps": (st["decode_steps"] if spec_k is None
+                         else st["verify_steps"]),
+    }
+    if spec_k is not None:
+        rounds = max(st["spec_rounds"], 1)
+        row.update({
+            "accept_rate": round(st["spec_accepted"]
+                                 / max(st["spec_proposed"], 1), 3),
+            # accepted drafts per ROW per round (of the k proposed)
+            "mean_accepted_len": round(st["spec_accepted"]
+                                       / max(st["spec_row_rounds"], 1),
+                                       3),
+            # committed tokens per target forward, whole batch — the
+            # decode-depth compression vs the plain row's same metric
+            "tokens_per_step": round(st["spec_committed"] / rounds, 3),
+        })
+    else:
+        # same convention as the spec rows: tokens committed by decode
+        # forwards only (each request's first token comes from the
+        # admission prefill in both modes)
+        row["tokens_per_step"] = round((toks - len(done))
+                                       / max(st["decode_steps"], 1), 3)
+    outs = [r.out_tokens for r in sorted(done, key=lambda r: r.rid)]
+    return row, outs
+
+
+def run(quick: bool = False):
+    cfg = ModelConfig(name="spec-bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=384, vocab_size=260,
+                      max_seq_len=512, dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+    # ONE artifact for draft AND target: keep the dense copy next to the
+    # quantized fields (what ServingEngine(spec=...) prepares itself)
+    prepped = prepare_params(params, qcfg, keep_dense=True)
+    target_qcfg = dataclasses.replace(qcfg, a_bits=16)
+
+    n_requests = 8 if quick else 16
+    ks = (2,) if quick else (1, 2, 4)
+    rows = []
+    plain, ref_outs = run_engine(model, prepped, target_qcfg, n_requests)
+    rows.append(plain)
+    print(f"plain target: {plain['tok_s']} tok/s, "
+          f"{plain['target_steps']} target steps")
+    for k in ks:
+        row, outs = run_engine(model, prepped, qcfg, n_requests,
+                               spec_k=k)
+        # losslessness gate: greedy spec output must be token-identical
+        if outs != ref_outs:
+            raise SystemExit(
+                f"spec_k={k} output diverged from the plain target "
+                "engine — speculative decoding is no longer lossless")
+        row["token_identical"] = True
+        rows.append(row)
+        print(f"spec k={k}: {row['tok_s']} tok/s, accept rate "
+              f"{row['accept_rate']}, {row['tokens_per_step']} "
+              f"tokens/step over {row['target_steps']} target steps")
+    best = max(rows[1:], key=lambda r: r["tokens_per_step"])
+    rows.append({
+        "name": "spec_summary",
+        "best_k": best["spec_k"],
+        "tokens_per_step_vs_plain": round(
+            best["tokens_per_step"] / rows[0]["tokens_per_step"], 3),
+        "target_step_reduction": round(
+            1.0 - best["target_steps"] / max(rows[0]["target_steps"], 1),
+            3),
+    })
+    emit(rows, "spec_decode")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

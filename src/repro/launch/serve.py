@@ -9,7 +9,9 @@ Loads (or randomly initializes) weights, prepares them offline
 (rotate + quantize), starts the engine, runs a synthetic MIXED-LENGTH
 request stream (admitted per slot, no length bucketing) and prints
 throughput.  ``--ckpt`` restores trained params saved by
-``repro.launch.train``.
+``repro.launch.train``.  ``--spec rrs_draft --spec-k 4`` turns on
+self-speculative decoding: the int4 path drafts, the fp-activation
+target verifies — outputs stay lossless w.r.t. the target.
 """
 import argparse
 import time
@@ -38,6 +40,12 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged pool size (default: full provisioning)")
+    ap.add_argument("--spec", default=None, choices=["rrs_draft"],
+                    help="self-speculative decoding: the quantized path "
+                         "drafts, the fp-activation target verifies "
+                         "(lossless)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--ckpt", default=None)
@@ -77,7 +85,8 @@ def main():
                            max_len=args.max_len,
                            scheduler=args.scheduler, cache=args.cache,
                            block_size=args.block_size,
-                           num_blocks=args.num_blocks)
+                           num_blocks=args.num_blocks,
+                           spec=args.spec, spec_k=args.spec_k)
     prompts = ["the quick brown fox jumps", "one two three four",
                "a quantized model serves", "hello world again"]
     for i in range(args.requests):
@@ -88,11 +97,18 @@ def main():
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     st = engine.stats
+    gen_steps = (f"{st['verify_steps']} verify steps" if args.spec
+                 else f"{st['decode_steps']} decode steps")
     print(f"{args.scheme}/{args.method}/{args.scheduler}: "
           f"{len(done)} requests, "
           f"{toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s "
-          f"({st['prefill_steps']} prefills, {st['decode_steps']} decode "
-          f"steps)")
+          f"({st['prefill_steps']} prefills, {gen_steps})")
+    if args.spec:
+        acc = st["spec_accepted"] / max(st["spec_proposed"], 1)
+        print(f"spec k={args.spec_k}: {st['spec_rounds']} rounds, "
+              f"accept rate {acc:.2f}, "
+              f"{st['spec_committed'] / max(st['spec_rounds'], 1):.2f} "
+              f"tokens/verify step")
     if args.cache == "paged":
         kv = engine.kv_cache_stats()
         print(f"paged KV: hit {st['prefix_hit_tokens']} / prefilled "

@@ -367,7 +367,8 @@ def _cache_bias(qpos: jnp.ndarray, kpos: jnp.ndarray,
 
 
 def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
-                      kv_quant_bits: int, kv_group: int, x_dtype
+                      kv_quant_bits: int, kv_group: int, x_dtype,
+                      attend_cache: bool = False
                       ) -> Tuple[jnp.ndarray, Dict]:
     """Attention through a block-table paged KV cache (prefill AND decode).
 
@@ -422,9 +423,12 @@ def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
                      "pos": advance_pos(pos, s, offsets),
                      "block_tables": bt}
         kk, vv = kvquant.paged_gather(ck, bt), kvquant.paged_gather(cv, bt)
-        if kv_quant_bits < 16 and s == 1:
-            # decode reads the cache fake-quantized, mirroring the dense
-            # path (prefill attends raw fresh values there too)
+        if kv_quant_bits < 16 and (s == 1 or attend_cache):
+            # decode (and the multi-token verify chunk, which must be
+            # bit-equal to sequential decode — fake-quant is per token,
+            # so chunked and one-by-one reads round identically) reads
+            # the cache fake-quantized, mirroring the dense path
+            # (prefill attends raw fresh values there too)
             kk = kvquant.kv_fakequant(kk, kv_quant_bits, kv_group)
             vv = kvquant.kv_fakequant(vv, kv_quant_bits, kv_group)
 
@@ -470,6 +474,7 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
               kv_quant_bits: int = 16, kv_group: int = 128,
               use_rope: bool = True, causal: bool = True,
               offsets: Optional[jnp.ndarray] = None,
+              attend_cache: bool = False,
               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self-attention with GQA + optional KV cache (decode) + KV quant.
 
@@ -485,6 +490,16 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
     fully-padded row is a frozen slot).  This is the contract continuous
     slot-level batching runs on: one decode graph serves rows at mixed
     progress.
+
+    ``attend_cache`` (static) is the MULTI-TOKEN VERIFY contract
+    (speculative decoding, ``serve.spec``): an S > 1 chunk on rows whose
+    cache is already populated (pos > 0) scores every position against
+    cache ∪ fresh through the same per-row ``_cache_bias`` masks the
+    decode path uses — the fresh K/V is written first, then all queries
+    attend the full cache view, so position j sees exactly the keys a
+    sequential decode of the same tokens would see.  Without the flag an
+    S > 1 call keeps the prefill fast path (fresh-block attention from
+    pos = 0).
     """
     from repro.core import kvquant
     b, s, d = x.shape
@@ -505,7 +520,8 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         # dense int8 branch: at-rest paged caches also carry scales.
         out, new_cache = _paged_cache_attn(q, k, v, cache, cfg, offsets,
                                            kv_quant_bits, kv_group,
-                                           x.dtype)
+                                           x.dtype,
+                                           attend_cache=attend_cache)
         out = out.reshape(b, s, h * hd)
         return qlinear(out, p["wo"], qcfg, prepared), new_cache
 
@@ -528,7 +544,7 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
         cvs = kvquant.scatter_rows(cache["v_scale"], vs, idx)
         new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
                      "pos": advance_pos(pos, s, offsets)}
-        if s > 1:
+        if s > 1 and not attend_cache:
             out = _fresh_block_attn(q, k, v, cfg, offsets, qpos, valid_q,
                                     causal)
             out = out.reshape(b, s, h * hd)
@@ -569,7 +585,7 @@ def gqa_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig, qcfg: QuantConfig,
             cv = kvquant.scatter_rows(cache["v"], v, idx)
             kpos = None
             new_cache = {"k": ck, "v": cv, "pos": new_pos}
-        if s > 1:
+        if s > 1 and not attend_cache:
             # prefill (slot contract: from pos=0): serve attention from
             # the FRESH K/V — no (s × s_max) score materialization; the
             # cache holds (quantized-on-read) K/V for later decode steps.

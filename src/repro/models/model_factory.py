@@ -21,6 +21,21 @@ PAGED cache's pooled block arenas (transformer families,
 is the ``pos`` + ``block_tables`` leaves, and row reset is a host-side
 block-table operation (``serve.paging.PagedKVManager``), not a leaf
 reset.
+
+Multi-token VERIFY contract (transformer families; speculative
+decoding, ``serve.spec``): ``step(params, chunk, cache, qcfg,
+offsets=(batch,), last_only=False, attend_cache=True)`` scores a
+``(batch, k+1)`` token chunk on rows whose cache is already populated —
+fresh K/V is written through the per-row masks FIRST, then every
+position attends cache ∪ fresh, so position j sees exactly the key set
+a sequential decode of the same tokens would.  Returns logits at ALL
+chunk positions; the cache comes back advanced by each row's real
+(non-pad) token count, and the caller rewinds rejected positions by
+setting ``pos`` back (dense — stale entries beyond ``pos`` are masked
+and later overwritten) or via ``PagedKVManager.rollback`` (paged —
+also frees now-empty trailing blocks).  The per-position reads/writes
+are per-token ops (fake-quant groups never span tokens), so chunked
+scoring is bit-equal to sequential decode of the same tokens.
 """
 from __future__ import annotations
 

@@ -59,9 +59,13 @@ def _block_params(key, cfg: ModelConfig, kind: str, dtype):
 
 def _block_apply(p, x, cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
                  positions, cache=None, enc=None, kind: str = "dense",
-                 kv_bits: int = 16, kv_group: int = 128, offsets=None):
+                 kv_bits: int = 16, kv_group: int = 128, offsets=None,
+                 attend_cache: bool = False):
     """Pre-norm block. Returns (x, new_cache, aux).  ``offsets`` (B,) are
-    per-row left-pad counts for slot-level serving (see gqa_apply)."""
+    per-row left-pad counts for slot-level serving (see gqa_apply);
+    ``attend_cache`` selects the multi-token verify form of an S > 1
+    cached call (score every position against cache ∪ fresh — GQA
+    attention only; MLA does not implement the verify contract)."""
     rs = cfg.residual_scale
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
@@ -74,7 +78,8 @@ def _block_apply(p, x, cfg: ModelConfig, qcfg: QuantConfig, prepared: bool,
             p["attn"], h, cfg, qcfg, prepared, positions,
             cache=None if cache is None else cache.get("attn"),
             kv_quant_bits=kv_bits, kv_group=kv_group,
-            use_rope=not cfg.is_encoder_decoder, offsets=offsets)
+            use_rope=not cfg.is_encoder_decoder, offsets=offsets,
+            attend_cache=attend_cache)
     x = x + rs * attn_out
     new_cache = {} if cache is not None else None
     if new_attn_cache is not None:
@@ -420,8 +425,9 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                     caches: Dict, qcfg: QuantConfig, prepared: bool = False,
                     patches: Optional[jnp.ndarray] = None,
                     last_only: bool = True, offsets=None,
+                    attend_cache: bool = False,
                     ) -> Tuple[jnp.ndarray, Dict]:
-    """Prefill (S>1) or decode (S=1) with KV caches.
+    """Prefill (S>1), decode (S=1) or multi-token verify with KV caches.
 
     Positions are PER ROW, derived from cache["pos"] (B,) (same for every
     layer).  ``offsets`` (B,) counts left-pad tokens heading each row —
@@ -430,6 +436,10 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
     prefill some rows while freezing or decoding others.
     ``last_only``: serving only needs logits at the final position —
     avoids a (B, S, V) materialization at prefill_32k.
+    ``attend_cache`` (static): the multi-token VERIFY step — an S > 1
+    chunk on rows at pos > 0 scores all S positions against cache ∪
+    fresh (speculative decoding; pair with ``last_only=False`` to read
+    every position's logits).  See ``layers.gqa_apply``.
     """
     b, s = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
@@ -450,7 +460,7 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
         if name == "vlm":
             x, new_caches["vlm"], aux = _vlm_step_cached(
                 stacked, caches["vlm"], x, cfg, qcfg, prepared, positions,
-                enc, aux, offsets=offsets)
+                enc, aux, offsets=offsets, attend_cache=attend_cache)
             continue
         kind = name.split("_")[0]
 
@@ -461,7 +471,8 @@ def step_with_cache(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                                      cache=lc, kind=kind,
                                      kv_bits=qcfg.kv_bits,
                                      kv_group=qcfg.kv_group_size,
-                                     offsets=offsets)
+                                     offsets=offsets,
+                                     attend_cache=attend_cache)
             return (xx, a1 + a), nc
 
         (x, aux), nc = jax.lax.scan(body, (x, aux),
@@ -486,7 +497,7 @@ def _first_pos(caches) -> jnp.ndarray:
 
 
 def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
-                     enc, aux, offsets=None):
+                     enc, aux, offsets=None, attend_cache=False):
     def group_body(carry, inputs):
         xx, a0 = carry
         (plain_g, cross_g), (pc, cc) = inputs
@@ -498,7 +509,8 @@ def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
                                      cache=lc, kind="dense",
                                      kv_bits=qcfg.kv_bits,
                                      kv_group=qcfg.kv_group_size,
-                                     offsets=offsets)
+                                     offsets=offsets,
+                                     attend_cache=attend_cache)
             return (x1, a1 + a), nc
 
         (xx, a0), npc = jax.lax.scan(plain_body, (xx, a0), (plain_g, pc))
@@ -506,7 +518,8 @@ def _vlm_step_cached(stacked, caches, x, cfg, qcfg, prepared, positions,
                                   positions, cache=cc, enc=enc, kind="cross",
                                   kv_bits=qcfg.kv_bits,
                                   kv_group=qcfg.kv_group_size,
-                                  offsets=offsets)
+                                  offsets=offsets,
+                                  attend_cache=attend_cache)
         return (xx, a0 + a), (npc, ncc)
 
     (x, aux), (npc, ncc) = jax.lax.scan(

@@ -38,6 +38,32 @@ and blocks can be stored quantized at rest.  ``cache="dense"`` remains
 the reference path; on an equal-length, no-prefix-hit batch the two
 produce token-identical greedy outputs (``tests/test_paging.py``).
 
+``spec="rrs_draft"`` enables SELF-SPECULATIVE decoding
+(``repro.serve.spec``): the engine's quantized apply path (its
+configured ``qcfg`` — int4 RRS in the headline setup) drafts ``spec_k``
+tokens per live slot against a private dense draft cache, and the
+TARGET path — unquantized activations over the SAME ``PreparedLinear``
+artifact (``qcfg`` with ``a_bits=16``; zero extra weight memory) —
+scores the ``(B, k+1)`` chunk in one multi-token verify forward.
+Accepted lengths are per-row position advances (the slot-scheduler
+contract), rejection rolls both caches back (dense ``pos`` rewind /
+``PagedKVManager.rollback``), and the committed stream is LOSSLESS
+w.r.t. the target: bit-identical under greedy, distributionally exact
+under temperature.  In spec mode every non-draft graph (prefill,
+verify) runs the target config, so outputs match a non-speculative
+engine built with that target config token-for-token.  Numerics caveat
+(same class as the kernel pipeline's 1-ulp eager-division note): the
+verify chunk is structurally per-token-exact, but the (B, k+1) and
+(B, 1) graphs may order reductions differently by ONE ulp — ~1e-6
+relative in f32 (far below any greedy argmax gap; identity holds and
+is pinned there), ~1e-2 in bf16 (can flip a NEAR-TIED argmax, so bf16
+greedy lossless-ness is 1-ulp-distributional, not bitwise).
+
+All jit'd graphs that thread the cache pytree (step, paged table
+upload, row reset, spec rollback) DONATE it, so cache updates reuse the
+same device buffers instead of allocating fresh ones every step —
+speculative decoding doubles cache traffic, so donation pays twice.
+
 ``serve_step`` (= one decode for the full batch) is the unit the dry-run
 lowers at the assignment's decode shapes.
 """
@@ -84,7 +110,8 @@ class ServingEngine:
                  prepare: bool = True, calib=None,
                  scheduler: str = "continuous", cache: str = "dense",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 spec: Optional[str] = None, spec_k: int = 4):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
@@ -97,29 +124,55 @@ class ServingEngine:
         ring).  ``num_blocks`` sizes the paged pool (default: full
         provisioning, max_batch * ceil(max_len / block_size) — shrink it
         to over-commit); ``prefix_cache=False`` disables radix reuse
-        (blocks still pooled)."""
+        (blocks still pooled).  ``spec``: None or "rrs_draft"
+        (self-speculative decoding — the quantized ``qcfg`` path drafts
+        ``spec_k`` tokens, the unquantized-activation target path over
+        the same artifact verifies; see the module docstring)."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if cache not in ("dense", "paged"):
             raise ValueError(f"unknown cache {cache!r}")
+        if spec not in (None, "rrs_draft"):
+            raise ValueError(f"unknown spec {spec!r}")
         self.model = model
         self.cfg = model.cfg
         self.qcfg = qcfg
+        if spec is not None:
+            if self.cfg.family not in ("dense", "moe", "vlm") \
+                    or self.cfg.mla is not None:
+                raise ValueError("spec decoding needs a transformer "
+                                 "family without MLA")
+            if 0 < self.cfg.sliding_window < max_len:
+                raise ValueError("spec decoding does not support the "
+                                 "sliding-window ring")
+        # target config for spec mode: unquantized activations (and the
+        # matching KV read width) over the same prepared artifact — for
+        # an fp qcfg this IS qcfg, so spec engines match plain ones
+        self.target_qcfg = (dataclasses.replace(qcfg, a_bits=16)
+                            if spec is not None and qcfg.quantize_acts
+                            else qcfg)
         already = methods.tree_has_prepared(params)
-        self.params = (prepare_params(params, qcfg, calib=calib)
+        self.params = (prepare_params(params, qcfg, calib=calib,
+                                      keep_dense=spec is not None)
                        if prepare and not already else params)
+        if spec is not None:
+            _require_dense_copy(self.params)
         self.max_batch = max_batch
         self.max_len = max_len
         self.scheduler = scheduler
         self.cache_kind = cache
+        self.spec_kind = spec
+        self.spec_k = spec_k
         self.queue: List[Request] = []
         self._rid = 0
         self._prepared = prepare or already
         prepared = self._prepared
+        step_qcfg = self.target_qcfg if spec is not None else qcfg
         self._step_fn = jax.jit(
-            lambda p, t, c, off: model.step(p, t, c, qcfg,
+            lambda p, t, c, off: model.step(p, t, c, step_qcfg,
                                             prepared=prepared,
-                                            offsets=off))
+                                            offsets=off),
+            donate_argnums=(2,))
         self._sample_fn = jax.jit(_sample_batch)
         # persistent slot state: one cache pytree, per-row positions
         if cache == "paged":
@@ -141,17 +194,28 @@ class ServingEngine:
             self._cache_init, self._cache_axes = model.init_cache(
                 max_batch, max_len, kv_storage=storage,
                 paged=(nb, block_size), kv_group=qcfg.kv_group_size)
-            self._paged_set_fn = jax.jit(_paged_set_rows)
+            self._paged_set_fn = jax.jit(_paged_set_rows,
+                                         donate_argnums=(0,))
         else:
             self.pager = None
             self._cache_init, self._cache_axes = model.init_cache(
                 max_batch, max_len)
-        self.cache = self._cache_init
+        # the live cache is a COPY: every cache-threading graph donates
+        # its cache argument (in-place device updates), and the pristine
+        # _cache_init leaves must survive for per-row resets
+        self.cache = jax.tree.map(jnp.copy, self._cache_init)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self._reset_fn = jax.jit(self._reset_rows)
+        self._reset_fn = jax.jit(self._reset_rows, donate_argnums=(0,))
         self.stats = {"prefill_steps": 0, "decode_steps": 0,
                       "slot_steps": 0, "prefill_tokens": 0,
-                      "prefix_hit_tokens": 0}
+                      "prefix_hit_tokens": 0, "verify_steps": 0,
+                      "spec_rounds": 0, "spec_row_rounds": 0,
+                      "spec_proposed": 0, "spec_accepted": 0,
+                      "spec_committed": 0}
+        self.spec = None
+        if spec is not None:
+            from repro.serve.spec import SpecController
+            self.spec = SpecController(self, spec_k)
         # kernel-path artifacts carry no dense w_dq copy — the per-field
         # split makes that saving observable.  NOT in ``stats`` (that
         # dict is a resettable step counter, see serve_throughput.py).
@@ -167,16 +231,20 @@ class ServingEngine:
 
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
-        if max_new_tokens >= self.max_len:
+        # spec mode verifies k+1 positions past the committed stream, so
+        # every row keeps spec_k slots of speculative-overshoot headroom
+        headroom = self.spec_k if self.spec is not None else 0
+        if max_new_tokens + headroom >= self.max_len:
             raise ValueError(
-                f"max_new_tokens={max_new_tokens} must leave cache room "
-                f"for at least one prompt token (max_len={self.max_len})")
+                f"max_new_tokens={max_new_tokens} (+{headroom} spec "
+                f"headroom) must leave cache room for at least one "
+                f"prompt token (max_len={self.max_len})")
         ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
         ids = [tok.BOS] + [int(i) % self.cfg.vocab_size for i in ids]
         # the row must hold prompt + all new tokens: keep the prompt TAIL,
         # and RECORD the loss — dropped leading tokens change the model's
         # context, so the caller must be able to see it happened
-        keep = self.max_len - max_new_tokens
+        keep = self.max_len - max_new_tokens - headroom
         truncated = len(ids) > keep
         ids = ids[-keep:]
         self._rid += 1
@@ -187,16 +255,8 @@ class ServingEngine:
     # -- slot primitives --------------------------------------------------
 
     def _reset_rows(self, cache, mask):
-        """Return ``cache`` with rows where ``mask`` (B,) is True put back
-        to the init value (zeros / empty ring markers), any family: the
-        batch dim of each leaf comes from its declared axes spec."""
-        def one(leaf, init, spec):
-            shape = [1] * leaf.ndim
-            bdim = batch_dim_of_spec(spec)
-            shape[bdim] = leaf.shape[bdim]
-            return jnp.where(mask.reshape(shape), init, leaf)
-        return jax.tree_util.tree_map(one, cache, self._cache_init,
-                                      self._cache_axes)
+        return reset_cache_rows(cache, self._cache_init,
+                                self._cache_axes, mask)
 
     def _admit(self, admit: Dict[int, Request]):
         """Prefill newly admitted requests: reset their rows, left-pad
@@ -227,6 +287,10 @@ class ServingEngine:
         for i, r in admit.items():
             self.slots[i] = r
         self._sample_into(logits, list(admit))
+        if self.spec is not None:
+            # draft prefill AFTER sampling: the first target sample seeds
+            # each admitted row's catch-up queue
+            self.spec.admit_rows({i: r.prompt for i, r in admit.items()})
 
     def _admit_paged(self, admit: Dict[int, Request]):
         """Paged admission: radix-match each prompt, reuse cached prefix
@@ -276,6 +340,10 @@ class ServingEngine:
             self.stats["prefix_hit_tokens"] += reuse
             self.stats["prefill_tokens"] += len(r.prompt) - reuse
         self._sample_into(logits, list(planned))
+        if self.spec is not None:
+            # the draft cache is dense and cold: it prefills the FULL
+            # prompt even when the target reused radix prefix blocks
+            self.spec.admit_rows({i: admit[i].prompt for i in planned})
 
     def _upload_tables(self, pos_mask, pos_vals, table_mask):
         """Mirror the host-authoritative block tables into the device
@@ -296,6 +364,8 @@ class ServingEngine:
         self.slots[i] = None
         if self.pager is not None:
             self.pager.release(i)
+        if self.spec is not None:
+            self.spec.release(i)
 
     def _decode_step(self, live: List[int]):
         """One decode for the full batch; rows not in ``live`` are frozen
@@ -363,8 +433,18 @@ class ServingEngine:
             live = [i for i, r in enumerate(self.slots)
                     if r is not None and not r.done]
             if live:
-                self._decode_step(live)
+                self._generate_step(live)
         return finished
+
+    def _generate_step(self, live: List[int]):
+        """One generation step for the live rows: a speculative round
+        (draft k + verify in one target forward, committing 1..k+1
+        tokens per row) when spec decoding is on, else one plain
+        decode."""
+        if self.spec is not None:
+            self.spec.round(live)
+        else:
+            self._decode_step(live)
 
     def _wave_group(self) -> List[Request]:
         """Legacy admission policy: largest same-prompt-length group."""
@@ -392,7 +472,7 @@ class ServingEngine:
                 live = [i for i in landed if not self.slots[i].done]
                 if not live:
                     break
-                self._decode_step(live)
+                self._generate_step(live)
             for i in landed:
                 finished.append(self.slots[i])
                 self._free_slot(i)
@@ -404,6 +484,15 @@ class ServingEngine:
         return self._run_continuous()
 
     # -- reporting --------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero the per-run step/token counters AND restart peak
+        tracking (paged pool high-water mark) from current occupancy —
+        call between back-to-back benchmark runs on one warm engine so
+        the second run does not inherit the first run's peaks."""
+        self.stats = dict.fromkeys(self.stats, 0)
+        if self.pager is not None:
+            self.pager.pool.reset_peak()
 
     def kv_cache_stats(self) -> Dict[str, object]:
         """KV-cache memory accounting: ``kv_bytes_capacity`` is what the
@@ -433,6 +522,38 @@ class ServingEngine:
         out["kv_bytes_peak"] = pool.peak_allocated * per_block
         out.update(self.pager.stats())
         return out
+
+
+def reset_cache_rows(cache, init, axes, mask):
+    """Return ``cache`` with rows where ``mask`` (B,) is True put back
+    to the init value (zeros / empty ring markers), any family: the
+    batch dim of each leaf comes from its declared axes spec.  Shared by
+    the engine's slot admission and the spec draft cache."""
+    def one(leaf, ini, spec):
+        shape = [1] * leaf.ndim
+        bdim = batch_dim_of_spec(spec)
+        shape[bdim] = leaf.shape[bdim]
+        return jnp.where(mask.reshape(shape), ini, leaf)
+    return jax.tree_util.tree_map(one, cache, init, axes)
+
+
+def _require_dense_copy(params) -> None:
+    """Spec mode's target path runs unquantized activations via each
+    artifact's dense ``w_dq`` — packed kernel-path artifacts drop it by
+    default, so an artifact prepared without ``keep_dense=True`` cannot
+    verify.  Fail loudly at construction, not mid-serve."""
+    bad = []
+
+    def one(leaf):
+        if methods.is_prepared(leaf) and leaf.w_dq is None:
+            bad.append(leaf.method)
+
+    jax.tree.map(one, params, is_leaf=methods.is_prepared)
+    if bad:
+        raise ValueError(
+            "spec decoding needs the dense w_dq copy on every prepared "
+            "leaf (the fp target path reads it); re-prepare with "
+            "prepare_params(..., keep_dense=True)")
 
 
 def _paged_set_rows(cache, pos_mask, pos_vals, table_mask, tables):

@@ -54,6 +54,12 @@ class BlockPool:
                 "free_blocks": self.free_blocks,
                 "peak_allocated_blocks": self.peak_allocated}
 
+    def reset_peak(self) -> None:
+        """Restart peak tracking from the CURRENT occupancy — called by
+        ``ServingEngine.reset_stats`` so back-to-back benchmark runs on
+        one warm engine report per-run peaks, not the lifetime max."""
+        self.peak_allocated = self.allocated_blocks
+
     # -- lifecycle --------------------------------------------------------
 
     def alloc(self, n: int) -> Optional[List[int]]:

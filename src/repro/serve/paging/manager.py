@@ -130,28 +130,70 @@ class PagedKVManager:
             self.radix.insert(prompt, list(self.tables[slot, :n_full]))
         self.row_pos[slot] = len(prompt)
 
-    def ensure_decode_room(self, slot: int) -> bool:
-        """Allocate this row's next decode block if its next write
-        position crosses into an unallocated block; returns whether a
-        block was allocated (the engine re-uploads grown rows).  Raises
-        when the pool (after eviction and reclaim) is exhausted —
-        over-committed admission policy is the engine's to tune, this is
-        the backstop."""
-        lb = int(self.row_pos[slot]) // self.block_size
-        if lb >= self.max_blocks_per_row:
+    def ensure_room(self, slot: int, n_tokens: int = 1) -> bool:
+        """Allocate whatever blocks the next ``n_tokens`` writes need
+        (positions ``row_pos .. row_pos + n_tokens - 1``); returns
+        whether any block was allocated (the engine re-uploads grown
+        rows).  ``n_tokens > 1`` is the speculative verify chunk —
+        decode is the ``n_tokens=1`` case.  Raises when the pool (after
+        eviction and reclaim) is exhausted — over-committed admission
+        policy is the engine's to tune, this is the backstop."""
+        first = int(self.row_pos[slot]) // self.block_size
+        last = (int(self.row_pos[slot]) + n_tokens - 1) // self.block_size
+        if last >= self.max_blocks_per_row:
             raise RuntimeError(f"slot {slot} overflowed max_len "
                                f"{self.max_len}")
-        if self.tables[slot, lb] >= 0:
+        grown = False
+        for lb in range(first, last + 1):
+            if self.tables[slot, lb] >= 0:
+                continue
+            ids = self._alloc(1)
+            if ids is None:
+                raise RuntimeError(
+                    "KV block pool exhausted mid-decode "
+                    f"({self.pool.num_blocks} blocks x {self.block_size} "
+                    "tokens); raise num_blocks or lower concurrency")
+            self.tables[slot, lb] = ids[0]
+            self._owned[slot].append(ids[0])
+            grown = True
+        return grown
+
+    def ensure_decode_room(self, slot: int) -> bool:
+        """One-token (plain decode) form of :meth:`ensure_room`."""
+        return self.ensure_room(slot, 1)
+
+    def rollback(self, slot: int, n: int) -> bool:
+        """Rewind this row's next-write position by ``n`` tokens
+        (speculative rejection) and free the now-EMPTY trailing blocks;
+        returns whether any block was freed (the engine re-uploads the
+        trimmed table).  Cheap by construction: every block past the
+        prompt's full blocks is a decode block this slot exclusively
+        owns (partial blocks are never radix-indexed, prompt chains are
+        never written past commit), so rejection can never perturb a
+        shared radix chain — the assert below pins that invariant.
+        Stale K/V beyond the new position stays physically present in
+        the kept partial block but is masked out of attention
+        (``kpos > qpos``) and overwritten by the next accepted write."""
+        if n < 0 or n > int(self.row_pos[slot]):
+            raise ValueError(f"rollback({slot}, {n}) with row_pos "
+                             f"{int(self.row_pos[slot])}")
+        if n == 0:
             return False
-        ids = self._alloc(1)
-        if ids is None:
-            raise RuntimeError(
-                "KV block pool exhausted mid-decode "
-                f"({self.pool.num_blocks} blocks x {self.block_size} "
-                "tokens); raise num_blocks or lower concurrency")
-        self.tables[slot, lb] = ids[0]
-        self._owned[slot].append(ids[0])
-        return True
+        new_pos = int(self.row_pos[slot]) - n
+        keep = -(-new_pos // self.block_size)   # blocks still holding tokens
+        freed = False
+        for lb in range(keep, self.max_blocks_per_row):
+            bid = int(self.tables[slot, lb])
+            if bid < 0:
+                continue
+            assert bid in self._owned[slot], \
+                f"rollback would free non-owned block {bid}"
+            self.pool.release([bid])
+            self._owned[slot].remove(bid)
+            self.tables[slot, lb] = -1
+            freed = True
+        self.row_pos[slot] = new_pos
+        return freed
 
     def advance(self, slots: Sequence[int]) -> None:
         """Mirror the device-side per-row position advance of one decode

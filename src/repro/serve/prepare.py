@@ -78,7 +78,8 @@ def _calib_for(calib, name: str, k: int):
     return c.reshape(-1, k)
 
 
-def _prepare_stacked(method, w, qcfg: QuantConfig, calib_x):
+def _prepare_stacked(method, w, qcfg: QuantConfig, calib_x,
+                     keep_dense: bool = False):
     """prepare_weight over the leading (layer/expert) axes of a stacked
     leaf, results restacked into ONE PreparedLinear (arrays gain the
     leading axes back; statics are shape-derived and identical).
@@ -91,25 +92,32 @@ def _prepare_stacked(method, w, qcfg: QuantConfig, calib_x):
     avoids L*E sequential dispatches.
     """
     if w.ndim == 2:
-        return method.prepare_weight(w, qcfg, calib_x=calib_x)
+        return method.prepare_weight(w, qcfg, calib_x=calib_x,
+                                     keep_dense=keep_dense)
     vectorizable = (
         calib_x is None
         and type(method)._merge_scales is methods.QuantMethod._merge_scales
         and not method._pack_eligible(qcfg, w.shape[-1]))
     if vectorizable:
-        return method.prepare_weight(w, qcfg)
-    parts = [_prepare_stacked(method, w[i], qcfg, calib_x)
+        return method.prepare_weight(w, qcfg, keep_dense=keep_dense)
+    parts = [_prepare_stacked(method, w[i], qcfg, calib_x,
+                              keep_dense=keep_dense)
              for i in range(w.shape[0])]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
 
 
-def prepare_params(params, qcfg: QuantConfig, calib=None):
+def prepare_params(params, qcfg: QuantConfig, calib=None,
+                   keep_dense: bool = False):
     """Returns params with projection weights replaced by PreparedLinear
     artifacts (rotated + scale-merged + quantized offline).
 
     ``calib``: optional calibration activations enabling GPTQ and static
     reorder — either one (N, K) array (applied to every leaf whose input
     dim matches) or a dict ``{leaf_name: (N, K) array}``.
+    ``keep_dense``: retain the dense ``w_dq`` copy even on packed
+    kernel-path artifacts — required when the SAME artifact must also
+    serve an unquantized-activation pass (speculative decoding's target
+    path, ``ServingEngine(spec=...)``).
     """
     method = methods.get_method(qcfg.method)
     if method.is_identity:
@@ -120,7 +128,8 @@ def prepare_params(params, qcfg: QuantConfig, calib=None):
         if name not in QUANT_WEIGHTS or leaf.ndim < 2:
             return leaf
         calib_x = _calib_for(calib, name, leaf.shape[-1])
-        return _prepare_stacked(method, leaf, qcfg, calib_x)
+        return _prepare_stacked(method, leaf, qcfg, calib_x,
+                                keep_dense=keep_dense)
 
     return jax.tree_util.tree_map_with_path(one, params)
 

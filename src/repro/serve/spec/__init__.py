@@ -1,0 +1,24 @@
+"""Self-speculative decoding: the INT4 RRS path drafts for the
+full-precision target from ONE prepared artifact, with lossless
+verification and paged-KV rollback.
+
+The subsystem has three parts (see each module's docstring):
+
+* :mod:`~repro.serve.spec.draft` — ``DraftRunner``, the quantized draft
+  over the engine's own ``PreparedLinear`` tree + a private dense KV
+  cache;
+* :mod:`~repro.serve.spec.verify` — ``verify_chunk``, greedy-match /
+  rejection-sampling acceptance of a ``(B, k+1)`` target scoring pass;
+* :mod:`~repro.serve.spec.controller` — ``SpecController``, one
+  speculative round per scheduler step, committing per-row accepted
+  lengths as per-row position advances and rolling back overshoot in
+  both caches (dense ``pos`` rewind / ``PagedKVManager.rollback``).
+
+Enable with ``ServingEngine(spec="rrs_draft", spec_k=...)``.
+"""
+from repro.serve.spec.controller import SpecController
+from repro.serve.spec.draft import DraftRunner, set_pos_rows
+from repro.serve.spec.verify import verify_chunk
+
+__all__ = ["SpecController", "DraftRunner", "set_pos_rows",
+           "verify_chunk"]

@@ -1,0 +1,182 @@
+"""Speculative-decoding controller: glues the draft runner and the
+verify math into the serving engine's slot scheduler.
+
+One ``round(live)`` replaces one plain decode step for the live slots:
+
+1. **draft** — the runner proposes ``k`` tokens per row (catch-up chunk
+   + ``k-1`` int4 decode steps on its private cache);
+2. **verify** — the engine's TARGET graph scores the ``(B, k+1)`` chunk
+   ``[last_committed, d_1..d_k]`` in ONE forward (``attend_cache`` +
+   ``last_only=False``; frozen rows ride along fully padded), writing
+   the chunk's K/V into the engine cache as it goes;
+3. **commit** — :func:`~repro.serve.spec.verify.verify_chunk` yields
+   per-row accepted lengths; each row appends ``accept+1`` tokens
+   (accepted drafts, then the correction/bonus token), truncated by EOS
+   and its ``max_new_tokens`` budget exactly as sequential sampling
+   would;
+4. **rollback** — per-row accepted lengths are just per-row position
+   rewinds: the dense target cache takes ``pos -= overshoot`` (stale
+   entries are masked then overwritten), the paged cache additionally
+   frees now-empty trailing blocks (``PagedKVManager.rollback`` —
+   exclusively-owned by construction, shared radix chains untouched),
+   and the draft cache rewinds to the longest committed prefix it has
+   consumed.
+
+Losslessness: committed tokens are distributed EXACTLY as the target's
+own sampling — bit-identical under greedy (the verify forward is
+bit-equal to sequential decode), distributionally under temperature
+(rejection sampling).  The draft only ever changes HOW MANY tokens one
+target forward commits, never which.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import tokenizer as tok
+from repro.serve.spec.draft import DraftRunner, set_pos_rows
+from repro.serve.spec.verify import greedy_verify, verify_chunk
+
+
+class SpecController:
+    def __init__(self, engine, k: int):
+        if k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {k}")
+        self.eng = engine
+        self.k = k
+        bsz = engine.max_batch
+        self.draft = DraftRunner(engine.model, engine.params, engine.qcfg,
+                                 engine._prepared, bsz, engine.max_len,
+                                 engine._sample_fn)
+        self._verify_fn = jax.jit(
+            lambda p, t, c, off: engine.model.step(
+                p, t, c, engine.target_qcfg, prepared=engine._prepared,
+                offsets=off, last_only=False, attend_cache=True),
+            donate_argnums=(2,))
+        self._accept_fn = jax.jit(verify_chunk)
+        self._greedy_fn = jax.jit(greedy_verify)
+        self._setpos_fn = jax.jit(set_pos_rows, donate_argnums=(0,))
+        # committed tokens each slot's draft cache has not consumed yet
+        self.pending: List[List[int]] = [[] for _ in range(bsz)]
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def admit_rows(self, prompts: Dict[int, Sequence[int]]) -> None:
+        """Called by the engine AFTER the target prefill sampled each
+        admitted row's first token: prefill the draft rows and seed the
+        catch-up queue with that first sample."""
+        if not prompts:
+            return
+        self.draft.admit(prompts)
+        for i in prompts:
+            self.pending[i] = [self.eng.slots[i].out_tokens[-1]]
+
+    def release(self, i: int) -> None:
+        self.pending[i] = []
+
+    # -- one speculative round --------------------------------------------
+
+    def round(self, live: List[int]) -> None:
+        eng, k = self.eng, self.k
+        bsz = eng.max_batch
+        reqs = eng.slots
+
+        # 1. draft k proposals per live row
+        temps = np.zeros((bsz,), np.float32)
+        dseeds = np.zeros((bsz,), np.uint32)
+        vseeds = np.zeros((bsz,), np.uint32)
+        for i in live:
+            r = reqs[i]
+            temps[i] = r.temperature
+            dseeds[i] = (r.rid * 104729 + len(r.out_tokens)) % (1 << 32)
+            vseeds[i] = (r.rid * 15485863 + len(r.out_tokens)) % (1 << 32)
+        toks, draft_logits = self.draft.propose(live, self.pending, k,
+                                                temps, dseeds)
+
+        # 2. target scores [last_committed, d_1..d_k] in one forward
+        chunk = np.zeros((bsz, k + 1), np.int32)
+        off = np.full((bsz,), k + 1, np.int32)
+        for i in live:
+            chunk[i, 0] = reqs[i].out_tokens[-1]
+            chunk[i, 1:] = toks[i]
+            off[i] = 0
+        if eng.pager is not None:
+            grown = np.zeros((bsz,), bool)
+            for i in live:
+                grown[i] = eng.pager.ensure_room(i, k + 1)
+            if grown.any():
+                eng._upload_tables(np.zeros((bsz,), bool),
+                                   np.zeros((bsz,), np.int32), grown)
+        logits, eng.cache = self._verify_fn(
+            eng.params, jnp.asarray(chunk), eng.cache, jnp.asarray(off))
+        if not temps.any():          # all-greedy round: skip the
+            out_d, acc_d = self._greedy_fn(logits, jnp.asarray(toks))
+        else:                        # rejection-sampling machinery
+            out_d, acc_d = self._accept_fn(logits, jnp.asarray(toks),
+                                           draft_logits,
+                                           jnp.asarray(temps),
+                                           jnp.asarray(vseeds))
+        out_np, acc_np = np.asarray(out_d), np.asarray(acc_d)
+
+        # 3. commit per row (EOS / budget truncation mirrors _sample_into)
+        mask = np.zeros((bsz,), bool)
+        tgt_pos = np.zeros((bsz,), np.int32)
+        dmask = np.zeros((bsz,), bool)
+        dpos = np.zeros((bsz,), np.int32)
+        rolled = np.zeros((bsz,), bool)
+        for i in live:
+            r = reqs[i]
+            base = len(r.prompt) + len(r.out_tokens) - 1  # cache pos pre-verify
+            appended = 0
+            for j in range(int(acc_np[i]) + 1):
+                t = int(out_np[i, j])
+                r.out_tokens.append(t)
+                appended += 1
+                if t == tok.EOS or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    break
+            # 4a. target-cache rewind plan: keep exactly the committed run
+            mask[i] = True
+            tgt_pos[i] = base + appended
+            if eng.pager is not None:
+                self._rollback_paged(i, base, appended, rolled)
+            # 4b. draft rewind: longest committed prefix the draft has
+            # consumed — the draft holds committed[:l0] + proposals[:k-1]
+            v = 0
+            while (v < min(appended, k - 1)
+                   and r.out_tokens[-appended + v] == int(toks[i, v])):
+                v += 1
+            l0 = base + 1                # committed length before this round
+            dmask[i] = True
+            dpos[i] = l0 + v
+            self.pending[i] = r.out_tokens[len(r.out_tokens) - appended + v:]
+            assert r.done or self.pending[i], "live row with empty catch-up"
+            eng.stats["spec_accepted"] += min(appended, int(acc_np[i]))
+            eng.stats["spec_committed"] += appended
+        eng.stats["spec_rounds"] += 1
+        eng.stats["spec_row_rounds"] += len(live)
+        eng.stats["verify_steps"] += 1
+        eng.stats["spec_proposed"] += k * len(live)
+
+        # 4c. apply the rewinds on device
+        if eng.pager is None:
+            eng.cache = self._setpos_fn(eng.cache, jnp.asarray(mask),
+                                        jnp.asarray(tgt_pos))
+        else:
+            eng._upload_tables(mask, tgt_pos, rolled)
+        self.draft.rollback(dmask, dpos)
+
+    def _rollback_paged(self, i: int, base: int, appended: int,
+                        rolled: np.ndarray) -> None:
+        """Mirror the verify write (k+1 positions) into the manager, then
+        trim the speculative overshoot: frees now-empty trailing blocks
+        and rewinds ``row_pos`` to the committed position."""
+        mgr = self.eng.pager
+        mgr.row_pos[i] += self.k + 1
+        rolled[i] = mgr.rollback(i, self.k + 1 - appended)
+
+
+__all__ = ["SpecController"]

@@ -1,0 +1,151 @@
+"""Draft runner: the INT4 quantized apply path proposes tokens from the
+SAME ``PreparedLinear`` artifact the target serves from.
+
+The runner owns a private dense KV cache (per-slot rows, never paged —
+it is scratch state, rewound every round) and three jit'd graphs over
+the shared prepared params:
+
+* ``admit`` — a left-padded masked prefill of each admitted row's FULL
+  prompt (the target may have skipped prefix blocks via the radix cache;
+  the draft cache is cold and always prefills everything — at draft
+  precision, so it is the cheap pass);
+* ``propose`` — one catch-up chunk (the 1–2 committed tokens the draft
+  has not consumed yet, left-padded per row with the ``offsets``
+  contract and scored against its cache via ``attend_cache``) followed
+  by ``k-1`` single-token decode steps, sampling a proposal from the
+  draft distribution after each forward;
+* ``rollback`` — per-row ``pos`` rewind.  Accepted draft tokens are
+  already in the draft cache with the K/V the draft itself computed for
+  them, so after a rejection the runner only rewinds ``pos`` to the
+  longest committed prefix it has consumed — stale entries beyond it
+  are masked (``kpos > qpos``) and overwritten by later writes, exactly
+  the dense-cache rollback story of the target.
+
+Zero extra weight memory: the runner never copies weights — it runs the
+engine's quantized method ``apply`` (``exec_path="kernel"`` packed int4
+or the fake-quant path) over the same artifact pytree.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.models.model_factory import Model
+from repro.serve.engine import reset_cache_rows
+
+
+def set_pos_rows(cache, mask, vals):
+    """Functional per-row ``pos`` update: rows where ``mask`` (B,) is
+    True take ``vals`` (B,) on every ``pos`` leaf (stacked (n, B));
+    all other leaves pass through — the cache-rollback primitive for
+    dense caches (stale K/V beyond ``pos`` is masked, then
+    overwritten)."""
+    def one(path, leaf):
+        if str(getattr(path[-1], "key", "")) == "pos":
+            m = mask.reshape((1,) * (leaf.ndim - 1) + (-1,))
+            return jnp.where(m, vals.astype(leaf.dtype), leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+class DraftRunner:
+    def __init__(self, model: Model, params, draft_qcfg: QuantConfig,
+                 prepared: bool, max_batch: int, max_len: int,
+                 sample_fn):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self._cache_init, self._cache_axes = model.init_cache(
+            max_batch, max_len)
+        self.cache = jax.tree.map(jnp.copy, self._cache_init)
+        self._step_fn = jax.jit(
+            lambda p, t, c, off: model.step(p, t, c, draft_qcfg,
+                                            prepared=prepared,
+                                            offsets=off,
+                                            attend_cache=True),
+            donate_argnums=(2,))
+        # admission prefill keeps the fresh-block fast path (pos = 0, no
+        # whole-cache gather/fake-quant) — attend_cache is only for the
+        # pos > 0 catch-up chunks in propose()
+        self._prefill_fn = jax.jit(
+            lambda p, t, c, off: model.step(p, t, c, draft_qcfg,
+                                            prepared=prepared,
+                                            offsets=off),
+            donate_argnums=(2,))
+        self._sample_fn = sample_fn          # engine's batch sampler
+        self._reset_fn = jax.jit(
+            lambda c, m: reset_cache_rows(c, self._cache_init,
+                                          self._cache_axes, m),
+            donate_argnums=(0,))
+        self._setpos_fn = jax.jit(set_pos_rows, donate_argnums=(0,))
+
+    # -- lifecycle --------------------------------------------------------
+
+    def admit(self, prompts: Dict[int, Sequence[int]]) -> None:
+        """Prefill the FULL prompt of each admitted slot into its draft
+        row (one batched left-padded step; other rows ride frozen)."""
+        bsz = self.max_batch
+        mask = np.zeros((bsz,), bool)
+        for i in prompts:
+            mask[i] = True
+        self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+        s_pad = max(len(p) for p in prompts.values())
+        tokens = np.zeros((bsz, s_pad), np.int32)
+        off = np.full((bsz,), s_pad, np.int32)
+        for i, p in prompts.items():
+            tokens[i, s_pad - len(p):] = p
+            off[i] = s_pad - len(p)
+        _, self.cache = self._prefill_fn(self.params, jnp.asarray(tokens),
+                                         self.cache, jnp.asarray(off))
+
+    def propose(self, live: List[int], pending: List[List[int]], k: int,
+                temps: np.ndarray, seeds: np.ndarray):
+        """Draft ``k`` proposals per live row.  ``pending[i]`` holds the
+        committed tokens row i's draft cache has not consumed yet (1–2
+        after a verify round; the whole first sample after admission) —
+        they form the catch-up chunk whose last logit seeds proposal 1.
+        Returns ``(toks (B, k) np.int32, logits (B, k, V) device)``."""
+        bsz = self.max_batch
+        c_max = max(len(pending[i]) for i in live)
+        tokens = np.zeros((bsz, c_max), np.int32)
+        off = np.full((bsz,), c_max, np.int32)
+        for i in live:
+            pend = pending[i]
+            tokens[i, c_max - len(pend):] = pend
+            off[i] = c_max - len(pend)
+        logits, self.cache = self._step_fn(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(off))
+        temps_d = jnp.asarray(temps)
+        out_cols: List[jnp.ndarray] = []
+        per_step: List[jnp.ndarray] = []
+        off1 = np.ones((bsz,), np.int32)
+        off1[live] = 0
+        off1 = jnp.asarray(off1)
+        for j in range(k):
+            last = logits[:, -1]
+            per_step.append(last)
+            sj = jnp.asarray((seeds.astype(np.uint64) + 131 * j)
+                             % (1 << 32)).astype(jnp.uint32)
+            # sampled tokens stay ON DEVICE through the k-step loop —
+            # the next forward consumes them directly, and the single
+            # host sync happens once on the stacked proposals
+            tj = self._sample_fn(last, temps_d, sj)          # (B,) int32
+            out_cols.append(tj)
+            if j + 1 < k:
+                logits, self.cache = self._step_fn(
+                    self.params, tj[:, None], self.cache, off1)
+        out = np.asarray(jnp.stack(out_cols, axis=1), np.int32)
+        return out, jnp.stack(per_step, axis=1)
+
+    def rollback(self, mask: np.ndarray, vals: np.ndarray) -> None:
+        """Rewind rows in ``mask`` to position ``vals`` (the longest
+        committed prefix the draft has consumed)."""
+        self.cache = self._setpos_fn(self.cache, jnp.asarray(mask),
+                                     jnp.asarray(vals))
+
+
+__all__ = ["DraftRunner", "set_pos_rows"]

@@ -1,0 +1,107 @@
+"""Lossless acceptance of drafted tokens against the target's chunk
+logits — the math half of speculative decoding.
+
+One jit'd function, :func:`verify_chunk`, handles both sampling regimes
+per row:
+
+* **greedy rows** (temperature 0): draft token j is accepted iff it
+  equals the target argmax at chunk position j; the committed tokens are
+  the target argmaxes themselves, so the emitted stream is EXACTLY what
+  sequential target-only greedy decode would produce (the verify forward
+  is bit-equal to sequential decode — see ``layers.gqa_apply``'s
+  ``attend_cache`` contract), including the correction token at the
+  first mismatch and the bonus token when every draft survives.
+* **temperature rows**: standard lossless rejection sampling
+  (Leviathan et al. / Chen et al.): draft token d_j ~ q_j is accepted
+  with probability min(1, p_j(d_j)/q_j(d_j)); the first rejection
+  resamples from the residual distribution norm(max(p_j - q_j, 0)), and
+  a fully-accepted chunk samples the bonus token from p_k.  The
+  marginal distribution of every committed token is exactly the
+  target's — losslessness holds for ANY draft distribution.
+
+Both regimes emit ``(out_tokens (B, k+1), accept_len (B,))``: each row
+commits ``out_tokens[:accept_len + 1]`` (accepted drafts, then the
+correction / resample / bonus token).  The function is row-mixed — one
+call serves a batch with both regimes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _accept_len(acc: jnp.ndarray) -> jnp.ndarray:
+    """(B, k) per-position accepts -> (B,) accepted-prefix length."""
+    cum = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+    return jnp.sum(cum, axis=1).astype(jnp.int32)
+
+
+def greedy_verify(target_logits: jnp.ndarray, draft_toks: jnp.ndarray):
+    """Greedy-only fast path of :func:`verify_chunk` — no softmaxes, no
+    RNG, just argmaxes and a prefix match.  The controller dispatches
+    here when every live row has temperature 0 (the default and the
+    pinned mode), skipping the rejection-sampling machinery whose
+    (B, k+1, V) intermediates dominate at real vocab sizes."""
+    tl = target_logits.astype(jnp.float32)
+    k = tl.shape[1] - 1
+    greedy_tok = jnp.argmax(tl, axis=-1).astype(jnp.int32)      # (B, k+1)
+    return greedy_tok, _accept_len(draft_toks.astype(jnp.int32)
+                                   == greedy_tok[:, :k])
+
+
+def verify_chunk(target_logits: jnp.ndarray, draft_toks: jnp.ndarray,
+                 draft_logits: jnp.ndarray, temps: jnp.ndarray,
+                 seeds: jnp.ndarray):
+    """target_logits: (B, k+1, V) — chunk position j scored the context
+    ``committed + drafts[:j]``; draft_toks: (B, k) proposals; draft_logits:
+    (B, k, V) the draft's logits at each proposal; temps: (B,) per-row
+    temperature (0 = greedy); seeds: (B,) uint32 per-row RNG streams for
+    the temperature rows.  Returns ``(out (B, k+1) int32, accept_len
+    (B,) int32)``; commit ``out[i, :accept_len[i] + 1]`` per row.
+    """
+    tl = target_logits.astype(jnp.float32)
+    b, k1, v = tl.shape
+    k = k1 - 1
+    draft_toks = draft_toks.astype(jnp.int32)
+
+    # -- greedy regime: exact match against the target argmaxes ----------
+    greedy_tok, _ = greedy_verify(tl, draft_toks)               # (B, k+1)
+    greedy_acc = draft_toks == greedy_tok[:, :k]                # (B, k)
+
+    # -- temperature regime: rejection sampling --------------------------
+    tau = jnp.maximum(temps, 1e-6)[:, None, None]
+    p = jax.nn.softmax(tl / tau, axis=-1)                       # (B,k+1,V)
+    q = jax.nn.softmax(draft_logits.astype(jnp.float32) / tau, axis=-1)
+    p_d = jnp.take_along_axis(p[:, :k], draft_toks[..., None],
+                              axis=-1)[..., 0]                  # (B, k)
+    q_d = jnp.take_along_axis(q, draft_toks[..., None], axis=-1)[..., 0]
+
+    def row_rand(seed):
+        ku, kg = jax.random.split(jax.random.PRNGKey(seed))
+        return (jax.random.uniform(ku, (k,)),
+                jax.random.gumbel(kg, (k1, v)))
+
+    u, g = jax.vmap(row_rand)(seeds)
+    # u <= p/q as u*q <= p: division-free; the explicit p_d > 0 conjunct
+    # keeps a token the target assigns zero probability rejectable even
+    # when q_d underflows to 0 (or u lands exactly on 0.0)
+    stoch_acc = (u * q_d <= p_d) & (p_d > 0)                    # (B, k)
+    resid = jnp.maximum(p[:, :k] - q, 0.0)
+    resample = jnp.argmax(jnp.log(jnp.maximum(resid, 1e-30)) + g[:, :k],
+                          axis=-1)                              # (B, k)
+    bonus = jnp.argmax(tl[:, k] / tau[..., 0] + g[:, k], axis=-1)
+    repl = jnp.concatenate([resample, bonus[:, None]],
+                           axis=1).astype(jnp.int32)            # (B, k+1)
+    acc_pad = jnp.concatenate([stoch_acc, jnp.zeros((b, 1), bool)], axis=1)
+    d_pad = jnp.concatenate([draft_toks, jnp.zeros((b, 1), jnp.int32)],
+                            axis=1)
+    stoch_out = jnp.where(acc_pad, d_pad, repl)                 # (B, k+1)
+
+    # -- per-row regime select + accepted-prefix length ------------------
+    is_stoch = temps > 0.0
+    acc = jnp.where(is_stoch[:, None], stoch_acc, greedy_acc)   # (B, k)
+    out = jnp.where(is_stoch[:, None], stoch_out, greedy_tok)
+    return out, _accept_len(acc)
+
+
+__all__ = ["verify_chunk", "greedy_verify"]
