@@ -31,6 +31,27 @@ def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(times))
 
 
+def latency_summary(requests) -> Dict[str, float]:
+    """Per-request latency percentiles from the engine's latency trail
+    (``Request.t_submit`` / ``t_tokens``): TTFT = submit → first commit,
+    ITL = gaps between commits.  Speculative decode commits multi-token
+    chunks under ONE stamp, so zero ITLs are real (tokens that arrived
+    together).  Shared by serve_throughput and serve_latency so both
+    report the same definitions."""
+    ttft, itl = [], []
+    for r in requests:
+        if not r.t_tokens:
+            continue
+        ttft.append(r.t_tokens[0] - r.t_submit)
+        itl += [b - a for a, b in zip(r.t_tokens, r.t_tokens[1:])]
+
+    def pct(xs, q):
+        return round(float(np.percentile(xs, q)) * 1e3, 3) if xs else None
+
+    return {"ttft_ms_p50": pct(ttft, 50), "ttft_ms_p95": pct(ttft, 95),
+            "itl_ms_p50": pct(itl, 50), "itl_ms_p95": pct(itl, 95)}
+
+
 def emit(rows: List[Dict], name: str):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

@@ -23,10 +23,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_smoothness, fig6_kernel, fig8_victims,
-                            fig9_outlier_removal, serve_throughput,
-                            table1_ppl, table4_group_size)
+                            fig9_outlier_removal, serve_latency,
+                            serve_throughput, table1_ppl,
+                            table4_group_size)
     suite = {
         "serve_throughput": serve_throughput.run,
+        "serve_latency": serve_latency.run,
         "table1_ppl": table1_ppl.run,
         "table2_acc": lambda quick: print(
             "  (folded into table1_ppl — acc column)"),

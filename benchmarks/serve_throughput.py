@@ -32,7 +32,7 @@ import jax
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import build_model
 from repro.serve.engine import ServingEngine
-from benchmarks.common import emit
+from benchmarks.common import emit, latency_summary
 
 
 def build_queue(engine: ServingEngine, n_requests: int, seed: int = 0):
@@ -83,6 +83,9 @@ def run_sched(model, params, qcfg, scheduler, n_requests, max_batch,
         # batch-occupancy of decode steps: generated tokens per decode
         "decode_occupancy": round(st["slot_steps"]
                                   / max(st["decode_steps"], 1), 3),
+        # tail latency, not just throughput: the wave policy's
+        # head-of-line blocking shows up here as TTFT p95
+        **latency_summary(done),
     }
 
 
@@ -136,6 +139,7 @@ def run_paged(model, params, qcfg, variant, n_requests, max_batch,
         "kv_bytes_capacity": kv["kv_bytes_capacity"],
         "kv_bytes_peak": kv["kv_bytes_peak"],
         "kv_bytes_resident_end": kv["kv_bytes_resident"],
+        **latency_summary(done),
     }
 
 

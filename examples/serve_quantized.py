@@ -77,6 +77,37 @@ def main():
         if not match:
             raise SystemExit("artifact round-trip diverged!")
 
+    # 3) streaming: the async engine serves the same prepared weights
+    #    with per-request token streams pumped by its own serve thread —
+    #    tokens arrive as they commit.  The SAME request mix as run (1)
+    #    streams token-identically to that batch run: under batch-global
+    #    RRS scales identity requires the same batch composition, so a
+    #    solo stream would legitimately diverge from a 4-wide batch.
+    from repro.serve.async_core import AsyncServingEngine
+    with AsyncServingEngine(model, engine.params, qcfg, max_batch=4,
+                            max_len=256, prepare=False) as aeng:
+        handles = [aeng.stream(PROMPTS[i % len(PROMPTS)],
+                               max_new_tokens=args.new_tokens)
+                   for i in range(args.requests)]
+        first = handles[0]
+        streamed = [t for t in first]      # blocks per token, not per run
+        for h in handles[1:]:
+            h.result(timeout=120)
+        batch = [r.out_tokens for r in sorted(done, key=lambda r: r.rid)]
+        match = [h.tokens for h in handles] == batch
+        print(f"streamed {len(streamed)} tokens ({first.finish_reason}): "
+              f"{first.text[:48]!r}; {len(handles)} streams identical "
+              f"to batch run: {match}")
+        if not match:
+            raise SystemExit("streamed tokens diverged from batch run!")
+
+        victim = aeng.stream(PROMPTS[1], max_new_tokens=128)
+        for n, _ in enumerate(victim):     # consume a few, then hang up
+            if n >= 4:
+                victim.cancel()            # slot frees at next boundary
+        print(f"cancelled mid-stream after {len(victim.tokens)} tokens "
+              f"({victim.finish_reason})")
+
 
 if __name__ == "__main__":
     main()

@@ -18,6 +18,8 @@ def encode(text: str) -> List[int]:
 
 
 def decode(ids) -> str:
+    # total over any id stream: specials drop, ids past the byte range
+    # (legal samples for a model with vocab_size > 260) drop too
     bs = bytes(int(i) - N_SPECIAL for i in ids
-               if int(i) >= N_SPECIAL)
+               if N_SPECIAL <= int(i) < 256 + N_SPECIAL)
     return bs.decode("utf-8", errors="replace")

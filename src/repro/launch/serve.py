@@ -12,8 +12,16 @@ throughput.  ``--ckpt`` restores trained params saved by
 ``repro.launch.train``.  ``--spec rrs_draft --spec-k 4`` turns on
 self-speculative decoding: the int4 path drafts, the fp-activation
 target verifies — outputs stay lossless w.r.t. the target.
+
+The engine is the ASYNC serving core (``serve.async_core``): the batch
+run below double-buffers its decode launches unless ``--no-overlap``,
+``--prefill-chunk N`` bounds admission stalls, and SIGINT drains
+gracefully (stop admitting, finish live rows) instead of dropping
+mid-generation requests.  ``--http PORT`` skips the synthetic batch and
+serves the SSE/HTTP front-end (``repro.launch.serve_http``) instead.
 """
 import argparse
+import signal
 import time
 
 
@@ -49,13 +57,21 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admission token budget: long prompts prefill "
+                         "in chunks riding along with decode steps")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="disable the double-buffered step loop")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the SSE/HTTP front-end on this port "
+                         "instead of the synthetic batch run")
     args = ap.parse_args()
 
     import jax
     from repro import configs
     from repro.configs.base import QuantConfig
     from repro.models import build_model
-    from repro.serve.engine import ServingEngine
+    from repro.serve.async_core import AsyncServingEngine
 
     bits = {"A4W4KV4": (4, 4, 4), "A4W4KV16": (4, 4, 16),
             "A4W16KV16": (4, 16, 16), "A8W8KV8": (8, 8, 8)}[args.scheme]
@@ -81,17 +97,29 @@ def main():
     qcfg = QuantConfig(*bits, method=args.method,
                        group_size=args.group_size,
                        kv_storage=args.kv_storage)
-    engine = ServingEngine(model, params, qcfg, max_batch=args.max_batch,
-                           max_len=args.max_len,
-                           scheduler=args.scheduler, cache=args.cache,
-                           block_size=args.block_size,
-                           num_blocks=args.num_blocks,
-                           spec=args.spec, spec_k=args.spec_k)
+    engine = AsyncServingEngine(model, params, qcfg,
+                                max_batch=args.max_batch,
+                                max_len=args.max_len,
+                                scheduler=args.scheduler, cache=args.cache,
+                                block_size=args.block_size,
+                                num_blocks=args.num_blocks,
+                                spec=args.spec, spec_k=args.spec_k,
+                                prefill_chunk=args.prefill_chunk,
+                                overlap=args.overlap)
+    if args.http is not None:
+        from repro.launch.serve_http import serve_forever
+        serve_forever(engine, args.http)
+        return
     prompts = ["the quick brown fox jumps", "one two three four",
                "a quantized model serves", "hello world again"]
     for i in range(args.requests):
         engine.submit(prompts[i % len(prompts)],
                       max_new_tokens=args.new_tokens)
+    # graceful SIGINT: stop admitting (queued requests reject), finish
+    # the live rows, report what completed — never drop mid-generation
+    signal.signal(signal.SIGINT,
+                  lambda s, f: (print("SIGINT: draining...", flush=True),
+                                engine.drain()))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0

@@ -1,0 +1,246 @@
+"""SSE/HTTP front-end over the async serving core — stdlib only
+(``http.server`` + server-sent events, no new dependencies).
+
+    PYTHONPATH=src python -m repro.launch.serve_http --arch smollm-135m \
+        --smoke --scheme A4W4KV4 --port 8471
+
+Endpoints:
+
+* ``POST /generate`` — body ``{"prompt": str|[int], "max_new_tokens",
+  "temperature", "deadline_s"}``; responds with an SSE stream, one
+  ``data:`` event per committed token (spec decode commits chunks —
+  events still arrive one per token, in commit order) and a final
+  ``{"done": true, "finish_reason": ..., "text": ...}`` event.  A
+  refused admission (queue full / draining / infeasible deadline) is a
+  503 with a JSON error — retryable by contract.  A client that
+  disconnects mid-stream CANCELS its request: the slot and its paged
+  block refs free at the next step boundary.
+* ``GET /stats`` — ``AsyncServingEngine.server_stats()``: queue depth,
+  active slots/streams, overlap share, spec acceptance rate, KV-cache
+  accounting, raw step counters.
+* ``GET /healthz`` — liveness (200 while serving, 503 once draining).
+
+Graceful drain: SIGINT stops admission (new requests 503, queued ones
+reject), lets live rows finish and their streams flush, then closes the
+listener — the satellite contract for ``launch/serve``.
+
+``--smoke`` is the CI path: build a toy engine from a freshly prepared
+artifact (``save_prepared`` → ``from_artifact``), start the server on
+an ephemeral port, stream one SSE request to completion over real HTTP,
+hit ``/stats``, drain, and assert the loop exited clean.
+"""
+import argparse
+import json
+import signal
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+
+class Handler(BaseHTTPRequestHandler):
+    engine = None                      # installed by serve_forever
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *a):    # quiet: CI parses stdout
+        pass
+
+    def _json(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        eng = type(self).engine
+        if self.path == "/healthz":
+            draining = eng._draining
+            self._json(503 if draining else 200,
+                       {"ok": not draining, "draining": draining})
+        elif self.path == "/stats":
+            self._json(200, eng.server_stats())
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):
+        from repro.data import tokenizer as tok
+        from repro.serve.async_core import AdmissionError
+        eng = type(self).engine
+        if self.path != "/generate":
+            self._json(404, {"error": f"no route {self.path}"})
+            return
+        n = int(self.headers.get("Content-Length", 0))
+        try:
+            body = json.loads(self.rfile.read(n) or b"{}")
+        except json.JSONDecodeError as e:
+            self._json(400, {"error": f"bad json: {e}"})
+            return
+        deadline = body.get("deadline_s")
+        try:
+            handle = eng.stream(
+                body.get("prompt", ""),
+                max_new_tokens=int(body.get("max_new_tokens", 16)),
+                temperature=float(body.get("temperature", 0.0)),
+                deadline_s=None if deadline is None else float(deadline))
+        except AdmissionError as e:
+            self._json(e.status, {"error": str(e), "retryable": True})
+            return
+        except ValueError as e:
+            self._json(400, {"error": str(e)})
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.close_connection = True
+        self.end_headers()
+        try:
+            for t in handle:
+                ev = {"token": t, "text": tok.decode([t])}
+                self.wfile.write(f"data: {json.dumps(ev)}\n\n".encode())
+                self.wfile.flush()
+            ev = {"done": True, "finish_reason": handle.finish_reason,
+                  "text": handle.text}
+            self.wfile.write(f"data: {json.dumps(ev)}\n\n".encode())
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            handle.cancel()            # client went away: free the slot
+
+
+def serve_forever(engine, port: int, host: str = "127.0.0.1") -> None:
+    """Run the front-end until SIGINT, then drain gracefully: stop
+    admitting, finish live rows, flush streams, close the listener."""
+    engine.start()
+    Handler.engine = engine
+    httpd = ThreadingHTTPServer((host, port), Handler)
+
+    def _sigint(signum, frame):
+        print("SIGINT: draining (live requests run to completion)...",
+              flush=True)
+        engine.drain()
+        threading.Thread(target=httpd.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGINT, _sigint)
+    print(f"serving on http://{host}:{httpd.server_address[1]} "
+          f"(POST /generate, GET /stats)", flush=True)
+    try:
+        httpd.serve_forever()
+    finally:
+        httpd.server_close()
+        engine.shutdown(drain=True)
+        print("drained clean", flush=True)
+
+
+def build_engine(args):
+    """Toy-scale engine for --smoke/CI: prepare once, SAVE the artifact,
+    and serve from it — the offline/online split the prepared-artifact
+    path exists for."""
+    import tempfile
+
+    import jax
+    from repro import configs
+    from repro.configs.base import QuantConfig
+    from repro.models import build_model
+    from repro.serve.async_core import AdmissionPolicy, AsyncServingEngine
+    from repro.serve.prepare import prepare_params, save_prepared
+
+    bits = {"A4W4KV4": (4, 4, 4), "A4W4KV16": (4, 4, 16),
+            "A4W16KV16": (4, 16, 16), "A8W8KV8": (8, 8, 8)}[args.scheme]
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(*bits, method=args.method,
+                       group_size=args.group_size)
+    prepared = prepare_params(params, qcfg,
+                              keep_dense=args.spec is not None)
+    path = save_prepared(tempfile.mkdtemp(prefix="rrs-art-") + "/art",
+                         prepared, qcfg)
+    print(f"prepared artifact at {path}")
+    policy = AdmissionPolicy(max_queue=args.max_queue)
+    return AsyncServingEngine.from_artifact(
+        model, path, max_batch=args.max_batch, max_len=args.max_len,
+        cache=args.cache, spec=args.spec, spec_k=args.spec_k,
+        prefill_chunk=args.prefill_chunk, overlap=args.overlap,
+        policy=policy)
+
+
+def run_smoke(engine) -> None:
+    """In-process CI smoke: one real SSE round-trip + /stats + drain."""
+    import urllib.request
+
+    engine.start()
+    Handler.engine = engine
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    port = httpd.server_address[1]
+    th = threading.Thread(target=httpd.serve_forever, daemon=True)
+    th.start()
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/generate",
+        data=json.dumps({"prompt": "the quick brown fox",
+                         "max_new_tokens": 8}).encode(),
+        headers={"Content-Type": "application/json"})
+    events = []
+    with urllib.request.urlopen(req, timeout=300) as resp:
+        assert resp.headers["Content-Type"].startswith("text/event-stream")
+        for raw in resp:
+            line = raw.decode().strip()
+            if line.startswith("data: "):
+                events.append(json.loads(line[len("data: "):]))
+    assert events and events[-1].get("done"), events
+    assert events[-1]["finish_reason"] in ("stop", "length"), events[-1]
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}/stats",
+                                timeout=60) as resp:
+        stats = json.loads(resp.read())
+    for key in ("queue_depth", "active_slots", "overlap_share",
+                "kv_cache", "counters"):
+        assert key in stats, f"/stats missing {key}"
+    engine.drain()
+    httpd.shutdown()
+    th.join(10)
+    httpd.server_close()
+    engine.shutdown(drain=True, timeout=120)
+    assert engine._thread is None, "serve loop did not join"
+    assert not engine._streams, "streams left open after drain"
+    print(f"HTTP smoke OK: {len(events) - 1} tokens streamed over SSE, "
+          f"finish={events[-1]['finish_reason']}, "
+          f"overlap_share={stats['overlap_share']}, clean drain")
+
+
+def main():
+    from repro.core.methods import available_methods
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy config + in-process SSE round-trip (CI)")
+    ap.add_argument("--method", default="rrs",
+                    choices=list(available_methods()))
+    ap.add_argument("--scheme", default="A4W4KV4",
+                    choices=["A4W4KV4", "A4W4KV16", "A4W16KV16",
+                             "A8W8KV8"])
+    ap.add_argument("--group-size", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--cache", default="dense",
+                    choices=["dense", "paged"])
+    ap.add_argument("--spec", default=None, choices=["rrs_draft"])
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admission token budget: long prompts prefill "
+                         "in chunks riding along with decode steps")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="disable the double-buffered step loop")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission queue bound (503 past it)")
+    ap.add_argument("--port", type=int, default=8471)
+    args = ap.parse_args()
+
+    engine = build_engine(args)
+    if args.smoke:
+        run_smoke(engine)
+    else:
+        serve_forever(engine, args.port)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""SLO-aware admission policy for the async serving core.
+
+Admission has two half-lives and this module owns the FAST one:
+
+* **at submit** (here): should the server take this request at all?
+  Reject early — a 503 the client can retry beats a request that sits
+  in the queue past its own deadline.  Checks: drain state, queue
+  depth, deadline feasibility.
+* **at the step boundary** (the engine): HOW an accepted request enters
+  the batch — the ``prefill_chunk`` token budget splits long prompt
+  prefills into chunks riding along with decode steps, so one long
+  admission never stalls live rows beyond the budget
+  (``ServingEngine._chunk_step``).
+
+Policy objects are immutable; the engine evaluates them under its
+scheduler lock so depth checks cannot race concurrent submitters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+class AdmissionError(RuntimeError):
+    """Request refused at submit time; ``status`` maps it onto the HTTP
+    front-end's response code (503 → retryable)."""
+    status = 503
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """``max_queue``: refuse when this many requests already wait
+    unadmitted (None = unbounded).  ``max_prompt_tokens``: refuse
+    prompts longer than this before tokenizer-side truncation kicks in
+    (None = engine ``max_len`` rules only)."""
+    max_queue: Optional[int] = None
+    max_prompt_tokens: Optional[int] = None
+
+    def check(self, engine, prompt_len: int,
+              deadline_s: Optional[float] = None,
+              draining: bool = False) -> None:
+        """Raise :class:`AdmissionError` when the request should be
+        refused; called by ``AsyncServingEngine.stream`` under its
+        scheduler lock."""
+        if draining:
+            raise AdmissionError("server is draining")
+        if (self.max_queue is not None
+                and engine.queue_depth() >= self.max_queue):
+            raise AdmissionError(
+                f"admission queue full ({self.max_queue})")
+        if (self.max_prompt_tokens is not None
+                and prompt_len > self.max_prompt_tokens):
+            raise AdmissionError(
+                f"prompt of {prompt_len} tokens exceeds the "
+                f"{self.max_prompt_tokens}-token admission limit")
+        if deadline_s is not None and deadline_s <= 0:
+            raise AdmissionError("deadline already expired at submit")
+
+
+__all__ = ["AdmissionError", "AdmissionPolicy"]

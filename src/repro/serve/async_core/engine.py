@@ -1,0 +1,369 @@
+"""Async serving core: a double-buffered scheduler over the batch
+engine, per-request token streams, and a long-running serve loop.
+
+**Double-buffered step loop.**  The blocking engine pays one device
+sync per step: sample step *t*, ``np.asarray`` the (B,) tokens, do all
+host work (EOS checks, radix walks, block allocation, slot refill),
+then launch *t+1*.  Device idles through the host work, host idles
+through the sync.  The async engine keeps the sampled token vector ON
+DEVICE (``_tok_dev``) and chains it straight into the next decode
+launch — JAX's async dispatch queues step *t+1* while *t* may still be
+computing — and only THEN syncs *t*'s tokens and runs the boundary
+sweep.  The host work for step *t* overlaps the device work of *t+1*;
+the measured split is ``stats["host_overlap_s"]`` (wall time between a
+launch and its consume, host working alongside the device) vs
+``stats["device_wait_s"]`` (wall time blocked in the sync).
+
+The chained path must not DONATE buffers: on the CPU backend a
+dispatch that donates (``donate_argnums``) blocks until the in-flight
+device queue drains — the base engine's donating ``_step_fn`` would
+absorb the whole device wait inside the *launch* and serialize the
+double buffer.  So both async modes decode through
+``_step_fn_nodonate`` (one cache-arena copy per step, dispatch returns
+immediately) and pay their device wait at the same
+``_consume_inflight`` sync; ``overlap=False`` simply consumes right
+after launching, which keeps ``device_wait_s / sync_steps`` an honest
+like-for-like per-step host-stall comparison.
+
+Commit ordering contract: tokens COMMIT (append / stream push / EOS
+decision) only at the consume of their step, in step order — the chain
+never reorders commits, it only launches ahead.  The cost of launching
+ahead is one step of finish LAG: a row whose in-flight token turns out
+to be EOS has already ridden the next launch; its extra sampled token
+is discarded at that consume and the paged write position rolled back
+one slot (``PagedKVManager.rollback``).  Budget finishes are predicted
+(``len(out) + in_flight >= max_new_tokens``) so only EOS pays the lag.
+Greedy token streams are IDENTICAL to the blocking engine's — chaining
+feeds bit-equal inputs to the same jit'd graphs — with one honest
+caveat: under quantized activations the batch-global runtime-smooth
+scales couple rows, so an EOS-lagged row riding one extra step can
+perturb OTHER rows' tokens relative to ``run()`` on a non-overlapped
+engine.  fp activations (row-independent) are overlap-safe
+everywhere; quantized identity tests pin ``overlap=False``.
+
+The chain BREAKS (consume first, then a full blocking pass) whenever
+the next step needs consumed results to be scheduled correctly:
+admission is possible (queued requests + a free slot), a chunked
+prefill is mid-flight, or spec decoding is on (its verify needs
+committed tokens on host).
+
+**Streams.**  ``stream()`` submits and returns a
+:class:`~repro.serve.async_core.stream.TokenStream`; the engine's
+commit/finish hooks push tokens as they commit.  ``stream()`` is
+thread-safe (the HTTP front-end submits from handler threads) and
+applies the :class:`AdmissionPolicy` before enqueueing.
+
+**Serve loop.**  ``start()`` pumps ``step_once`` on a daemon thread,
+sleeping on a condition while idle.  ``drain()`` stops admission
+(queued requests reject, live rows finish, streams flush) — the
+SIGINT path; ``shutdown()`` joins the thread.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import tokenizer as tok
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.async_core.admission import AdmissionError, AdmissionPolicy
+from repro.serve.async_core.stream import TokenStream
+
+
+class AsyncServingEngine(ServingEngine):
+    def __init__(self, *args, overlap: bool = True,
+                 policy: Optional[AdmissionPolicy] = None, **kw):
+        super().__init__(*args, **kw)
+        self.overlap = overlap
+        self.policy = policy if policy is not None else AdmissionPolicy()
+        self.stats.update({"host_overlap_s": 0.0, "overlapped_steps": 0})
+        # the on-device last-token vector the chained launch reads; every
+        # sample path merges its (B,) result in, so a launch never needs
+        # host-side tokens
+        self._tok_dev = jnp.zeros((self.max_batch,), jnp.int32)
+        # NO donation anywhere on the chained path: on the CPU backend a
+        # dispatch that donates a buffer blocks until the whole in-flight
+        # device queue drains (measured ~the full step time), which would
+        # silently serialize the double buffer
+        self._merge_fn = jax.jit(lambda cur, new, m: jnp.where(m, new, cur))
+        # frozen rows must feed token 0 exactly like the blocking loop's
+        # nxt buffer: padding is masked out of attention, but the
+        # batch-global runtime-smooth scales still see every row's
+        # embedding, so a stale sampled token in a frozen row would
+        # couple into LIVE rows' quantization
+        self._mask_fn = jax.jit(lambda t, m: jnp.where(m, t, 0))
+        # (live rows, (B,) device sample, launch wall-clock) or None
+        self._inflight: Optional[tuple] = None
+        self._streams: Dict[int, TokenStream] = {}
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._draining = False
+        self._stopped = False
+
+    # -- double-buffered stepping ------------------------------------------
+
+    def _sample_launch(self, logits, rows, counts=None):
+        samp = super()._sample_launch(logits, rows, counts)
+        mask = np.zeros((self.max_batch,), bool)
+        mask[rows] = True
+        self._tok_dev = self._merge_fn(self._tok_dev, samp,
+                                       jnp.asarray(mask))
+        return samp
+
+    def _chainable_live(self) -> Optional[List[int]]:
+        """Rows for a chained launch (decode *t+1* before *t*'s tokens
+        are consumed), or None when the next step must wait for consumed
+        results: overlap off, spec verify (needs host tokens), a chunked
+        prefill mid-flight, or possible admission (queue + free slot —
+        the blocking pass admits first, exactly like ``run()``)."""
+        if (not self.overlap or self.spec is not None
+                or self._pending_prefill):
+            return None
+        pend = set(self._inflight[0])
+        now = time.perf_counter()
+        live = []
+        for i, r in enumerate(self.slots):
+            if (r is None or r.done or r.cancel_requested
+                    or r.expired(now)):
+                continue
+            if (len(r.out_tokens)
+                    + (1 if i in pend else 0)) >= r.max_new_tokens:
+                continue            # finishes in the in-flight step
+            live.append(i)
+        if not live:
+            return None
+        if self.queue and self.scheduler != "wave" \
+                and any(s is None for s in self.slots):
+            return None             # admission possible: full pass first
+        return live
+
+    def _launch_decode(self, live: List[int]) -> None:
+        """Launch ONE decode for the live rows reading ``_tok_dev`` —
+        no host-side token needed, so this can run before the previous
+        step's sample is synced.  Sampling is launched (not synced) and
+        the result chained back into ``_tok_dev``."""
+        bsz = self.max_batch
+        if self.pager is not None:
+            grown = np.zeros((bsz,), bool)
+            for i in live:                    # on-demand block growth
+                grown[i] = self.pager.ensure_decode_room(i)
+            if grown.any():
+                self._upload_tables(np.zeros((bsz,), bool),
+                                    np.zeros((bsz,), np.int32), grown)
+        off = np.ones((bsz,), np.int32)
+        live_mask = np.zeros((bsz,), bool)
+        pend = set(self._inflight[0]) if self._inflight is not None else ()
+        counts = {}
+        for i in live:
+            off[i] = 0
+            live_mask[i] = True
+            # seed bookkeeping one step ahead: the in-flight sample will
+            # commit exactly one token to each still-live row
+            counts[i] = (len(self.slots[i].out_tokens)
+                         + (1 if i in pend else 0))
+        tok_in = self._mask_fn(self._tok_dev, jnp.asarray(live_mask))
+        logits, self.cache = self._step_fn_nodonate(
+            self.params, tok_in[:, None], self.cache, jnp.asarray(off))
+        samp = self._sample_launch(logits, live, counts=counts)
+        self.stats["decode_steps"] += 1
+        self.stats["slot_steps"] += len(live)
+        if self.overlap:
+            self.stats["overlapped_steps"] += 1
+        if self.pager is not None:
+            self.pager.advance(live)
+        self._inflight = (live, samp, time.perf_counter())
+
+    def _consume_inflight(self, inflight: tuple) -> None:
+        """Sync an in-flight step's sampled tokens and commit them in
+        step order.  Rows that finished or cancelled while the step was
+        in flight discard their token (the EOS-lag step) and rewind the
+        paged write position the launch advanced."""
+        live, samp, launch_t = inflight
+        self.stats["host_overlap_s"] += time.perf_counter() - launch_t
+        t0 = time.perf_counter()
+        toks = np.asarray(samp)
+        self.stats["device_wait_s"] += time.perf_counter() - t0
+        self.stats["sync_steps"] += 1
+        now = time.perf_counter()
+        for i in live:
+            r = self.slots[i]
+            if r is None:
+                continue    # slot reclaimed while the step was in flight
+            if r.done or r.cancel_requested or r.expired(now):
+                if self.pager is not None:
+                    self.pager.rollback(i, 1)
+                continue
+            self._commit(i, r, int(toks[i]), now=now)
+
+    def _generate_step(self, live: List[int]) -> None:
+        if self.spec is not None or self._pending_prefill:
+            super()._generate_step(live)
+            return
+        # BOTH modes decode through the non-donating launch graph and pay
+        # their device wait at the SAME sync point (the ``np.asarray`` in
+        # ``_consume_inflight``), so ``device_wait_s / sync_steps`` is an
+        # apples-to-apples stall metric: blocking consumes immediately
+        # (sync, THEN host work), overlapped leaves the step in flight
+        # for ``step_once`` to chain the next launch ahead of the sync.
+        self._launch_decode(live)
+        if not self.overlap:
+            prev, self._inflight = self._inflight, None
+            self._consume_inflight(prev)
+
+    def step_once(self) -> List[Request]:
+        """One async scheduler iteration.  With a step in flight and a
+        chainable live set: launch *t+1* FIRST (device stays busy), then
+        consume *t* and run the boundary sweep — the double buffer.
+        Otherwise: consume, then fall through to the blocking pass
+        (which itself LAUNCHES the next decode when eligible)."""
+        if self._inflight is not None:
+            live = self._chainable_live()
+            if live is not None:
+                prev = self._inflight
+                self._launch_decode(live)   # installs the NEW in-flight
+                self._consume_inflight(prev)
+                finished = self._reclaim()
+                finished += self._cull_queue()
+                return finished
+            prev, self._inflight = self._inflight, None
+            self._consume_inflight(prev)
+        return super().step_once()
+
+    def _has_work(self) -> bool:
+        return super()._has_work() or self._inflight is not None
+
+    # -- streams -----------------------------------------------------------
+
+    def stream(self, prompt, max_new_tokens: int = 16,
+               temperature: float = 0.0,
+               deadline_s: Optional[float] = None) -> TokenStream:
+        """Submit a request and return its token stream.  Thread-safe;
+        raises :class:`AdmissionError` (HTTP 503) when the admission
+        policy refuses or the server is draining."""
+        ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
+        with self._work:
+            self.policy.check(self, len(ids), deadline_s=deadline_s,
+                              draining=self._draining)
+            rid = self.submit(prompt, max_new_tokens, temperature,
+                              deadline_s=deadline_s)
+            handle = TokenStream(self.queue[-1], notify=self._kick)
+            self._streams[rid] = handle
+            self._work.notify_all()
+        return handle
+
+    def _kick(self) -> None:
+        with self._work:
+            self._work.notify_all()
+
+    def _on_commit(self, i: int, r: Request, t: int) -> None:
+        st = self._streams.get(r.rid)
+        if st is not None:
+            st._push(t)
+
+    def _on_finish(self, r: Request) -> None:
+        st = self._streams.pop(r.rid, None)
+        if st is not None:
+            st._finish(r.finish_reason)
+
+    # -- serve loop --------------------------------------------------------
+
+    def start(self) -> None:
+        """Pump the scheduler on a daemon thread; ``stream()`` wakes it."""
+        if self._thread is not None:
+            raise RuntimeError("serve loop already started")
+        self._stopped = False
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="rrs-serve-loop", daemon=True)
+        self._thread.start()
+
+    def _serve_loop(self) -> None:
+        try:
+            while True:
+                with self._work:
+                    while not (self._has_work() or self._stopped
+                               or self._draining):
+                        self._work.wait(0.05)
+                    if self._stopped:
+                        break
+                    if self._draining and not self._has_work():
+                        break
+                    self.step_once()
+        finally:
+            with self._work:   # hard stop / crash: terminate open streams
+                for st in list(self._streams.values()):
+                    r = st.request
+                    if not r.done:
+                        r.done = True
+                        r.finish_reason = r.finish_reason or "rejected"
+                    st._finish(r.finish_reason)
+                self._streams.clear()
+
+    def drain(self) -> None:
+        """Stop admitting (new ``stream()`` calls 503, queued requests
+        reject with a ``rejected`` sentinel); live rows run to
+        completion and their streams flush — the SIGINT contract."""
+        with self._work:
+            self._draining = True
+            for r in self.queue:
+                r.done, r.finish_reason = True, "rejected"
+                self._on_finish(r)
+            self.queue.clear()
+            self._work.notify_all()
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Drain (default) or hard-stop the serve loop and join it."""
+        if drain:
+            self.drain()
+        else:
+            with self._work:
+                self._stopped = True
+                self._work.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def __enter__(self) -> "AsyncServingEngine":
+        self.start()
+        return self
+
+    def __exit__(self, et, ev, tb) -> bool:
+        self.shutdown(drain=et is None)
+        return False
+
+    # -- reporting ---------------------------------------------------------
+
+    def server_stats(self) -> Dict[str, object]:
+        """The /stats payload: queue/slot/stream occupancy, drain state,
+        overlap share (overlapped host wall time over overlapped +
+        blocked), spec acceptance rate, KV-cache accounting, and the raw
+        step counters."""
+        with self._work:
+            st = dict(self.stats)
+            busy, wait = st["host_overlap_s"], st["device_wait_s"]
+            return {
+                "queue_depth": self.queue_depth(),
+                "active_slots": sum(s is not None for s in self.slots),
+                "active_streams": len(self._streams),
+                "draining": self._draining,
+                "scheduler": self.scheduler,
+                "cache": self.cache_kind,
+                "spec": self.spec_kind,
+                "prefill_chunk": self.prefill_chunk,
+                "overlap": self.overlap,
+                "overlap_share": (busy / (busy + wait)
+                                  if busy + wait > 0 else None),
+                "acceptance_rate": (st["spec_accepted"] / st["spec_proposed"]
+                                    if st["spec_proposed"] else None),
+                "kv_cache": self.kv_cache_stats(),
+                "counters": st,
+            }
+
+
+__all__ = ["AsyncServingEngine", "AdmissionError", "AdmissionPolicy",
+           "TokenStream"]

@@ -1,0 +1,127 @@
+"""Per-request token streams: the handle ``AsyncServingEngine.stream``
+returns.
+
+A :class:`TokenStream` is a thread-safe SPSC channel between the serve
+loop (producer: the engine's ``_on_commit`` / ``_on_finish`` hooks) and
+one consumer.  Tokens arrive AS THEY COMMIT — plain decode pushes one
+per step, speculative decode pushes a 1..k+1 chunk per round, chunked
+prefill pushes the first token when the prompt's last chunk lands.  The
+stream terminates with a sentinel carrying the request's
+``finish_reason`` ("stop" | "length" | "cancelled" | "expired" |
+"rejected"), after which iteration stops and :attr:`finish_reason` is
+set.
+
+Both consumption styles share one queue:
+
+* synchronous — ``for t in handle: ...`` (the HTTP front-end's SSE
+  writer threads);
+* asynchronous — ``async for t in handle: ...`` (each ``get`` hops
+  through the event loop's default executor, so one blocked stream
+  never stalls the loop).
+
+``cancel()`` is a consumer-side request: it flags the underlying
+:class:`~repro.serve.engine.Request` and kicks the serve loop; the row
+is reclaimed at the next step boundary (slot freed, paged block refs
+back to the pool) and the stream terminates with the ``cancelled``
+sentinel.  Tokens already committed before the boundary stay in the
+queue — a cancelled stream drains what it got, then stops.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, List, Optional
+
+from repro.data import tokenizer as tok
+from repro.serve.engine import Request
+
+
+class _End:
+    """Terminal sentinel (one per stream) carrying the finish reason."""
+    __slots__ = ("reason",)
+
+    def __init__(self, reason: Optional[str]):
+        self.reason = reason
+
+
+class TokenStream:
+    def __init__(self, request: Request,
+                 notify: Optional[Callable[[], None]] = None):
+        self.request = request
+        self.rid = request.rid
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._notify = notify
+        self._tokens: List[int] = []        # consumer-side transcript
+        self._ended = threading.Event()
+        self.finish_reason: Optional[str] = None
+
+    # -- producer side (serve loop only) ----------------------------------
+
+    def _push(self, t: int) -> None:
+        self._q.put(int(t))
+
+    def _finish(self, reason: Optional[str]) -> None:
+        self._q.put(_End(reason))
+
+    # -- consumer side -----------------------------------------------------
+
+    def cancel(self) -> None:
+        """Ask the engine to drop this request at the next step boundary
+        (see :meth:`repro.serve.engine.Request.cancel`)."""
+        self.request.cancel()
+        if self._notify is not None:
+            self._notify()
+
+    @property
+    def done(self) -> bool:
+        return self._ended.is_set()
+
+    def _next(self, timeout: Optional[float] = None) -> Optional[int]:
+        """One blocking dequeue; None means the stream ended (and
+        :attr:`finish_reason` is now set).  Raises ``queue.Empty`` on
+        timeout."""
+        if self._ended.is_set():
+            return None
+        item = self._q.get(timeout=timeout)
+        if isinstance(item, _End):
+            self.finish_reason = item.reason
+            self._ended.set()
+            return None
+        self._tokens.append(item)
+        return item
+
+    def __iter__(self) -> Iterator[int]:
+        while True:
+            t = self._next()
+            if t is None:
+                return
+            yield t
+
+    async def __aiter__(self):
+        import asyncio
+        loop = asyncio.get_running_loop()
+        while True:
+            t = await loop.run_in_executor(None, self._next)
+            if t is None:
+                return
+            yield t
+
+    def result(self, timeout: Optional[float] = None) -> List[int]:
+        """Drain the stream to completion and return every token it
+        yielded (committed-before-cancel tokens included).  ``timeout``
+        bounds EACH dequeue, not the total wait."""
+        while self._next(timeout=timeout) is not None:
+            pass
+        return list(self._tokens)
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens this consumer has dequeued so far."""
+        return list(self._tokens)
+
+    @property
+    def text(self) -> str:
+        return tok.decode(self._tokens)
+
+
+__all__ = ["TokenStream"]

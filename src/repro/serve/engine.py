@@ -70,6 +70,7 @@ lowers at the assignment's decode shapes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional
 
@@ -98,6 +99,31 @@ class Request:
     # the prompt did not fit max_len - max_new_tokens and lost its HEAD
     # tokens at submit time (never silent: callers check this flag)
     truncated: bool = False
+    # SLO deadline in seconds from submit; an expired request is
+    # reclaimed at the next step boundary (finish_reason "expired")
+    deadline_s: Optional[float] = None
+    # why the request ended: "stop" (EOS) | "length" (budget) |
+    # "cancelled" | "expired" | "rejected" (drained before admission)
+    finish_reason: Optional[str] = None
+    # latency trail: submit wall-clock + one commit stamp per token
+    # (spec decode commits chunks, so stamps may repeat) — the raw
+    # material for TTFT / inter-token-latency percentiles
+    t_submit: float = 0.0
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
+    cancel_requested: bool = False
+
+    def cancel(self) -> None:
+        """Request cancellation: the row (or queue entry) is reclaimed
+        at the NEXT step boundary — its slot frees, paged block refs
+        return to the pool, and any attached stream terminates with a
+        ``cancelled`` sentinel."""
+        self.cancel_requested = True
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline_s is None:
+            return False
+        return ((time.perf_counter() if now is None else now)
+                - self.t_submit > self.deadline_s)
 
     @property
     def text(self) -> str:
@@ -111,7 +137,8 @@ class ServingEngine:
                  scheduler: str = "continuous", cache: str = "dense",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 spec: Optional[str] = None, spec_k: int = 4):
+                 spec: Optional[str] = None, spec_k: int = 4,
+                 prefill_chunk: Optional[int] = None):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
@@ -127,16 +154,36 @@ class ServingEngine:
         (blocks still pooled).  ``spec``: None or "rrs_draft"
         (self-speculative decoding — the quantized ``qcfg`` path drafts
         ``spec_k`` tokens, the unquantized-activation target path over
-        the same artifact verifies; see the module docstring)."""
+        the same artifact verifies; see the module docstring).
+        ``prefill_chunk``: SLO-aware admission token budget — a prompt
+        longer than this many tokens is prefilled in chunks of at most
+        ``prefill_chunk`` that RIDE ALONG with the live rows' decode
+        steps (the multi-token ``attend_cache`` verify contract), so
+        one long admission never stalls live rows by more than a
+        chunk-width step; transformer families without MLA or a
+        sliding-window ring.  None (default) keeps the monolithic
+        one-step admission prefill."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if cache not in ("dense", "paged"):
             raise ValueError(f"unknown cache {cache!r}")
         if spec not in (None, "rrs_draft"):
             raise ValueError(f"unknown spec {spec!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
         self.model = model
         self.cfg = model.cfg
         self.qcfg = qcfg
+        if prefill_chunk is not None:
+            if self.cfg.family not in ("dense", "moe", "vlm") \
+                    or self.cfg.mla is not None:
+                raise ValueError("prefill_chunk needs a transformer "
+                                 "family without MLA (the attend_cache "
+                                 "chunk contract)")
+            if 0 < self.cfg.sliding_window < max_len:
+                raise ValueError("prefill_chunk does not support the "
+                                 "sliding-window ring")
         if spec is not None:
             if self.cfg.family not in ("dense", "moe", "vlm") \
                     or self.cfg.mla is not None:
@@ -163,16 +210,34 @@ class ServingEngine:
         self.cache_kind = cache
         self.spec_kind = spec
         self.spec_k = spec_k
+        self.prefill_chunk = prefill_chunk
         self.queue: List[Request] = []
         self._rid = 0
         self._prepared = prepare or already
         prepared = self._prepared
         step_qcfg = self.target_qcfg if spec is not None else qcfg
-        self._step_fn = jax.jit(
+        _step = lambda p, t, c, off: model.step(p, t, c, step_qcfg,
+                                                prepared=prepared,
+                                                offsets=off)
+        self._step_fn = jax.jit(_step, donate_argnums=(2,))
+        # the async core's launch-ahead decode: donation makes a dispatch
+        # BLOCK until the in-flight step drains (and keeps only one cache
+        # buffer alive), so the chained launch trades one cache-arena
+        # copy per step for a dispatch that returns immediately (jit is
+        # lazy — this compiles only if the async engine runs)
+        self._step_fn_nodonate = jax.jit(_step)
+        # chunked-prefill step: an S > 1 chunk on rows whose cache is
+        # already populated (the spec verify contract) — continuation
+        # chunks AND the live rows riding along at the last column
+        self._chunk_fn = jax.jit(
             lambda p, t, c, off: model.step(p, t, c, step_qcfg,
                                             prepared=prepared,
-                                            offsets=off),
+                                            offsets=off,
+                                            attend_cache=True),
             donate_argnums=(2,))
+        # remaining (not yet prefilled) prompt tokens per chunking slot,
+        # plus the full prompt for the paged commit after the last chunk
+        self._pending_prefill: Dict[int, List[int]] = {}
         self._sample_fn = jax.jit(_sample_batch)
         # persistent slot state: one cache pytree, per-row positions
         if cache == "paged":
@@ -211,7 +276,12 @@ class ServingEngine:
                       "prefix_hit_tokens": 0, "verify_steps": 0,
                       "spec_rounds": 0, "spec_row_rounds": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
-                      "spec_committed": 0}
+                      "spec_committed": 0, "chunk_steps": 0,
+                      "cancelled": 0, "expired": 0,
+                      # host stall: wall time blocked syncing sampled
+                      # tokens off device (the async engine's overlap
+                      # stats add host_overlap_s / overlapped_steps)
+                      "device_wait_s": 0.0, "sync_steps": 0}
         self.spec = None
         if spec is not None:
             from repro.serve.spec import SpecController
@@ -230,7 +300,8 @@ class ServingEngine:
         return cls(model, prepared, qcfg, prepare=False, **kw)
 
     def submit(self, prompt, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0,
+               deadline_s: Optional[float] = None) -> int:
         # spec mode verifies k+1 positions past the committed stream, so
         # every row keeps spec_k slots of speculative-overshoot headroom
         headroom = self.spec_k if self.spec is not None else 0
@@ -249,8 +320,14 @@ class ServingEngine:
         ids = ids[-keep:]
         self._rid += 1
         self.queue.append(Request(self._rid, ids, max_new_tokens,
-                                  temperature, truncated=truncated))
+                                  temperature, truncated=truncated,
+                                  deadline_s=deadline_s,
+                                  t_submit=time.perf_counter()))
         return self._rid
+
+    def queue_depth(self) -> int:
+        """Requests admitted nowhere yet (the /stats admission signal)."""
+        return len(self.queue)
 
     # -- slot primitives --------------------------------------------------
 
@@ -261,7 +338,12 @@ class ServingEngine:
     def _admit(self, admit: Dict[int, Request]):
         """Prefill newly admitted requests: reset their rows, left-pad
         each prompt into its row, run ONE batched masked prefill (other
-        rows ride along frozen), sample first tokens."""
+        rows ride along frozen), sample first tokens.  With a
+        ``prefill_chunk`` budget, admission only PLANS the rows (reset /
+        block allocation) and the prompts are consumed chunk-by-chunk by
+        :meth:`_chunk_step`, live rows riding along."""
+        if self.prefill_chunk is not None:
+            return self._admit_chunked(admit)
         if self.pager is not None:
             return self._admit_paged(admit)
         bsz = self.max_batch
@@ -345,6 +427,103 @@ class ServingEngine:
             # prompt even when the target reused radix prefix blocks
             self.spec.admit_rows({i: admit[i].prompt for i in planned})
 
+    def _admit_chunked(self, admit: Dict[int, Request]):
+        """Chunked admission PLAN: reset/allocate the rows now, defer the
+        prompt tokens to :meth:`_chunk_step`.  Paged rows allocate their
+        whole prompt's blocks here (radix-hit prefixes are skipped
+        exactly as in the monolithic path) so chunk writes never need
+        mid-prompt growth."""
+        bsz = self.max_batch
+        if self.pager is None:
+            mask = np.zeros((bsz,), bool)
+            for i in admit:
+                mask[i] = True
+            self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+            for i, r in admit.items():
+                self.slots[i] = r
+                self._pending_prefill[i] = list(r.prompt)
+            return
+        planned: Dict[int, int] = {}
+        deferred: List[Request] = []
+        for i in sorted(admit):
+            r = admit[i]
+            reuse = self.pager.admit(i, r.prompt, r.max_new_tokens)
+            if reuse is None:
+                deferred.append(r)
+            else:
+                planned[i] = reuse
+        self.queue[:0] = deferred           # retry later, FIFO preserved
+        if not planned:
+            if not any(s is not None for s in self.slots):
+                pool = self.pager.pool
+                raise RuntimeError(
+                    f"KV block pool ({pool.num_blocks} blocks x "
+                    f"{pool.block_size} tokens) cannot hold a single "
+                    "queued prompt; raise num_blocks")
+            return
+        mask = np.zeros((bsz,), bool)
+        pos_vals = np.zeros((bsz,), np.int32)
+        for i, reuse in planned.items():
+            mask[i] = True
+            pos_vals[i] = reuse               # row resumes past the hit
+            self.slots[i] = admit[i]
+            self._pending_prefill[i] = list(admit[i].prompt[reuse:])
+            self.stats["prefix_hit_tokens"] += reuse
+        self._upload_tables(mask, pos_vals, mask)
+
+    def _chunk_step(self, live: List[int]):
+        """One combined admission/decode step under the ``prefill_chunk``
+        budget: each chunking row consumes up to ``prefill_chunk`` of
+        its remaining prompt (left-padded), live rows ride along
+        decoding ONE token at the last column, everything else is
+        frozen — the ``attend_cache`` multi-token contract makes every
+        position see exactly the key set sequential processing would.
+        A row whose prompt completes this step samples its first
+        token."""
+        bsz = self.max_batch
+        w = self.prefill_chunk
+        if self.pager is not None:
+            grown = np.zeros((bsz,), bool)
+            for i in live:                    # riding decode writes
+                grown[i] = self.pager.ensure_decode_room(i)
+            if grown.any():
+                self._upload_tables(np.zeros((bsz,), bool),
+                                    np.zeros((bsz,), np.int32), grown)
+        tokens = np.zeros((bsz, w), np.int32)
+        off = np.full((bsz,), w, np.int32)   # default: fully frozen
+        completed: List[int] = []
+        for i in sorted(self._pending_prefill):
+            rem = self._pending_prefill[i]
+            take = min(len(rem), w)
+            tokens[i, w - take:] = rem[:take]
+            off[i] = w - take
+            del rem[:take]
+            self.stats["prefill_tokens"] += take
+            if not rem:
+                completed.append(i)
+        for i in live:
+            tokens[i, -1] = self.slots[i].out_tokens[-1]
+            off[i] = w - 1
+        logits, self.cache = self._chunk_fn(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(off))
+        self.stats["chunk_steps"] += 1
+        self.stats["slot_steps"] += len(live)
+        if self.pager is not None:
+            self.pager.advance(live)
+            for i in completed:
+                self.pager.commit_prompt(i, self.slots[i].prompt)
+        for i in completed:
+            del self._pending_prefill[i]
+        sample_rows = live + completed
+        if sample_rows:
+            self._sample_into(logits, sample_rows)
+        if self.spec is not None and completed:
+            # draft prefill AFTER sampling (the monolithic-admission
+            # ordering): the first target sample seeds the catch-up
+            self.spec.admit_rows({i: self.slots[i].prompt
+                                  for i in completed})
+
     def _upload_tables(self, pos_mask, pos_vals, table_mask):
         """Mirror the host-authoritative block tables into the device
         cache for rows in ``table_mask`` (admitted or grown), resetting
@@ -360,10 +539,11 @@ class ServingEngine:
             self.cache, jnp.asarray(pos_mask), jnp.asarray(pos_vals),
             jnp.asarray(table_mask), jnp.asarray(self.pager.tables))
 
-    def _free_slot(self, i: int):
+    def _free_slot(self, i: int, park: bool = True):
         self.slots[i] = None
+        self._pending_prefill.pop(i, None)
         if self.pager is not None:
-            self.pager.release(i)
+            self.pager.release(i, park=park)
         if self.spec is not None:
             self.spec.release(i)
 
@@ -391,49 +571,156 @@ class ServingEngine:
             self.pager.advance(live)
         self._sample_into(logits, live)
 
-    def _sample_into(self, logits, rows: List[int]):
-        """Sample the whole batch on device in one jit'd op; append the
-        single synced (B,) token array into the listed rows' requests."""
+    @staticmethod
+    def _seed_for(r: Request, count: int) -> int:
+        """Per-(request, step) sampling seed; ``count`` is how many
+        tokens the row has committed BEFORE this sample (the async
+        engine predicts it one step ahead when decode is in flight)."""
+        return (r.rid if count == 0
+                else r.rid * 7919 + count) % (1 << 32)
+
+    def _sample_launch(self, logits, rows: List[int],
+                       counts: Optional[Dict[int, int]] = None):
+        """Launch whole-batch sampling on device; returns the (B,)
+        device token array WITHOUT syncing it to host."""
         bsz = self.max_batch
         temps = np.zeros((bsz,), np.float32)
         seeds = np.zeros((bsz,), np.uint32)
         for i in rows:
             r = self.slots[i]
             temps[i] = r.temperature
-            seed = r.rid if not r.out_tokens \
-                else r.rid * 7919 + len(r.out_tokens)
-            seeds[i] = seed % (1 << 32)
-        toks = np.asarray(self._sample_fn(logits[:, -1],
-                                          jnp.asarray(temps),
-                                          jnp.asarray(seeds)))
+            n = len(r.out_tokens) if counts is None else counts[i]
+            seeds[i] = self._seed_for(r, n)
+        return self._sample_fn(logits[:, -1], jnp.asarray(temps),
+                               jnp.asarray(seeds))
+
+    def _sample_commit(self, samp_dev, rows: List[int]):
+        """Sync the sampled (B,) array (the step's single host/device
+        round-trip — timed as host stall) and commit the listed rows'
+        tokens."""
+        t0 = time.perf_counter()
+        toks = np.asarray(samp_dev)
+        self.stats["device_wait_s"] += time.perf_counter() - t0
+        self.stats["sync_steps"] += 1
+        now = time.perf_counter()
         for i in rows:
-            r = self.slots[i]
-            t = int(toks[i])
-            r.out_tokens.append(t)
-            if t == tok.EOS or len(r.out_tokens) >= r.max_new_tokens:
-                r.done = True
+            self._commit(i, self.slots[i], int(toks[i]), now=now)
+
+    def _sample_into(self, logits, rows: List[int]):
+        """Sample the whole batch on device in one jit'd op; append the
+        single synced (B,) token array into the listed rows' requests."""
+        self._sample_commit(self._sample_launch(logits, rows), rows)
+
+    def _commit(self, i: int, r: Request, t: int,
+                now: Optional[float] = None,
+                from_spec: bool = False) -> bool:
+        """THE single token-commit point (plain decode, chunk-riding
+        decode, and the spec controller all land here): append, stamp
+        the latency trail, decide EOS/budget completion, feed the draft
+        catch-up queue for non-spec commits, and fire the stream hook.
+        Returns whether the request just finished."""
+        r.out_tokens.append(t)
+        r.t_tokens.append(time.perf_counter() if now is None else now)
+        if t == tok.EOS:
+            r.done, r.finish_reason = True, "stop"
+        elif len(r.out_tokens) >= r.max_new_tokens:
+            r.done, r.finish_reason = True, "length"
+        if self.spec is not None and not from_spec:
+            self.spec.notify_commit(i, t)
+        self._on_commit(i, r, t)
+        return r.done
+
+    # -- stream hooks (no-ops here; the async engine overrides them) ------
+
+    def _on_commit(self, i: int, r: Request, t: int) -> None:
+        pass
+
+    def _on_finish(self, r: Request) -> None:
+        pass
 
     # -- schedulers -------------------------------------------------------
 
-    def _run_continuous(self) -> List[Request]:
+    def _reclaim(self) -> List[Request]:
+        """The step-boundary sweep: mark cancelled/expired rows done,
+        free every finished row's slot, fire the finish hook.  A
+        cancelled or expired row releases its paged block refs back to
+        the pool (NOT parked: its table never feeds another request's
+        prefix, so the refcount baseline is restored immediately)."""
         finished: List[Request] = []
-        while self.queue or any(r is not None for r in self.slots):
-            for i, r in enumerate(self.slots):      # reclaim
-                if r is not None and r.done:
-                    finished.append(r)
-                    self._free_slot(i)
-            free = [i for i, r in enumerate(self.slots) if r is None]
-            if free and self.queue:                 # refill the step after
-                admit = {}
-                for i in free:
-                    if not self.queue:
-                        break
-                    admit[i] = self.queue.pop(0)
-                self._admit(admit)
-            live = [i for i, r in enumerate(self.slots)
-                    if r is not None and not r.done]
-            if live:
-                self._generate_step(live)
+        now = time.perf_counter()
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            park = True
+            if not r.done:
+                if r.cancel_requested:
+                    r.done, r.finish_reason = True, "cancelled"
+                    self.stats["cancelled"] += 1
+                    park = False
+                elif r.expired(now):
+                    r.done, r.finish_reason = True, "expired"
+                    self.stats["expired"] += 1
+                    park = False
+            if r.done:
+                if r.finish_reason is None:     # legacy direct .done set
+                    r.finish_reason = "stop"
+                finished.append(r)
+                self._free_slot(i, park=park)
+                self._on_finish(r)
+        return finished
+
+    def _cull_queue(self) -> List[Request]:
+        """Drop queued requests that were cancelled or expired before
+        ever reaching a slot — their streams terminate without a
+        prefill."""
+        culled: List[Request] = []
+        now = time.perf_counter()
+        keep: List[Request] = []
+        for r in self.queue:
+            if r.cancel_requested or r.expired(now):
+                r.done = True
+                r.finish_reason = ("cancelled" if r.cancel_requested
+                                   else "expired")
+                self.stats[r.finish_reason] += 1
+                culled.append(r)
+                self._on_finish(r)
+            else:
+                keep.append(r)
+        self.queue = keep
+        return culled
+
+    def _admit_phase(self) -> None:
+        """Continuous admission: free slots take queued requests."""
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if free and self.queue:
+            admit = {}
+            for i in free:
+                if not self.queue:
+                    break
+                admit[i] = self.queue.pop(0)
+            self._admit(admit)
+
+    def _live_rows(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and not r.done
+                and i not in self._pending_prefill]
+
+    def step_once(self) -> List[Request]:
+        """ONE scheduler iteration — reclaim, admit, one generation (or
+        chunked-prefill) step — returning the requests that finished at
+        this step boundary.  ``run`` is a loop over this; the async
+        engine pumps it from its serve thread and overlaps the decode
+        inside."""
+        if self.scheduler == "wave":
+            return self._step_wave()
+        finished = self._reclaim()
+        finished += self._cull_queue()
+        self._admit_phase()
+        live = self._live_rows()
+        if self._pending_prefill:
+            self._chunk_step(live)
+        elif live:
+            self._generate_step(live)
         return finished
 
     def _generate_step(self, live: List[int]):
@@ -457,31 +744,33 @@ class ServingEngine:
             self.queue.remove(r)
         return wave
 
-    def _run_waves(self) -> List[Request]:
-        """Reference wave scheduler on the slot machinery: admit a gang
-        only when every slot is free, drain it to the last member —
-        exhibits the head-of-line blocking continuous batching removes."""
-        finished: List[Request] = []
-        while self.queue:
-            admit = dict(enumerate(self._wave_group()))
-            self._admit(admit)
-            # paged admission may defer members back to the queue; the
-            # gang is whatever actually landed in a slot
-            landed = [i for i in admit if self.slots[i] is not None]
-            while True:
-                live = [i for i in landed if not self.slots[i].done]
-                if not live:
-                    break
-                self._generate_step(live)
-            for i in landed:
-                finished.append(self.slots[i])
-                self._free_slot(i)
+    def _step_wave(self) -> List[Request]:
+        """One iteration of the reference wave scheduler on the slot
+        machinery: a gang is admitted only when NO row is live (the
+        previous gang fully drained), and runs to its last member —
+        exhibits the head-of-line blocking continuous batching
+        removes."""
+        finished = self._reclaim()
+        finished += self._cull_queue()
+        live = self._live_rows()
+        if not live and not self._pending_prefill and self.queue:
+            self._admit(dict(enumerate(self._wave_group())))
+            live = self._live_rows()
+        if self._pending_prefill:
+            self._chunk_step(live)
+        elif live:
+            self._generate_step(live)
         return finished
 
+    def _has_work(self) -> bool:
+        return bool(self.queue or self._pending_prefill
+                    or any(r is not None for r in self.slots))
+
     def run(self) -> List[Request]:
-        if self.scheduler == "wave":
-            return self._run_waves()
-        return self._run_continuous()
+        finished: List[Request] = []
+        while self._has_work():
+            finished += self.step_once()
+        return finished
 
     # -- reporting --------------------------------------------------------
 

@@ -201,13 +201,28 @@ class PagedKVManager:
         for i in slots:
             self.row_pos[i] += 1
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, park: bool = True) -> None:
         """PARK a finished/reset slot: its block refs and radix pins are
         kept until readmission or pool-pressure reclaim, so the frozen
         row's stale device table keeps reading unchanged contents (see
         the module docstring).  Host table/pos are cleared — the slot is
-        schedulable immediately."""
-        self._parked.add(slot)
+        schedulable immediately.
+
+        ``park=False`` (a CANCELLED or expired request) drops the refs
+        and pins right away instead: the pool refcounts return to their
+        pre-admission baseline at the step boundary, which is the
+        cancellation contract.  Radix-indexed prompt chains survive
+        under the cache's own refs (prefix reuse is unaffected); the
+        frozen row's stale device table may then point at recycled
+        blocks, which is safe — a fully-padded row has no visible keys,
+        so its attention output is exactly 0 and never feeds the
+        batch-global smooth scales — but forfeits the parked-slot
+        bit-determinism note above (a cancelled stream has no output to
+        keep deterministic)."""
+        if park:
+            self._parked.add(slot)
+        else:
+            self._drop_holdings(slot)
         self.tables[slot, :] = -1
         self.row_pos[slot] = 0
 

@@ -30,13 +30,13 @@ target forward commits, never which.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.data import tokenizer as tok
 from repro.serve.spec.draft import DraftRunner, set_pos_rows
 from repro.serve.spec.verify import greedy_verify, verify_chunk
 
@@ -76,6 +76,14 @@ class SpecController:
 
     def release(self, i: int) -> None:
         self.pending[i] = []
+
+    def notify_commit(self, i: int, t: int) -> None:
+        """A token was committed for row ``i`` OUTSIDE a speculative
+        round — a first-token admission sample (``admit_rows`` reseeds
+        right after, so the append is transient) or a plain decode
+        riding a chunked-prefill step: the draft cache has not consumed
+        it, so it joins the catch-up queue."""
+        self.pending[i].append(t)
 
     # -- one speculative round --------------------------------------------
 
@@ -127,16 +135,18 @@ class SpecController:
         dmask = np.zeros((bsz,), bool)
         dpos = np.zeros((bsz,), np.int32)
         rolled = np.zeros((bsz,), bool)
+        now = time.perf_counter()
         for i in live:
             r = reqs[i]
             base = len(r.prompt) + len(r.out_tokens) - 1  # cache pos pre-verify
             appended = 0
             for j in range(int(acc_np[i]) + 1):
                 t = int(out_np[i, j])
-                r.out_tokens.append(t)
                 appended += 1
-                if t == tok.EOS or len(r.out_tokens) >= r.max_new_tokens:
-                    r.done = True
+                # the engine's single commit point: latency stamps,
+                # EOS/budget completion, stream hooks (one multi-token
+                # chunk commits under one timestamp)
+                if eng._commit(i, r, t, now=now, from_spec=True):
                     break
             # 4a. target-cache rewind plan: keep exactly the committed run
             mask[i] = True

@@ -1,0 +1,265 @@
+"""Async serving core: streamed-output identity against the blocking
+engine across the {cache} x {spec} x {scheduler} matrix, double-buffer
+stats, mid-stream cancellation with the paged refcount pin, deadlines,
+SLO admission, the threaded serve loop / drain contract, and the
+SSE/HTTP front-end smoke.
+
+Identity pins run fp activations (``QuantConfig()``): rows are
+independent, so the chained launch is overlap-safe everywhere.  Under
+quantized activations the batch-global runtime-smooth scales couple
+rows — an EOS-lagged row riding one extra chained step can perturb
+OTHER rows' tokens — so the quantized identity pin runs
+``overlap=False`` (documented in the async_core docstring)."""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.data import tokenizer as tok
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.async_core import (AdmissionError, AdmissionPolicy,
+                                    AsyncServingEngine)
+
+TINY = ModelConfig(name="t32", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256, dtype="float32")
+QRRS = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+FP = QuantConfig()
+
+PROMPTS = ["abcdef", "ghijkl", "mnopqr", "stuvwx", "yzabcd"]
+BUDGETS = [5, 9, 7, 12, 6]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine_kw(cache, spec_k, scheduler):
+    kw = dict(max_batch=2, max_len=96)
+    if cache == "paged":
+        kw.update(cache="paged", block_size=8)
+    if spec_k:
+        kw.update(spec="rrs_draft", spec_k=spec_k)
+    if scheduler == "wave":
+        kw.update(scheduler="wave")
+    return kw
+
+
+def _ref_outputs(model, params, qcfg, kw):
+    ref = ServingEngine(model, params, qcfg, **kw)
+    for p, b in zip(PROMPTS, BUDGETS):
+        ref.submit(p, max_new_tokens=b)
+    return [r.out_tokens for r in sorted(ref.run(), key=lambda r: r.rid)]
+
+
+# ---------------------------------------------------------------------------
+# streamed identity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("spec_k", [0, 2])
+@pytest.mark.parametrize("scheduler", ["continuous", "wave"])
+def test_streamed_identity_matrix(tiny, cache, spec_k, scheduler):
+    """Greedy streamed outputs are token-identical to the blocking
+    engine's ``run()`` under every cache/spec/scheduler combination —
+    the chain launches ahead but never reorders commits (spec rounds
+    fall back to blocking passes; the chain resumes between them)."""
+    model, params = tiny
+    kw = _engine_kw(cache, spec_k, scheduler)
+    ref_out = _ref_outputs(model, params, FP, kw)
+
+    eng = AsyncServingEngine(model, params, FP, **kw)
+    handles = [eng.stream(p, max_new_tokens=b)
+               for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run()
+    outs = [h.result(timeout=5) for h in handles]
+    assert outs == ref_out
+    assert all(h.finish_reason in ("stop", "length") for h in handles)
+
+
+def test_quantized_identity_overlap_off(tiny):
+    """The quantized pin: with the chain disabled the async engine IS
+    the blocking engine (same non-donating graphs, same sync ordering),
+    so rrs-quantized streams match ``run()`` exactly."""
+    model, params = tiny
+    kw = dict(max_batch=2, max_len=96)
+    ref_out = _ref_outputs(model, params, QRRS, kw)
+    eng = AsyncServingEngine(model, params, QRRS, overlap=False, **kw)
+    handles = [eng.stream(p, max_new_tokens=b)
+               for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run()
+    assert [h.result(timeout=5) for h in handles] == ref_out
+    assert eng.stats["overlapped_steps"] == 0
+
+
+def test_overlap_stats_and_server_stats(tiny):
+    """The double buffer actually engages (overlapped steps counted,
+    launch->consume wall time accumulated) and /stats surfaces the
+    occupancy + overlap share the front-end reports."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96)
+    for p, b in zip(PROMPTS[:3], BUDGETS[:3]):
+        eng.submit(p, max_new_tokens=b)
+    eng.run()
+    st = eng.stats
+    assert st["overlapped_steps"] > 0
+    assert st["sync_steps"] > 0
+    assert st["host_overlap_s"] > 0.0
+    srv = eng.server_stats()
+    for key in ("queue_depth", "active_slots", "active_streams",
+                "draining", "overlap_share", "kv_cache", "counters"):
+        assert key in srv
+    assert srv["queue_depth"] == 0 and srv["active_slots"] == 0
+    assert srv["overlap"] is True
+
+
+# ---------------------------------------------------------------------------
+# cancellation / deadlines
+# ---------------------------------------------------------------------------
+
+def test_midstream_cancel_restores_paged_refcounts(tiny):
+    """Cancelling mid-stream reclaims the slot at the next step boundary
+    and returns every paged block ref to the pool (release is NOT
+    parked), so the free-block count is pinned back to baseline; the
+    stream drains its committed tokens then ends ``cancelled``."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             cache="paged", block_size=8,
+                             prefix_cache=False)
+    baseline = eng.pager.pool.free_blocks
+    victim = eng.stream("abcdef", max_new_tokens=64)
+    other = eng.stream("ghijkl", max_new_tokens=6)
+    while len(victim.request.out_tokens) < 2:
+        eng.step_once()
+    victim.cancel()
+    eng.run()
+    got = victim.result(timeout=5)
+    assert len(got) >= 2
+    assert victim.finish_reason == "cancelled"
+    assert other.result(timeout=5) and other.finish_reason == "length"
+    assert eng.stats["cancelled"] == 1
+    # the cancelled row's refs went straight back to the pool (release
+    # NOT parked) — only `other`'s normally-finished slot parks its
+    # blocks for lazy reuse
+    pager = eng.pager
+    assert len(pager._parked) == 1
+    parked_held = sum(len(pager._owned[s]) for s in pager._parked)
+    assert pager.pool.free_blocks + parked_held == baseline
+
+
+def test_deadline_expires_before_admission(tiny):
+    """An already-expired deadline culls the request from the queue at
+    the first boundary — the stream terminates ``expired`` with no
+    tokens and no slot was ever consumed."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96)
+    h = eng.stream("abcdef", max_new_tokens=8, deadline_s=1e-6)
+    eng.run()
+    assert h.result(timeout=5) == []
+    assert h.finish_reason == "expired"
+    assert eng.stats["expired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill through the async engine
+# ---------------------------------------------------------------------------
+
+def test_chunked_long_prompt_identity(tiny):
+    """A long prompt admitted in token-budget chunks (riding along with
+    live decode steps) streams the same tokens as the blocking chunked
+    engine; the chain breaks around the chunk steps and resumes after."""
+    model, params = tiny
+    rng = np.random.default_rng(3)
+    long_prompt = (1 + rng.integers(0, 200, size=40)).tolist()
+    subs = [("abcdef", 12), (long_prompt, 6), ("ghijkl", 8)]
+
+    kw = dict(max_batch=2, max_len=96, prefill_chunk=8)
+    ref = ServingEngine(model, params, FP, **kw)
+    for p, b in subs:
+        ref.submit(p, max_new_tokens=b)
+    ref_out = [r.out_tokens for r in sorted(ref.run(), key=lambda r: r.rid)]
+
+    eng = AsyncServingEngine(model, params, FP, **kw)
+    handles = [eng.stream(p, max_new_tokens=b) for p, b in subs]
+    eng.run()
+    assert [h.result(timeout=5) for h in handles] == ref_out
+    assert eng.stats["chunk_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# admission policy / serve loop / drain
+# ---------------------------------------------------------------------------
+
+def test_admission_policy_rejects(tiny):
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             policy=AdmissionPolicy(max_queue=2,
+                                                    max_prompt_tokens=16))
+    eng.stream("abcdef", max_new_tokens=4)
+    eng.stream("ghijkl", max_new_tokens=4)
+    with pytest.raises(AdmissionError):
+        eng.stream("mnopqr", max_new_tokens=4)       # queue full
+    with pytest.raises(AdmissionError):
+        eng.stream("x" * 40, max_new_tokens=4)       # prompt too long
+    with pytest.raises(AdmissionError):
+        eng.stream("abcdef", max_new_tokens=4, deadline_s=-1.0)
+    assert AdmissionError("x").status == 503
+    eng.run()
+
+
+def test_threaded_serve_loop_streams(tiny):
+    """The context-managed serve loop pumps submitted streams to
+    completion on its own thread and joins cleanly on exit."""
+    model, params = tiny
+    with AsyncServingEngine(model, params, FP, max_batch=2,
+                            max_len=96) as eng:
+        handles = [eng.stream(p, max_new_tokens=b)
+                   for p, b in zip(PROMPTS[:3], BUDGETS[:3])]
+        outs = [h.result(timeout=30) for h in handles]
+    assert all(outs)
+    assert all(h.finish_reason in ("stop", "length") for h in handles)
+    assert eng._thread is None and not eng._streams
+
+
+def test_drain_rejects_queued_and_blocks_new(tiny):
+    """``drain()`` (the SIGINT path): queued requests terminate with the
+    ``rejected`` sentinel, new ``stream()`` calls get a 503, live rows
+    are still allowed to finish."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96)
+    handles = [eng.stream(p, max_new_tokens=4) for p in PROMPTS[:4]]
+    eng.drain()                      # loop never ran: all 4 still queued
+    assert all(h.result(timeout=5) == [] for h in handles)
+    assert all(h.finish_reason == "rejected" for h in handles)
+    with pytest.raises(AdmissionError):
+        eng.stream("abcdef", max_new_tokens=4)
+    assert eng.server_stats()["draining"] is True
+    eng.run()                        # no residual work
+
+
+# ---------------------------------------------------------------------------
+# front-end satellites
+# ---------------------------------------------------------------------------
+
+def test_tokenizer_decode_is_total():
+    """Untrained models sample ids past the byte range; the SSE writer
+    decodes per token, so decode must be total over any id stream."""
+    assert tok.decode([300, 5, 1000, 70]) == tok.decode([5, 70])
+    assert tok.decode([tok.BOS, tok.EOS, 259]) == tok.decode([259])
+
+
+def test_http_sse_smoke(tiny):
+    """End-to-end over a real socket: POST /generate streams SSE events
+    ending in a done record, /stats and /healthz answer, drain leaves no
+    thread or open streams (asserted inside run_smoke)."""
+    from repro.launch.serve_http import run_smoke
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             policy=AdmissionPolicy(max_queue=8))
+    run_smoke(eng)
