@@ -1,0 +1,220 @@
+"""Paged decode attention: block-table Pallas kernel vs the gather path.
+
+Sweeps batch × context × KV storage over synthetic block arenas at full
+occupancy and times ONE decode-attention step (the s == 1 hot op of
+``models/layers._paged_cache_attn``) both ways:
+
+* kernel — ``kernels/paged_attn.paged_decode_attn``: walks the block
+  table one grid step per (row, head, block), dequantizes at-rest codes
+  in the prologue in VMEM, online softmax in scratch; reads ONLY the
+  visible blocks and materializes nothing in HBM.
+* gather — the legacy path: ``kvquant.paged_gather`` builds the
+  ``(B, max_blocks·bs, KVH, D)`` logical view (reading every table slot,
+  allocated or not), dequantizes/fake-quantizes it, then dense softmax.
+
+On this CPU container the kernel runs in interpret mode, so wall-clock is
+NOT TPU evidence (interpreted grids are orders of magnitude slower than
+Mosaic — tens of seconds per 4k-context call); kernel timing is therefore
+only recorded at the 512-context shapes (``us_kernel_interp`` is null at
+4k), and the acceptance claim lives in the MODELED bytes
+(``kernels.ops.modeled_attn_bytes``): ``bytes_drop`` per row, with the
+4k-context int4 rows required to show a >= 2x attention-bytes reduction.
+Every 512-context row also records ``oracle_exact`` / ``oracle_max_err``
+— interpret-mode kernel vs the jnp oracle
+(``kernels/ref.paged_attn_decode_ref``) under jit-vs-jit (the oracle
+unrolls the block loop in Python; 4k traces are pointlessly slow).  The
+pinned parity shapes (``--parity``, tests) are bit-exact; at other
+shapes XLA's program-level fusion can flip the last bf16 bit of a
+cancellation-heavy output element, so ``oracle_exact`` may read false
+with ``oracle_max_err`` at 1-ulp scale (~7e-9) — see the kernel module
+docstring.
+
+``--parity`` runs ONLY the oracle checks (all three storages + GQA +
+mixed-progress rows) and exits nonzero on any mismatch — the CI smoke.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvquant, quant
+from repro.kernels import ops
+from repro.kernels import paged_attn as kpa
+from repro.kernels import ref as kref
+from benchmarks.common import emit, timeit
+
+KVH, REP, D = 4, 2, 64          # 8 query heads over 4 KV heads
+BS = 32                          # arena block size
+GROUP = 64                       # kv group (== D: one scale group)
+BATCHES = [8, 32]
+CTXS = [512, 4096]
+STORAGES = ["fake", "int8", "int4"]
+
+
+def make_case(b, ctx, storage, *, seed=0, mixed=False):
+    """Synthetic full-occupancy arenas + tables for one config.
+
+    ``mixed`` staggers qpos across rows (frozen / mid-decode / full) —
+    the parity sweep's visibility stress; timing rows keep every row at
+    ctx - 1 (worst case, and what the modeled bytes assume).
+    """
+    rng = np.random.default_rng(seed)
+    mb = ctx // BS
+    nb = b * mb
+    kf = rng.standard_normal((nb, BS, KVH, D)).astype(np.float32)
+    vf = rng.standard_normal((nb, BS, KVH, D)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((b, KVH, REP, D)), jnp.bfloat16)
+    # each row owns a shuffled slice of the arena (tables are not the
+    # identity — the walk must actually indirect through them)
+    perm = rng.permutation(nb).reshape(b, mb)
+    tables = jnp.asarray(perm, jnp.int32)
+    if mixed:
+        qpos = np.full((b,), ctx - 1, np.int64)
+        qpos[::3] = -1                       # freshly reset: no visible key
+        qpos[1::3] = ctx // 2 + 3            # mid-decode, partial tail block
+        qpos = jnp.asarray(qpos, jnp.int32)
+    else:
+        qpos = jnp.full((b,), ctx - 1, jnp.int32)
+    if storage == "fake":
+        k = jnp.asarray(kf, jnp.bfloat16)
+        v = jnp.asarray(vf, jnp.bfloat16)
+        ks = vs = None
+        kv_bits = 4                          # QDQ on read
+    else:
+        bits = 8 if storage == "int8" else 4
+        kq = kvquant.kv_quantize(jnp.asarray(kf), bits, GROUP)
+        vq = kvquant.kv_quantize(jnp.asarray(vf), bits, GROUP)
+        kc, vc = kq.codes, vq.codes
+        if storage == "int4":
+            kc, vc = quant.pack_int4(kc), quant.pack_int4(vc)
+        k, v, ks, vs = kc, vc, kq.scales, vq.scales
+        kv_bits = bits
+    return q, k, v, ks, vs, tables, qpos, kv_bits
+
+
+def kernel_fn(kv_bits):
+    def f(q, k, v, ks, vs, tables, qpos):
+        return kpa.paged_decode_attn(q, k, v, tables, qpos,
+                                     k_scale=ks, v_scale=vs,
+                                     kv_bits=kv_bits, kv_group=GROUP,
+                                     x_dtype=jnp.bfloat16)
+    return f
+
+
+def gather_fn(kv_bits, packed):
+    """The legacy path's op sequence (mirrors the S > 1 branch of
+    ``_paged_cache_attn``): gather → (unpack) → dequant/fake-quant →
+    dense masked softmax — materializing the full logical view."""
+    def f(q, k, v, ks, vs, tables, qpos):
+        bs = k.shape[1]
+        gk, gv = kvquant.paged_gather(k, tables), kvquant.paged_gather(v, tables)
+        if ks is not None:
+            if packed:
+                gk, gv = quant.unpack_int4(gk), quant.unpack_int4(gv)
+            kk = kvquant.kv_dequantize(
+                kvquant.QuantizedKV(gk, kvquant.paged_gather(ks, tables)),
+                jnp.bfloat16)
+            vv = kvquant.kv_dequantize(
+                kvquant.QuantizedKV(gv, kvquant.paged_gather(vs, tables)),
+                jnp.bfloat16)
+        else:
+            kk = kvquant.kv_fakequant(gk, kv_bits, GROUP)
+            vv = kvquant.kv_fakequant(gv, kv_bits, GROUP)
+        kpos = kvquant.paged_key_pos(tables, bs)          # (B, L)
+        s = jnp.einsum("bhrd,blhd->bhrl", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) / np.sqrt(D)
+        vis = (kpos <= qpos[:, None])[:, None, None, :]
+        s = jnp.where(vis, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(vis, p, 0.0)                        # empty rows -> 0
+        return jnp.einsum("bhrl,blhd->bhrd", p,
+                          vv.astype(jnp.float32)).astype(jnp.bfloat16)
+    return f
+
+
+def check_parity(b, ctx, storage, mixed) -> dict:
+    """Interpret-mode kernel vs jnp oracle, bit-exact under jit-vs-jit."""
+    q, k, v, ks, vs, tables, qpos, kv_bits = make_case(
+        b, ctx, storage, mixed=mixed)
+    kern = jax.jit(kernel_fn(kv_bits))
+    orac = jax.jit(lambda qq, kk, vv, kss, vss, tt, pp:
+                   kref.paged_attn_decode_ref(
+                       qq, kk, vv, tt, pp, kss, vss,
+                       kv_bits=kv_bits, kv_group=GROUP,
+                       x_dtype=jnp.bfloat16))
+    y = kern(q, k, v, ks, vs, tables, qpos)
+    yr = orac(q, k, v, ks, vs, tables, qpos)
+    exact = bool(jnp.all(y == yr))
+    # frozen rows must come out exactly 0 (mixed staggers qpos to -1)
+    zeros_ok = (not mixed) or bool(jnp.all(y[::3] == 0))
+    return {"name": f"parity_{storage}_b{b}_ctx{ctx}"
+                    + ("_mixed" if mixed else ""),
+            "oracle_exact": exact, "zero_rows_ok": zeros_ok,
+            "max_err": float(jnp.max(jnp.abs(
+                y.astype(jnp.float32) - yr.astype(jnp.float32))))}
+
+
+def run_parity() -> int:
+    failures = 0
+    rows = []
+    for storage in STORAGES:
+        for mixed in (False, True):
+            r = check_parity(4, 256, storage, mixed)
+            ok = r["oracle_exact"] and r["zero_rows_ok"]
+            failures += 0 if ok else 1
+            rows.append(r)
+            print(f"  {r['name']}: exact={r['oracle_exact']} "
+                  f"zeros_ok={r['zero_rows_ok']} "
+                  f"max_err={r['max_err']:.3e}", flush=True)
+    emit(rows, "paged_attn_parity")
+    return failures
+
+
+def run(quick: bool = False):
+    rows = []
+    batches = BATCHES[:1] if quick else BATCHES
+    ctxs = CTXS[:1] if quick else CTXS
+    for storage in STORAGES:
+        for b in batches:
+            for ctx in ctxs:
+                q, k, v, ks, vs, tables, qpos, kv_bits = make_case(
+                    b, ctx, storage)
+                packed = storage == "int4"
+                gath = jax.jit(gather_fn(kv_bits, packed))
+                t_g = timeit(gath, q, k, v, ks, vs, tables, qpos, iters=3,
+                             warmup=1)
+                t_k = None
+                if ctx <= 512:       # interp kernel timing: see docstring
+                    kern = jax.jit(kernel_fn(kv_bits))
+                    t_k = round(timeit(kern, q, k, v, ks, vs, tables,
+                                       qpos, iters=3, warmup=1), 1)
+                m = ops.modeled_attn_bytes(
+                    b, ctx, kv_heads=KVH, head_dim=D, block_size=BS,
+                    max_blocks=ctx // BS, kv_storage=storage, group=GROUP,
+                    q_heads=KVH * REP)
+                row = {"name": f"paged_{storage}_b{b}_ctx{ctx}",
+                       "us_kernel_interp": t_k,
+                       "us_gather": round(t_g, 1),
+                       **{kk2: round(vv2, 5) for kk2, vv2 in m.items()}}
+                if ctx <= 512:
+                    par = check_parity(b, ctx, storage, mixed=False)
+                    row["oracle_exact"] = par["oracle_exact"]
+                    row["oracle_max_err"] = par["max_err"]
+                rows.append(row)
+                tk_s = f"{t_k:.0f}us" if t_k is not None else "skipped"
+                print(f"  {row['name']}: kernel(interp) {tk_s} "
+                      f"gather {t_g:.0f}us | modeled bytes drop "
+                      f"{m['bytes_drop'] * 100:.1f}% "
+                      f"({m['gather_bytes'] / m['kernel_bytes']:.1f}x)",
+                      flush=True)
+    emit(rows, "paged_attn")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--parity" in sys.argv:
+        sys.exit(1 if run_parity() else 0)
+    run(quick="--quick" in sys.argv)

@@ -78,8 +78,19 @@ def paged_scatter(arena: jnp.ndarray, fresh: jnp.ndarray,
 
 def paged_gather(arena: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     """Gather a (B, max_blocks*block_size, ...) logical-order view of the
-    arena through a block table.  Unallocated entries (table id -1) read
-    block 0 — callers mask them out via the table (see ``paged_key_pos``).
+    arena through a block table.
+
+    Contract — masked-invisible is NOT masked-unread: unallocated table
+    entries (id -1) are still *read* (the gather is dense over
+    ``max_blocks``); attention only makes them *invisible* afterwards via
+    ``paged_key_pos``'s -1 sentinel.  Those reads must therefore be
+    harmless: a raw -1 index would WRAP to the arena's LAST block (jnp
+    negative indexing), aliasing whatever live row owns it — so ids are
+    clamped to block 0 here.  Block 0 is an ordinary allocatable block;
+    its (finite) contents never reach the output because the bias mask
+    zeroes the rows, but NaN/Inf poison would survive ``0 * x``.  The
+    clamp-to-0 choice (not clamp-to-last) is pinned by a
+    poison-the-last-block test in tests/test_paged_attn.py.
     """
     nb, bs = arena.shape[0], arena.shape[1]
     b, mb = tables.shape
@@ -147,6 +158,22 @@ def kv_dequantize(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jnp.ndarray:
     g = K // groups
     cg = codes.reshape(*lead, groups, g)
     return quant.dequantize(cg, scales, dtype).reshape(*lead, K)
+
+
+def dequant_block(codes: jnp.ndarray, scales: jnp.ndarray,
+                  dtype=jnp.bfloat16, packed: bool = False) -> jnp.ndarray:
+    """Dequantize one (or a batch of) at-rest KV block(s).
+
+    codes: (..., Dc) int8 codes — or uint8 packed int4 nibbles when
+    ``packed`` (Dc = D//2); scales: (..., groups, 1) f32.  Mirrors the
+    gather path's unpack → :func:`kv_dequantize` op order exactly; the
+    Pallas paged-decode kernel prologue AND its XLA oracle both call this
+    helper, so kernel-vs-gather numeric differences can only come from
+    attention op order (online vs dense softmax), never from dequant.
+    """
+    if packed:
+        codes = quant.unpack_int4(codes)
+    return kv_dequantize(QuantizedKV(codes, scales), dtype)
 
 
 def kv_fakequant(kv: jnp.ndarray, bits: int = 4, group: int = 128

@@ -1,11 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  rrs_gemm  — fused runtime-smooth INT4 GEMM (paper Fig. 4), packed-int4
-              weights, int8 MXU compute, per-K-block smooth scales.
-  act_quant — fused smooth+quantize of rotated activations.
-  fwht      — MXU-native factorized online Hadamard rotation.
+  rrs_gemm   — fused runtime-smooth INT4 GEMM (paper Fig. 4), packed-int4
+               weights, int8 MXU compute, per-K-block smooth scales.
+  act_quant  — fused smooth+quantize of rotated activations.
+  fwht       — MXU-native factorized online Hadamard rotation.
+  paged_attn — block-table paged decode attention: fused at-rest
+               int8/packed-int4 dequant prologue + online softmax; reads
+               only allocated blocks, no gathered logical view in HBM.
 
-ops.py exposes jit'd wrappers + the end-to-end fused RRS linear;
+ops.py exposes jit'd wrappers + the end-to-end fused RRS linear and the
+modeled HBM-bytes accounting (linears AND paged attention);
 ref.py holds the pure-jnp oracles used by the allclose sweep tests.
 """
 from repro.kernels import ops, ref

@@ -291,3 +291,70 @@ def modeled_linear_bytes(n: int, k: int, m: int, *, group: int = 128,
         "fused2_act_bytes": float(fused_act),
         "act_bytes_drop": float(1.0 - fused_act / legacy_act),
     }
+
+
+def modeled_attn_bytes(b: int, ctx: int, *, kv_heads: int, head_dim: int,
+                       block_size: int, max_blocks: int,
+                       kv_storage: str = "fake", group: int = 128,
+                       q_heads: Optional[int] = None, x_bytes: int = 2,
+                       alloc_blocks: Optional[int] = None
+                       ) -> Dict[str, float]:
+    """Modeled HBM bytes moved by ONE paged-attention decode step over a
+    batch of ``b`` rows with ``ctx`` visible tokens each, gather path vs
+    the block-table kernel (``kernels/paged_attn``) — the attention
+    companion of :func:`modeled_linear_bytes`.
+
+    gather: ``paged_gather`` reads the K and V arenas through ALL
+    ``max_blocks`` table slots per row (unallocated ids are clamped, not
+    skipped) and writes the gathered code view; at-rest storage then
+    reads that view back and writes a dequantized ``x_bytes`` logical
+    view (fp storage fake-quants in registers — no extra round trip);
+    attention reads the logical view.  kernel: ONE read of the codes
+    (+ scales) of the ``ceil(ctx/block_size)`` VISIBLE blocks per row —
+    dequant happens in VMEM, no logical view exists in HBM.  Query read
+    and output write are common to both and included.
+
+    ``kv_storage``: "fake" (fp arena at ``x_bytes``/elt, QDQ on read),
+    "int8" (1 byte/elt + per-group scales), "int4" (packed nibbles,
+    0.5 byte/elt + scales).  ``alloc_blocks`` overrides the total
+    allocated-block count (default ``b * ceil(ctx/block_size)``) for
+    the resident-bytes figure — the engine passes the paging manager's
+    ``row_alloc_blocks()`` sum here.
+    """
+    if kv_storage not in ("fake", "int8", "int4"):
+        raise ValueError(f"unknown kv_storage {kv_storage!r}")
+    at_rest = kv_storage != "fake"
+    code_b = {"fake": float(x_bytes), "int8": 1.0, "int4": 0.5}[kv_storage]
+    scale_b = (-(-head_dim // group)) * 4 if at_rest else 0.0
+    qh = kv_heads if q_heads is None else q_heads
+    bs = block_size
+    vis_blocks = -(-ctx // bs)
+    if alloc_blocks is None:
+        alloc_blocks = b * vis_blocks
+    per_tok = head_dim * code_b + scale_b          # one head, K or V
+    # common: read q, write out
+    common = 2 * b * qh * head_dim * x_bytes
+    # gather path (all table slots, K and V):
+    gathered_codes = b * max_blocks * bs * kv_heads * per_tok * 2
+    logical_view = b * max_blocks * bs * kv_heads * head_dim * x_bytes * 2
+    if at_rest:
+        # read arena, write gathered codes, read them back, write the
+        # dequantized logical view, attend over it
+        gather_kv = gathered_codes * 3 + logical_view * 2
+    else:
+        # read arena, write gathered view (same dtype, QDQ in registers),
+        # attend over it
+        gather_kv = gathered_codes + logical_view * 2
+    # kernel path: one read of the visible blocks' codes + scales
+    kernel_kv = b * vis_blocks * bs * kv_heads * per_tok * 2
+    resident = alloc_blocks * bs * kv_heads * per_tok * 2
+    gather = gather_kv + common
+    kern = kernel_kv + common
+    return {
+        "gather_bytes": float(gather),
+        "kernel_bytes": float(kern),
+        "bytes_drop": float(1.0 - kern / gather),
+        "gather_kv_read_bytes": float(gather_kv),
+        "kernel_kv_read_bytes": float(kernel_kv),
+        "resident_kv_bytes": float(resident),
+    }

@@ -1,0 +1,252 @@
+"""Pallas block-table paged-attention DECODE kernel with fused at-rest dequant.
+
+The paged gather path (``models/layers._paged_cache_attn``) materializes a
+``(B, max_blocks·block_size, KVH, D)`` logical view of the block arena every
+decode step, dequantizes int8/int4 codes into it, and only then attends — so
+the int4-at-rest capacity win (PR 4) is paid back as HBM traffic.  This
+kernel is the QuaRot/kernel-B move applied to the KV cache: walk the
+``(B, max_blocks)`` block table directly, one grid step per
+(row, KV-head, logical block), and do the at-rest dequant in the *prologue*
+of each step, in VMEM, feeding a flash-style online-softmax accumulator
+(running max / denominator / weighted-V in scratch).  Neither the gathered
+logical view nor a dequantized bf16/f32 cache ever exists in HBM; the bytes
+read per step drop from O(B·max_blocks·bs·D·bytes(x)) to
+O(visible_blocks·bs·Dc·bytes(code)).
+
+Block-table walk contract (mirrors the gather path's visibility rules):
+
+* grid = (B, KVH, max_blocks), logical blocks innermost; the (m, l, acc)
+  scratch carries the online softmax across the block loop and is reset at
+  block 0 of every (row, head) pair.
+* a step computes only when ``i·bs <= qpos[row]`` (``pl.when`` guard): the
+  per-row visible-position bound — derived from the same per-row lengths
+  the host-side ``PagedKVManager`` tracks — bounds the loop, so frozen /
+  freshly-admitted rows skip every unallocated block.
+* the arena index map clamps past-the-end steps to the row's LAST visible
+  block (and table ids to >= 0), so consecutive grid steps alias the same
+  physical block and Pallas elides the fetch — skipped steps cost no HBM.
+* within a visible block, keys are masked per-slot (``kpos <= qpos``, plus
+  the sliding window) with the masked-where online-softmax form, so a
+  partially-filled tail block contributes exactly its written slots.
+* rows with NO visible key (qpos < 0: left-pad / freshly reset slots)
+  output exactly 0 — acc stays 0 and the epilogue divides by
+  ``max(l, eps)`` — matching the gather path's ``out * visible`` zeroing.
+
+Dequant prologue modes (selected by the cache layout, shape-automatic):
+
+* fp arena (bf16/f32), ``kv_bits >= 16``: plain cast to the compute dtype.
+* fp arena, ``kv_bits < 16``: the QDQ read path — ``kvquant.kv_fakequant``
+  applied to the block, mirroring the gather path's decode-read fake-quant.
+* int8 arena + scales: per-group dequant via :func:`kvquant.dequant_block`.
+* packed-int4 arena (Dc = D//2 uint8 nibbles) + scales: in-prologue
+  nibble unpack (``quant.unpack_int4`` interleaved layout — NOT the
+  GEMM's block-local layout) then per-group dequant.
+
+GQA: q arrives grouped ``(B, KVH, rep, D)`` (query head j = KV head
+j // rep), so one grid step serves all ``rep`` query heads of a KV head
+from a single block fetch — ``_repeat_kv`` never materializes.
+
+The XLA oracle (``kernels/ref.paged_attn_decode_ref``) shares
+:func:`_dequant_kv_block`, :func:`_online_update` and :func:`_finalize`
+bit-for-bit and processes skipped blocks as masked no-ops (an exact f32
+identity: corr = exp(0) = 1, p = 0), so interpret-mode kernel vs oracle is
+BIT-EXACT for bf16/int8/int4 arenas under jit-vs-jit at the pinned parity
+shapes (tests + CI smoke).  The shared helpers fix the *op order*, not
+XLA's *program-level* fusion: compiling the same ops inside the interpret
+grid loop vs the oracle's unrolled block loop can contract one f32
+multiply-add differently, which on a cancellation-heavy output element
+(|out| ~1e-6 against O(1) accumulator terms) flips the last mantissa bit —
+observed as a single 1-bf16-ulp mismatch at one 512-context benchmark
+cell; ``benchmarks/paged_attn.py`` records ``oracle_max_err`` per row.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import kvquant
+
+NEG_INF = -1e30
+
+
+def _dequant_kv_block(blk: jnp.ndarray, scales: Optional[jnp.ndarray], *,
+                      packed: bool, fake_bits: int, kv_group: int,
+                      x_dtype) -> jnp.ndarray:
+    """Prologue dequant of one (bs, Dc) arena block to the compute dtype.
+
+    Shared bit-for-bit with the XLA oracle; mirrors the gather path's
+    unpack → dequant (at-rest) / fake-quant-on-read (QDQ) op order.
+    """
+    if scales is not None:
+        return kvquant.dequant_block(blk, scales, x_dtype, packed=packed)
+    if fake_bits < 16:
+        blk = kvquant.kv_fakequant(blk, fake_bits, kv_group)
+    return blk.astype(x_dtype)
+
+
+def _online_update(qh, kk, vv, vis, m, l, acc, scale):
+    """One flash-style online-softmax block update (shared with the oracle).
+
+    qh: (rep, D); kk/vv: (bs, D) dequantized; vis: (1, bs) bool;
+    m/l: (rep, 1) f32 running max / denominator; acc: (rep, D) f32.
+    The masked-where form (p = where(vis, exp(s - m_new), 0)) is load-
+    bearing twice: a fully-masked block leaves m_new == m, where a bare
+    exp(s - m_new) would contribute exp(NEG_INF - NEG_INF) = 1 per slot;
+    and it makes a masked block an exact f32 identity (corr = exp(0) = 1,
+    l·1 + 0 = l), which is what lets the kernel SKIP those blocks while
+    staying bit-exact vs the oracle that processes them.
+    """
+    s = jax.lax.dot_general(qh, kk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(vis, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(vis, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc * corr + jax.lax.dot_general(
+        p, vv.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _finalize(l, acc, dtype):
+    """Epilogue: acc / max(l, eps).  Zero-visible rows (l == 0, acc == 0)
+    come out exactly 0 — the paged path's empty-row contract."""
+    return (acc / jnp.maximum(l, 1e-30)).astype(dtype)
+
+
+def _make_kernel(bs: int, mb: int, window: int, packed: bool, fake_bits: int,
+                 kv_group: int, x_dtype, scale: float, at_rest: bool):
+    def kernel(tbl_ref, qp_ref, q_ref, k_ref, v_ref, *rest):
+        if at_rest:
+            ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        else:
+            o_ref, m_ref, l_ref, acc_ref = rest
+            ks_ref = vs_ref = None
+        b = pl.program_id(0)
+        i = pl.program_id(2)
+
+        @pl.when(i == 0)
+        def _init():
+            m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+            l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+            acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+        qp = qp_ref[b]
+
+        @pl.when(i * bs <= qp)
+        def _block():
+            kk = _dequant_kv_block(
+                k_ref[0, :, 0, :],
+                ks_ref[0, :, 0, :, :] if at_rest else None,
+                packed=packed, fake_bits=fake_bits, kv_group=kv_group,
+                x_dtype=x_dtype)
+            vv = _dequant_kv_block(
+                v_ref[0, :, 0, :],
+                vs_ref[0, :, 0, :, :] if at_rest else None,
+                packed=packed, fake_bits=fake_bits, kv_group=kv_group,
+                x_dtype=x_dtype)
+            kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+            vis = (kpos <= qp) & (tbl_ref[b, i] >= 0)
+            if window > 0:
+                vis = vis & (kpos > qp - window)
+            m, lsum, acc = _online_update(q_ref[0, 0], kk, vv, vis,
+                                          m_ref[...], l_ref[...],
+                                          acc_ref[...], scale)
+            m_ref[...] = m
+            l_ref[...] = lsum
+            acc_ref[...] = acc
+
+        @pl.when(i == mb - 1)
+        def _epilogue():
+            o_ref[0, 0] = _finalize(l_ref[...], acc_ref[...], o_ref.dtype)
+
+    return kernel
+
+
+def paged_decode_attn(q: jnp.ndarray,          # (B, KVH, rep, D)
+                      k: jnp.ndarray,          # (NB, bs, KVH, Dc) arena
+                      v: jnp.ndarray,          # (NB, bs, KVH, Dc) arena
+                      tables: jnp.ndarray,     # (B, max_blocks) int32
+                      qpos: jnp.ndarray,       # (B,) int32, -1 = no keys
+                      *,
+                      k_scale: Optional[jnp.ndarray] = None,
+                      v_scale: Optional[jnp.ndarray] = None,
+                      kv_bits: int = 16, kv_group: int = 128,
+                      window: int = 0, x_dtype=None, out_dtype=None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Block-table paged decode attention (see module docstring).
+
+    Returns (B, KVH, rep, D) in ``out_dtype``.  ``k_scale``/``v_scale``
+    present selects the at-rest code path (packed int4 when the arena's
+    last dim is D//2); absent, ``kv_bits < 16`` selects the QDQ read
+    path.  Not jitted itself — it is called from inside the jitted model
+    step; standalone callers (tests, benchmarks) wrap it in ``jax.jit``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, kvh, rep, d = q.shape
+    nb, bs = k.shape[0], k.shape[1]
+    mb = tables.shape[1]
+    dc = k.shape[-1]
+    at_rest = k_scale is not None
+    packed = at_rest and dc * 2 == d
+    if not at_rest and dc != d:
+        raise ValueError(f"fp arena head dim {dc} != query head dim {d}")
+    if x_dtype is None:
+        x_dtype = q.dtype
+    if out_dtype is None:
+        out_dtype = x_dtype
+    scale = 1.0 / math.sqrt(d)
+    fake_bits = 16 if at_rest else kv_bits
+    tables = tables.astype(jnp.int32)
+    qpos = jnp.asarray(qpos, jnp.int32)
+
+    def q_map(b_, h, i, tbl, qp):
+        return (b_, h, 0, 0)
+
+    def _phys(b_, i, tbl, qp):
+        # clamp past-the-end steps to the row's last visible block so the
+        # index map repeats and Pallas elides the fetch; clamp ids >= 0 so
+        # unallocated rows never index the arena out of range
+        j = jnp.minimum(i, jnp.maximum(qp[b_] // bs, 0))
+        return jnp.maximum(tbl[b_, j], 0)
+
+    def arena_map(b_, h, i, tbl, qp):
+        return (_phys(b_, i, tbl, qp), 0, h, 0)
+
+    def scale_map(b_, h, i, tbl, qp):
+        return (_phys(b_, i, tbl, qp), 0, h, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d), q_map),
+        pl.BlockSpec((1, bs, 1, dc), arena_map),
+        pl.BlockSpec((1, bs, 1, dc), arena_map),
+    ]
+    inputs = [q, k, v]
+    if at_rest:
+        g = k_scale.shape[-2]
+        in_specs += [pl.BlockSpec((1, bs, 1, g, 1), scale_map)] * 2
+        inputs += [k_scale, v_scale]
+
+    kernel = pl.pallas_call(
+        _make_kernel(bs, mb, window, packed, fake_bits, kv_group,
+                     x_dtype, scale, at_rest),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kvh, mb),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, rep, d), q_map),
+            scratch_shapes=[pltpu.VMEM((rep, 1), jnp.float32),
+                            pltpu.VMEM((rep, 1), jnp.float32),
+                            pltpu.VMEM((rep, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), out_dtype),
+        interpret=interpret,
+    )
+    return kernel(tables, qpos, *inputs)

@@ -6,6 +6,8 @@ or to float tolerance (f32 epilogues).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -109,6 +111,82 @@ def fwht_absmax_ref(x: jnp.ndarray, block: int = 0, rotate: bool = True,
     y16 = y.astype(out_dtype)
     cmax = jnp.max(jnp.abs(y16.astype(jnp.float32)), axis=0)
     return y16, cmax
+
+
+# ---------------------------------------------------------------------------
+# paged-attention decode oracle
+# ---------------------------------------------------------------------------
+
+def paged_attn_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          tables: jnp.ndarray, qpos: jnp.ndarray,
+                          k_scale=None, v_scale=None, *,
+                          kv_bits: int = 16, kv_group: int = 128,
+                          window: int = 0, x_dtype=None,
+                          out_dtype=None) -> jnp.ndarray:
+    """Oracle of ``kernels/paged_attn.paged_decode_attn``: the same
+    block-serial online softmax, dequant-then-accumulate op order, built
+    from the SAME shared helpers (_dequant_kv_block / _online_update /
+    _finalize) — so interpret-mode kernel vs oracle is bit-exact under
+    jit for bf16, int8 and packed-int4 arenas at the pinned parity
+    shapes.  (XLA may still fuse one multiply-add differently across the
+    two programs, flipping the last bf16 bit of a cancellation-heavy
+    output element — see the kernel module docstring.)
+
+    Differences that are exact f32 identities, not approximations: the
+    oracle processes every logical block (masked, so a skipped block
+    contributes corr = exp(0) = 1 and p = 0) where the kernel skips them,
+    and it reads arena block ``max(id, 0)`` for unallocated table slots
+    where the kernel's index map repeats the last visible block — both
+    reads are fully masked, so finite garbage (even a poisoned block)
+    never reaches the output.
+    """
+    from repro.kernels import paged_attn as kpa
+    b, kvh, rep, d = q.shape
+    bs = k.shape[1]
+    mb = tables.shape[1]
+    at_rest = k_scale is not None
+    packed = at_rest and k.shape[-1] * 2 == d
+    if x_dtype is None:
+        x_dtype = q.dtype
+    if out_dtype is None:
+        out_dtype = x_dtype
+    fake_bits = 16 if at_rest else kv_bits
+    scale = 1.0 / math.sqrt(d)
+    tables = tables.astype(jnp.int32)
+    qpos = jnp.asarray(qpos, jnp.int32)
+
+    def pair(qh, kh, vh, ksh, vsh, tbl, qp):
+        # one (row, KV-head) stream: qh (rep, d); kh/vh (nb, bs, dc);
+        # ksh/vsh (nb, bs, g, 1) or None; tbl (mb,); qp scalar
+        m = jnp.full((rep, 1), kpa.NEG_INF, jnp.float32)
+        l = jnp.zeros((rep, 1), jnp.float32)
+        acc = jnp.zeros((rep, d), jnp.float32)
+        for i in range(mb):
+            bid = jnp.maximum(tbl[i], 0)
+            kk = kpa._dequant_kv_block(
+                kh[bid], None if ksh is None else ksh[bid],
+                packed=packed, fake_bits=fake_bits, kv_group=kv_group,
+                x_dtype=x_dtype)
+            vv = kpa._dequant_kv_block(
+                vh[bid], None if vsh is None else vsh[bid],
+                packed=packed, fake_bits=fake_bits, kv_group=kv_group,
+                x_dtype=x_dtype)
+            kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+            vis = (kpos <= qp) & (tbl[i] >= 0)
+            if window > 0:
+                vis = vis & (kpos > qp - window)
+            m, l, acc = kpa._online_update(qh, kk, vv, vis, m, l, acc, scale)
+        return kpa._finalize(l, acc, out_dtype)
+
+    heads = []
+    for h in range(kvh):
+        kh, vh = k[:, :, h], v[:, :, h]
+        ksh = k_scale[:, :, h] if at_rest else None
+        vsh = v_scale[:, :, h] if at_rest else None
+        fn = (lambda qh, tbl, qp, kh=kh, vh=vh, ksh=ksh, vsh=vsh:
+              pair(qh, kh, vh, ksh, vsh, tbl, qp))
+        heads.append(jax.vmap(fn)(q[:, h], tables, qpos))
+    return jnp.stack(heads, axis=1)
 
 
 def rrs_smooth_gemm_ref(x: jnp.ndarray, w_q: jnp.ndarray, s_g: jnp.ndarray,

@@ -366,6 +366,20 @@ def _cache_bias(qpos: jnp.ndarray, kpos: jnp.ndarray,
     return jnp.where(m, 0.0, NEG_INF)[:, None]
 
 
+# paged decode implementation seam: "kernel" runs the block-table Pallas
+# kernel (kernels/paged_attn.py) for the s == 1 decode step — at-rest
+# dequant fused into its prologue, no gathered logical view in HBM;
+# "gather" forces the legacy gather + dense-attention path (benchmark A/B
+# and fallback).  S > 1 (prefill / verify chunks) always gathers.
+_PAGED_DECODE_IMPL = ["kernel"]  # "kernel" | "gather"
+
+
+def set_paged_decode_impl(impl: str):
+    if impl not in ("kernel", "gather"):
+        raise ValueError(f"unknown paged decode impl: {impl!r}")
+    _PAGED_DECODE_IMPL[0] = impl
+
+
 def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
                       kv_quant_bits: int, kv_group: int, x_dtype,
                       attend_cache: bool = False
@@ -382,6 +396,16 @@ def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
     pos > 0 (radix prefix hit) sees the reused blocks' K/V with zero
     recompute, and a no-hit admission reproduces the dense path's exposed
     key set exactly (extra masked slots soften to exp(-inf) = 0).
+
+    Selection rule (ROADMAP "Paged KV & prefix reuse"): the single-token
+    decode step (s == 1) walks the block table directly in the Pallas
+    kernel — per-block at-rest dequant in the prologue, online softmax,
+    no ``(B, max_blocks·bs, KVH, D)`` intermediate; S > 1 chunks keep the
+    gather + dense path (one materialized view amortized over S queries,
+    and the verify chunk needs dense-softmax bitwise equality with the
+    sequential gather reads).  Both paths expose the identical key set;
+    they differ only in softmax op order (online vs dense), so engine
+    parity across impls is token-identical, not bitwise.
     """
     from repro.core import kvquant
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -409,6 +433,30 @@ def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
         new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
                      "pos": advance_pos(pos, s, offsets),
                      "block_tables": bt}
+    else:
+        ck = kvquant.paged_scatter(cache["k"], k, bt, qpos, valid_q)
+        cv = kvquant.paged_scatter(cache["v"], v, bt, qpos, valid_q)
+        cks = cvs = None
+        new_cache = {"k": ck, "v": cv,
+                     "pos": advance_pos(pos, s, offsets),
+                     "block_tables": bt}
+
+    if s == 1 and _PAGED_DECODE_IMPL[0] == "kernel":
+        # decode step: walk the block table in the Pallas kernel — fused
+        # at-rest dequant, online softmax, zero gathered intermediates.
+        # GQA regroups q so query head j rides KV head j // rep; rows
+        # with no visible key (qpos < 0) come out exactly 0, matching
+        # the gather path's `out * visible` zeroing below.
+        from repro.kernels import paged_attn as kpa
+        qk = q[:, 0].reshape(b, kvh, h // kvh, hd)
+        out = kpa.paged_decode_attn(
+            qk, ck, cv, bt, qpos[:, 0],
+            k_scale=cks, v_scale=cvs,
+            kv_bits=kv_quant_bits, kv_group=kv_group,
+            window=cfg.sliding_window, x_dtype=x_dtype, out_dtype=x_dtype)
+        return out.reshape(b, 1, h, hd).astype(q.dtype), new_cache
+
+    if at_rest:
         gk, gv = kvquant.paged_gather(ck, bt), kvquant.paged_gather(cv, bt)
         if packed:
             gk, gv = quant.unpack_int4(gk), quant.unpack_int4(gv)
@@ -417,11 +465,6 @@ def _paged_cache_attn(q, k, v, cache, cfg: ModelConfig, offsets,
         vv = kvquant.kv_dequantize(
             kvquant.QuantizedKV(gv, kvquant.paged_gather(cvs, bt)), x_dtype)
     else:
-        ck = kvquant.paged_scatter(cache["k"], k, bt, qpos, valid_q)
-        cv = kvquant.paged_scatter(cache["v"], v, bt, qpos, valid_q)
-        new_cache = {"k": ck, "v": cv,
-                     "pos": advance_pos(pos, s, offsets),
-                     "block_tables": bt}
         kk, vv = kvquant.paged_gather(ck, bt), kvquant.paged_gather(cv, bt)
         if kv_quant_bits < 16 and (s == 1 or attend_cache):
             # decode (and the multi-token verify chunk, which must be

@@ -20,7 +20,12 @@ PAGED cache's pooled block arenas (transformer families,
 ``init_cache(..., paged=...)``) have no batch dim — per-row state there
 is the ``pos`` + ``block_tables`` leaves, and row reset is a host-side
 block-table operation (``serve.paging.PagedKVManager``), not a leaf
-reset.
+reset.  The paged SINGLE-TOKEN decode step (s == 1) is shape-
+automatically routed to the Pallas block-table attention kernel
+(``kernels/paged_attn``: walks the table, fused at-rest dequant, online
+softmax, no gathered logical view); S > 1 chunks keep the gather path —
+the seam and an impl override live in
+``models.layers._paged_cache_attn`` / ``set_paged_decode_impl``.
 
 Multi-token VERIFY contract (transformer families; speculative
 decoding, ``serve.spec``): ``step(params, chunk, cache, qcfg,

@@ -339,30 +339,22 @@ class AsyncServingEngine(ServingEngine):
     # -- reporting ---------------------------------------------------------
 
     def server_stats(self) -> Dict[str, object]:
-        """The /stats payload: queue/slot/stream occupancy, drain state,
-        overlap share (overlapped host wall time over overlapped +
-        blocked), spec acceptance rate, KV-cache accounting, and the raw
-        step counters."""
+        """The /stats payload: the base engine's core (occupancy, config,
+        KV-cache + attention-IO accounting, counters) plus the async
+        layer's stream count, drain state and overlap share (overlapped
+        host wall time over overlapped + blocked)."""
         with self._work:
-            st = dict(self.stats)
+            out = super().server_stats()
+            st = out["counters"]
             busy, wait = st["host_overlap_s"], st["device_wait_s"]
-            return {
-                "queue_depth": self.queue_depth(),
-                "active_slots": sum(s is not None for s in self.slots),
+            out.update({
                 "active_streams": len(self._streams),
                 "draining": self._draining,
-                "scheduler": self.scheduler,
-                "cache": self.cache_kind,
-                "spec": self.spec_kind,
-                "prefill_chunk": self.prefill_chunk,
                 "overlap": self.overlap,
                 "overlap_share": (busy / (busy + wait)
                                   if busy + wait > 0 else None),
-                "acceptance_rate": (st["spec_accepted"] / st["spec_proposed"]
-                                    if st["spec_proposed"] else None),
-                "kv_cache": self.kv_cache_stats(),
-                "counters": st,
-            }
+            })
+            return out
 
 
 __all__ = ["AsyncServingEngine", "AdmissionError", "AdmissionPolicy",

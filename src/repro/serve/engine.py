@@ -253,6 +253,7 @@ class ServingEngine:
             storage = qcfg.kv_storage
             if storage == "int8" and qcfg.kv_bits == 4:
                 storage = "int4"               # pack two codes per byte
+            self.kv_storage_kind = storage
             self.pager: Optional[PagedKVManager] = PagedKVManager(
                 max_batch, max_len, BlockPool(nb, block_size),
                 prefix_cache=prefix_cache)
@@ -263,6 +264,7 @@ class ServingEngine:
                                          donate_argnums=(0,))
         else:
             self.pager = None
+            self.kv_storage_kind = qcfg.kv_storage
             self._cache_init, self._cache_axes = model.init_cache(
                 max_batch, max_len)
         # the live cache is a COPY: every cache-threading graph donates
@@ -811,6 +813,78 @@ class ServingEngine:
         out["kv_bytes_peak"] = pool.peak_allocated * per_block
         out.update(self.pager.stats())
         return out
+
+    def attn_io_stats(self) -> Optional[Dict[str, object]]:
+        """Resident-vs-read attention-IO accounting for the paged cache
+        (None for dense): what ONE decode step over the current live
+        rows reads from the KV arena, priced by
+        :func:`repro.kernels.ops.modeled_attn_bytes` for both paths —
+        the block-table kernel (visible blocks only) and the gather
+        fallback (every table slot plus the materialized logical view) —
+        against what the allocated blocks keep resident.  All figures
+        are whole-model (× num_layers) modeled bytes at the live rows'
+        mean context; with no live rows the worst case (full batch at
+        ``max_len``) is reported so an idle /stats still shows the
+        provisioned ratio."""
+        if self.pager is None:
+            return None
+        from repro.kernels import ops as kops
+        from repro.models import layers as mlayers
+        cfg = self.cfg
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if live:
+            b = len(live)
+            ctx = max(1, int(round(
+                sum(int(self.pager.row_pos[i]) for i in live) / b)))
+        else:
+            b, ctx = self.max_batch, self.max_len
+        alloc = int(self.pager.row_alloc_blocks().sum())
+        x_bytes = 4 if "32" in cfg.dtype else 2
+        m = kops.modeled_attn_bytes(
+            b, ctx, kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            block_size=self.pager.block_size,
+            max_blocks=self.pager.max_blocks_per_row,
+            kv_storage=self.kv_storage_kind,
+            group=self.qcfg.kv_group_size, q_heads=cfg.num_heads,
+            x_bytes=x_bytes,
+            alloc_blocks=alloc if alloc else None)
+        L = cfg.num_layers
+        impl = mlayers._PAGED_DECODE_IMPL[0]
+        read = m["kernel_bytes" if impl == "kernel" else "gather_bytes"] * L
+        resident = m["resident_kv_bytes"] * L
+        return {
+            "impl": impl,
+            "kv_storage": self.kv_storage_kind,
+            "live_rows": len(live),
+            "mean_ctx": ctx if live else None,
+            "resident_kv_bytes": resident,
+            "step_read_bytes": read,
+            "step_read_bytes_kernel": m["kernel_bytes"] * L,
+            "step_read_bytes_gather": m["gather_bytes"] * L,
+            "kernel_vs_gather_drop": m["bytes_drop"],
+            "read_vs_resident": read / resident if resident else None,
+        }
+
+    def server_stats(self) -> Dict[str, object]:
+        """The /stats payload core (the async engine layers stream and
+        overlap fields on top): queue/slot occupancy, scheduler/cache
+        configuration, spec acceptance rate, KV-cache memory accounting,
+        the paged attention-IO model, and the raw step counters."""
+        st = dict(self.stats)
+        return {
+            "queue_depth": self.queue_depth(),
+            "active_slots": sum(s is not None for s in self.slots),
+            "scheduler": self.scheduler,
+            "cache": self.cache_kind,
+            "spec": self.spec_kind,
+            "prefill_chunk": self.prefill_chunk,
+            "acceptance_rate": (st["spec_accepted"] / st["spec_proposed"]
+                                if st["spec_proposed"] else None),
+            "kv_cache": self.kv_cache_stats(),
+            "attn_io": self.attn_io_stats(),
+            "counters": st,
+        }
 
 
 def reset_cache_rows(cache, init, axes, mask):

@@ -228,9 +228,20 @@ class PagedKVManager:
 
     # -- reporting --------------------------------------------------------
 
+    def row_alloc_blocks(self) -> np.ndarray:
+        """(max_batch,) number of allocated blocks per row — the
+        contiguous ``id >= 0`` prefix of each table row.  This is the
+        per-row bound the decode kernel's block walk is held to (its
+        ``qpos``-derived visible-block count can never exceed it), and
+        what the engine's ``server_stats`` attention-IO accounting reads
+        to price a decode step: the kernel reads only these blocks, the
+        gather path reads all ``max_blocks_per_row`` table slots."""
+        return (self.tables >= 0).sum(axis=1).astype(np.int64)
+
     def stats(self) -> Dict[str, int]:
         out = dict(self.pool.stats())
         out["parked_slots"] = len(self._parked)
+        out["row_alloc_blocks"] = int(self.row_alloc_blocks().sum())
         if self.radix is not None:
             out.update(self.radix.stats())
         return out

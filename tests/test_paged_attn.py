@@ -1,0 +1,231 @@
+"""Block-table paged-attention decode kernel (kernels/paged_attn):
+interpret-mode parity against the jnp oracle across block sizes, at-rest
+storages (int8 / packed-int4), GQA widths and mixed-progress rows; the
+paged_gather clamp-to-0 poison pin; the jaxpr no-gathered-intermediate
+acceptance check; and the engine-level token-identity chain for the
+at-rest rrs a4w4kv4 path.
+
+Numerics contract (see kernels/paged_attn.py): the kernel and the oracle
+share the dequant / online-update / finalize helpers bit-for-bit, so
+kernel-vs-oracle is EXACT under jit-vs-jit.  The kernel vs the *dense*
+softmax (gather path / dense cache) is only ever argmax-stable, never
+bitwise — the engine chain below pins token identity through the
+paged-gather middleman on the f32-compute model (bf16 logit ulp ≈ the
+online-vs-dense drift, so bf16 near-ties flip; a4 smooth-scale rounding
+makes any drift chaotic — see tests/test_paging.py's pin docstrings).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import kvquant, quant
+from repro.kernels import paged_attn as kpa
+from repro.kernels import ref as kref
+from repro.models import build_model, layers
+from repro.serve.engine import ServingEngine
+
+TINY32 = ModelConfig(name="t32", family="dense", num_layers=2, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                     max_seq_len=256, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle (interpret mode, bit-exact)
+# ---------------------------------------------------------------------------
+
+def _mk_case(b, mb, bs, kvh, rep, d, storage, group, seed=0):
+    """Random full arena + shuffled tables + mixed-progress qpos:
+    row 0 frozen (-1: no visible key), row 1 freshly admitted (one
+    token), row 2 mid-decode (partial tail block), the rest full."""
+    rng = np.random.default_rng(seed)
+    nb = b * mb
+    kf = rng.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    vf = rng.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((b, kvh, rep, d)), jnp.bfloat16)
+    tables = jnp.asarray(rng.permutation(nb).reshape(b, mb), jnp.int32)
+    qpos = np.full((b,), mb * bs - 1, np.int64)
+    qpos[0] = -1
+    if b > 1:
+        qpos[1] = 0
+    if b > 2:
+        qpos[2] = (mb // 2) * bs + bs // 2       # inside a tail block
+    qpos = jnp.asarray(qpos, jnp.int32)
+    if storage == "fake":
+        return (q, jnp.asarray(kf, jnp.bfloat16), jnp.asarray(vf, jnp.bfloat16),
+                None, None, tables, qpos, 4)
+    bits = 8 if storage == "int8" else 4
+    kq = kvquant.kv_quantize(jnp.asarray(kf), bits, group)
+    vq = kvquant.kv_quantize(jnp.asarray(vf), bits, group)
+    kc, vc = kq.codes, vq.codes
+    if storage == "int4":
+        kc, vc = quant.pack_int4(kc), quant.pack_int4(vc)
+    return q, kc, vc, kq.scales, vq.scales, tables, qpos, bits
+
+
+@pytest.mark.parametrize("storage,bs,rep,group", [
+    ("fake", 4, 2, 32),       # QDQ read path, small blocks
+    ("fake", 16, 1, 32),      # rep=1 (MHA-shaped), bigger blocks
+    ("int8", 4, 2, 16),       # at-rest int8, TWO scale groups per head
+    ("int8", 8, 1, 32),
+    ("int4", 4, 2, 32),       # packed nibbles (Dc = D//2)
+    ("int4", 8, 4, 16),       # wide GQA + multi-group scales
+])
+def test_kernel_matches_oracle_bitexact(storage, bs, rep, group):
+    b, mb, kvh, d = 4, 6, 2, 32
+    q, k, v, ks, vs, tables, qpos, bits = _mk_case(
+        b, mb, bs, kvh, rep, d, storage, group)
+    kern = jax.jit(lambda *a: kpa.paged_decode_attn(
+        a[0], a[1], a[2], a[5], a[6], k_scale=a[3], v_scale=a[4],
+        kv_bits=bits, kv_group=group, x_dtype=jnp.bfloat16))
+    orac = jax.jit(lambda *a: kref.paged_attn_decode_ref(
+        a[0], a[1], a[2], a[5], a[6], a[3], a[4],
+        kv_bits=bits, kv_group=group, x_dtype=jnp.bfloat16))
+    args = (q, k, v, ks, vs, tables, qpos)
+    y, yr = kern(*args), orac(*args)
+    assert y.shape == (b, kvh, rep, d)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    # rows with no visible key output exactly 0 (the empty-row contract
+    # that keeps frozen slots out of the batch-global smooth scales)
+    assert bool(jnp.all(y[0] == 0))
+
+
+def test_kernel_sliding_window_matches_oracle():
+    b, mb, bs, kvh, rep, d = 3, 6, 4, 2, 2, 32
+    q, k, v, ks, vs, tables, qpos, bits = _mk_case(
+        b, mb, bs, kvh, rep, d, "fake", 32)
+    for window in (5, 16):
+        kern = jax.jit(lambda qq, kk, vv, tt, pp, w=window:
+                       kpa.paged_decode_attn(qq, kk, vv, tt, pp,
+                                             kv_bits=16, window=w,
+                                             x_dtype=jnp.bfloat16))
+        orac = jax.jit(lambda qq, kk, vv, tt, pp, w=window:
+                       kref.paged_attn_decode_ref(qq, kk, vv, tt, pp,
+                                                  kv_bits=16, window=w,
+                                                  x_dtype=jnp.bfloat16))
+        np.testing.assert_array_equal(
+            np.asarray(kern(q, k, v, tables, qpos)),
+            np.asarray(orac(q, k, v, tables, qpos)))
+
+
+# ---------------------------------------------------------------------------
+# paged_gather: masked-invisible is not masked-unread (satellite pin)
+# ---------------------------------------------------------------------------
+
+def test_paged_gather_unallocated_reads_block0_not_last():
+    """Unallocated table entries (-1) are still READ by the dense gather;
+    a raw -1 would wrap (jnp negative indexing) to the arena's LAST
+    block — aliasing whichever live row owns it.  kvquant.paged_gather
+    clamps to block 0 instead: poison the last block and pin that the
+    -1 slots come back as block 0's contents, never the poison.  (The
+    poison is finite on purpose: the mask only makes these rows
+    invisible downstream via 0-weight, which would NOT scrub NaN/Inf.)"""
+    nb, bs, kvh, d = 5, 4, 2, 8
+    arena = jnp.arange(nb * bs * kvh * d, dtype=jnp.float32).reshape(
+        nb, bs, kvh, d)
+    poison = 1e30
+    arena = arena.at[-1].set(poison)
+    tables = jnp.array([[1, -1, -1], [2, 3, -1]], jnp.int32)
+    out = kvquant.paged_gather(arena, tables)       # (B, mb*bs, kvh, d)
+    out = np.asarray(out.reshape(2, 3, bs, kvh, d))
+    np.testing.assert_array_equal(out[0, 1], np.asarray(arena[0]))
+    np.testing.assert_array_equal(out[0, 2], np.asarray(arena[0]))
+    np.testing.assert_array_equal(out[1, 2], np.asarray(arena[0]))
+    assert not np.any(out == poison)
+    # allocated slots still resolve through the table
+    np.testing.assert_array_equal(out[1, 1], np.asarray(arena[3]))
+
+
+def test_kernel_never_reads_unallocated_blocks():
+    """The kernel's index map clamps past-the-end grid steps to the
+    row's last VISIBLE block, so — unlike the gather — unallocated
+    slots are never fetched at all: poisoning every block outside the
+    rows' chains with NaN leaves the output finite and oracle-exact
+    (the oracle reads clamped block 0, which is inside a chain here,
+    and masks it)."""
+    b, mb, bs, kvh, rep, d = 2, 4, 4, 2, 2, 32
+    rng = np.random.default_rng(3)
+    nb = b * mb
+    kf = rng.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    vf = rng.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    # rows own blocks 0..2 and 4..6; blocks 3 and 7 are NaN-poisoned
+    kf[3] = kf[7] = np.nan
+    vf[3] = vf[7] = np.nan
+    tables = jnp.array([[0, 1, 2, -1], [4, 5, 6, -1]], jnp.int32)
+    qpos = jnp.array([3 * bs - 1, 2 * bs + 1], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, kvh, rep, d)), jnp.bfloat16)
+    k, v = jnp.asarray(kf, jnp.bfloat16), jnp.asarray(vf, jnp.bfloat16)
+    kern = jax.jit(lambda *a: kpa.paged_decode_attn(
+        *a, kv_bits=16, x_dtype=jnp.bfloat16))
+    orac = jax.jit(lambda *a: kref.paged_attn_decode_ref(
+        *a, kv_bits=16, x_dtype=jnp.bfloat16))
+    y = kern(q, k, v, tables, qpos)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(orac(q, k, v, tables, qpos)))
+
+
+# ---------------------------------------------------------------------------
+# the s == 1 decode step lowers to the kernel (acceptance: jaxpr check)
+# ---------------------------------------------------------------------------
+
+def test_decode_jaxpr_has_no_gathered_intermediate():
+    """Under the kernel impl the s == 1 paged step's jaxpr contains NO
+    ``(B, max_blocks·bs, ...)`` logical-view intermediate — the gather
+    never happens, not merely gets masked; the gather impl's jaxpr DOES
+    contain it (differential control)."""
+    model = build_model(TINY32)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig()
+    b, max_len, bs = 2, 32, 4
+    nb = b * (max_len // bs)
+    cache, _ = model.init_cache(b, max_len, paged=(nb, bs))
+    toks = jnp.ones((b, 1), jnp.int32)
+    hd = TINY32.resolved_head_dim
+    view_dims = f"{b},{max_len},{TINY32.num_kv_heads},{hd}]"
+    jxp = {}
+    try:
+        for impl in ("kernel", "gather"):
+            layers.set_paged_decode_impl(impl)
+            jxp[impl] = str(jax.make_jaxpr(
+                lambda p, t, c: model.step(p, t, c, qcfg))(
+                    params, toks, cache))
+    finally:
+        layers.set_paged_decode_impl("kernel")
+    assert view_dims in jxp["gather"]        # the control: gather builds it
+    assert view_dims not in jxp["kernel"]
+    assert "pallas_call" in jxp["kernel"] or "while" in jxp["kernel"]
+
+
+# ---------------------------------------------------------------------------
+# engine: at-rest packed-int4 token-identity chain (rrs a4w4kv4)
+# ---------------------------------------------------------------------------
+
+def test_engine_at_rest_int4_kernel_token_identical_to_gather():
+    """rrs a4w4 + kv_storage="int8"/kv_bits=4 (the engine packs this to
+    the int4 arena): greedy decode under the kernel impl is TOKEN-
+    IDENTICAL to the gather impl on the f32-compute model.  Combined
+    with test_paging.py's bitwise dense≡paged-gather pin this closes
+    the dense ≡ paged-kernel chain for the at-rest quantized arena —
+    the config the kernel's fused dequant prologue exists for."""
+    qcfg = QuantConfig(4, 4, 4, method="rrs", group_size=32,
+                       kv_storage="int8")
+    model = build_model(TINY32)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    prompts = ["abcdef", "ghijkl", "mnopqr"]
+    outs = {}
+    try:
+        for impl in ("gather", "kernel"):
+            layers.set_paged_decode_impl(impl)
+            eng = ServingEngine(model, params, qcfg, max_batch=3,
+                                max_len=64, cache="paged", block_size=8)
+            assert eng.kv_storage_kind == "int4"   # packed at rest
+            for i, p in enumerate(prompts):
+                eng.submit(p, max_new_tokens=4 + 2 * i)
+            done = sorted(eng.run(), key=lambda r: r.rid)
+            assert len(done) == len(prompts)
+            outs[impl] = [r.out_tokens for r in done]
+    finally:
+        layers.set_paged_decode_impl("kernel")
+    assert outs["gather"] == outs["kernel"]
