@@ -1,0 +1,204 @@
+"""Graceful-degradation benchmark: serve a fixed greedy fp workload
+while the fault-injection seam (``repro.serve.faults``) applies
+pressure, and measure what the robustness machinery costs.
+
+Scenarios (one row each in ``results/serve_degradation.json``):
+
+* ``baseline`` — ample pool, no faults; pins the reference outputs and
+  the peak block demand the pressure arms are scaled from;
+* ``pressure_half`` / ``pressure_quarter`` — pool sized to 1/2 and 1/4
+  of the measured peak: KV-pressure preemption engages (victim evict,
+  requeue, radix-bounded resume).  ``identity_ok`` pins the tentpole
+  contract — every completed request's tokens are IDENTICAL to the
+  un-preempted baseline;
+* ``alloc_faults`` — injected allocation failures (Bernoulli rate):
+  admission defers and decode preempts, throughput degrades, nothing
+  hangs;
+* ``nan_quarantine`` — injected non-finite logits: poisoned rows finish
+  ``error`` without contaminating co-batched rows;
+* ``step_crash`` — an injected step-loop exception through the threaded
+  serve loop: every stream terminates with the error sentinel and the
+  pool refcounts return to baseline;
+* ``latency_watchdog`` — an injected stuck step with the watchdog
+  armed: lock-free failure path, bounded detection latency.
+
+EVERY scenario asserts the acceptance criterion: each request reaches a
+definite finish reason (stop | length | error | rejected) — pressure
+and faults degrade goodput, they never wedge the scheduler.
+
+    PYTHONPATH=src python -m benchmarks.serve_degradation [--quick] [--seed N]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serve.async_core import AsyncServingEngine
+from repro.serve.faults import FaultInjector, FaultSpec
+from benchmarks.common import emit
+
+BENCH = ModelConfig(name="degr-bench", family="dense", num_layers=2,
+                    d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                    vocab_size=260, max_seq_len=256, dtype="float32")
+FP = QuantConfig()
+
+TERMINAL = ("stop", "length", "error", "rejected")
+
+
+def workload(n_requests, seed):
+    """Fixed-seed mixed-length queue (same contract as
+    ``serve_throughput.build_queue``): identical across scenarios so
+    pressure arms can pin token identity against the baseline."""
+    rng = np.random.default_rng(seed)
+    lengths = [4, 7, 10, 13]
+    budgets = [6, 14, 22]
+    subs = []
+    for i in range(n_requests):
+        prompt = (1 + rng.integers(0, 200, size=lengths[i % 4])).tolist()
+        subs.append((prompt, budgets[i % 3]))
+    return subs
+
+
+def _finish_counts(done):
+    counts = {}
+    for r in done:
+        counts[r.finish_reason] = counts.get(r.finish_reason, 0) + 1
+    return counts
+
+
+def _row(name, eng, done, dt, baseline=None):
+    undone = [r for r in done
+              if not r.done or r.finish_reason not in TERMINAL]
+    assert not undone, (f"{name}: {len(undone)} requests without a "
+                        "definite finish reason — degradation wedged")
+    ok = [r for r in done if r.finish_reason in ("stop", "length")]
+    identity = None
+    if baseline is not None:
+        ref = {r.rid - baseline["rid0"]: r.out_tokens
+               for r in baseline["done"]}
+        identity = all(r.out_tokens == ref[r.rid - done[0].rid]
+                       for r in sorted(ok, key=lambda r: r.rid))
+    st = eng.stats
+    goodput = sum(len(r.out_tokens) for r in ok)
+    return {
+        "name": f"serve_degradation_{name}",
+        "requests": len(done),
+        "finish": _finish_counts(done),
+        "completed": len(ok),
+        "goodput_tokens": goodput,
+        "wall_s": round(dt, 4),
+        "goodput_tok_s": round(goodput / dt, 2) if dt else None,
+        "preempted": st["preempted"],
+        "requeued": st["requeued"],
+        "quarantined": st["quarantined"],
+        "errored": st["errored"],
+        "crashes": st.get("crashes", 0),
+        "watchdog_fires": st.get("watchdog_fires", 0),
+        "identity_ok": identity,
+        "pool": eng.pager.pool.stats() if eng.pager is not None else None,
+        "faults": eng.faults.describe() if eng.faults is not None else None,
+    }
+
+
+def run_batch(model, params, subs, **kw):
+    """Submit the workload and pump the scheduler inline (the blocking
+    path through the async engine — faults land at step boundaries)."""
+    eng = AsyncServingEngine(model, params, FP, prepare=False,
+                             max_batch=2, max_len=96, cache="paged",
+                             block_size=8, **kw)
+    for p, b in subs:
+        eng.submit(p, max_new_tokens=b)
+    t0 = time.perf_counter()
+    done = eng.run()
+    return eng, sorted(done, key=lambda r: r.rid), time.perf_counter() - t0
+
+
+def run_threaded(model, params, subs, faults=None, **kw):
+    """Serve the workload through the threaded loop — the crash-safe
+    path: a step-loop escape or watchdog fire must still hand every
+    stream a terminal sentinel.  The engine is warmed (jit-compiled)
+    BEFORE the injector and watchdog arm, so a compiling first step is
+    not mistaken for a stuck one and the fault schedule lands on real
+    serving steps."""
+    eng = AsyncServingEngine(model, params, FP, prepare=False,
+                             max_batch=2, max_len=96, cache="paged",
+                             block_size=8, **kw)
+    for p, b in subs:
+        eng.submit(p, max_new_tokens=b)
+    eng.run()                   # warmup: compile every shape, no faults
+    eng.reset_stats()
+    eng.faults = eng.pager.faults = faults
+    eng.start()
+    t0 = time.perf_counter()
+    handles = [eng.stream(p, max_new_tokens=b) for p, b in subs]
+    for h in handles:
+        h.result(timeout=120)
+    dt = time.perf_counter() - t0
+    eng.shutdown(drain=False, timeout=60)
+    return eng, [h.request for h in handles], dt
+
+
+def run(quick: bool = False, seed: int = 0):
+    n_requests = 6 if quick else 12
+    model = build_model(BENCH)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    subs = workload(n_requests, seed)
+    rows = []
+
+    # -- baseline: ample pool, no faults --------------------------------
+    eng, done, dt = run_batch(model, params, subs)
+    peak = eng.pager.pool.peak_allocated
+    base = {"done": done, "rid0": done[0].rid}
+    rows.append(_row("baseline", eng, done, dt))
+    rows[-1]["peak_blocks"] = peak
+
+    # -- KV pressure: pool sized below the measured peak ----------------
+    for frac, label in ((2, "pressure_half"), (4, "pressure_quarter")):
+        nb = max(2, peak // frac)
+        eng, done, dt = run_batch(model, params, subs, num_blocks=nb)
+        rows.append(_row(label, eng, done, dt, baseline=base))
+        rows[-1]["num_blocks"] = nb
+
+    # -- injected allocation failures ------------------------------------
+    eng, done, dt = run_batch(
+        model, params, subs,
+        faults=FaultInjector(seed=seed, pool_exhausted=0.2))
+    rows.append(_row("alloc_faults", eng, done, dt))
+
+    # -- injected non-finite logits --------------------------------------
+    eng, done, dt = run_batch(
+        model, params, subs,
+        faults=FaultInjector(seed=seed, nonfinite_logits=(3, 9)))
+    rows.append(_row("nan_quarantine", eng, done, dt))
+    assert rows[-1]["quarantined"] > 0
+
+    # -- step-loop crash through the threaded serve loop -----------------
+    eng, done, dt = run_threaded(
+        model, params, subs,
+        faults=FaultInjector(seed=seed, step_error=(4,)))
+    rows.append(_row("step_crash", eng, done, dt))
+    assert eng.failed is not None
+    assert eng.pager.pool.allocated_blocks == 0, "crash leaked blocks"
+
+    # -- stuck step caught by the watchdog -------------------------------
+    eng, done, dt = run_threaded(
+        model, params, subs, watchdog_s=0.25,
+        faults=FaultInjector(
+            seed=seed, latency=FaultSpec(at=(3,), duration_s=1.5)))
+    rows.append(_row("latency_watchdog", eng, done, dt))
+    assert eng.stats["watchdog_fires"] >= 1
+    assert eng.pager.pool.allocated_blocks == 0, "watchdog leaked blocks"
+
+    emit(rows, "serve_degradation")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(quick=args.quick, seed=args.seed)

@@ -43,11 +43,14 @@ class Handler(BaseHTTPRequestHandler):
     def log_message(self, fmt, *a):    # quiet: CI parses stdout
         pass
 
-    def _json(self, code: int, payload: dict) -> None:
+    def _json(self, code: int, payload: dict,
+              headers: dict = None) -> None:
         body = json.dumps(payload).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
@@ -55,8 +58,10 @@ class Handler(BaseHTTPRequestHandler):
         eng = type(self).engine
         if self.path == "/healthz":
             draining = eng._draining
-            self._json(503 if draining else 200,
-                       {"ok": not draining, "draining": draining})
+            failed = getattr(eng, "failed", None)
+            self._json(503 if draining or failed else 200,
+                       {"ok": not (draining or failed),
+                        "draining": draining, "failed": failed})
         elif self.path == "/stats":
             self._json(200, eng.server_stats())
         else:
@@ -83,7 +88,15 @@ class Handler(BaseHTTPRequestHandler):
                 temperature=float(body.get("temperature", 0.0)),
                 deadline_s=None if deadline is None else float(deadline))
         except AdmissionError as e:
-            self._json(e.status, {"error": str(e), "retryable": True})
+            # typed refusal taxonomy: 429 queue-full (+ Retry-After),
+            # 413 prompt-too-long, 503 draining/failed, 400 deadline
+            headers = {}
+            retry_after = getattr(e, "retry_after_s", None)
+            if retry_after is not None:
+                headers["Retry-After"] = str(max(1, round(retry_after)))
+            self._json(e.status, {"error": str(e),
+                                  "retryable": e.retryable},
+                       headers=headers)
             return
         except ValueError as e:
             self._json(400, {"error": str(e)})
@@ -100,7 +113,12 @@ class Handler(BaseHTTPRequestHandler):
                 self.wfile.write(f"data: {json.dumps(ev)}\n\n".encode())
                 self.wfile.flush()
             ev = {"done": True, "finish_reason": handle.finish_reason,
-                  "text": handle.text}
+                  "text": handle.text,
+                  # error taxonomy: detail when finish_reason=="error",
+                  # plus how many KV-pressure preemptions the request
+                  # survived (it still completed — observability only)
+                  "error": handle.request.error,
+                  "preemptions": handle.request.preemptions}
             self.wfile.write(f"data: {json.dumps(ev)}\n\n".encode())
             self.wfile.flush()
         except (BrokenPipeError, ConnectionResetError):
@@ -166,8 +184,26 @@ def build_engine(args):
 
 
 def run_smoke(engine) -> None:
-    """In-process CI smoke: one real SSE round-trip + /stats + drain."""
+    """In-process CI smoke: one real SSE round-trip + /stats, then the
+    admission status taxonomy (429 + Retry-After / 413 / 503) + drain."""
+    import urllib.error
     import urllib.request
+
+    from repro.serve.async_core import AdmissionPolicy
+
+    def post(port, payload):
+        """POST /generate; returns (status, headers, body-dict) without
+        raising on 4xx/5xx."""
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/generate",
+            data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=60) as resp:
+                return resp.status, resp.headers, None
+        except urllib.error.HTTPError as e:
+            body = json.loads(e.read() or b"{}")
+            return e.code, e.headers, body
 
     engine.start()
     Handler.engine = engine
@@ -195,7 +231,35 @@ def run_smoke(engine) -> None:
     for key in ("queue_depth", "active_slots", "overlap_share",
                 "kv_cache", "counters"):
         assert key in stats, f"/stats missing {key}"
+
+    # admission taxonomy over real HTTP: swap policies on the live
+    # engine (stream() re-reads self.policy per submit)
+    saved = engine.policy
+    engine.policy = AdmissionPolicy(max_queue=0)
+    code, hdrs, body = post(port, {"prompt": "x", "max_new_tokens": 1})
+    assert code == 429, (code, body)
+    assert int(hdrs["Retry-After"]) >= 1, dict(hdrs)
+    assert body["retryable"] is True, body
+    engine.policy = AdmissionPolicy(max_prompt_tokens=2)
+    code, _, body = post(port, {"prompt": "a prompt clearly longer than "
+                                "two tokens", "max_new_tokens": 1})
+    assert code == 413, (code, body)
+    assert body["retryable"] is False, body
+    engine.policy = saved
+
     engine.drain()
+    # post-drain submits refuse with the retryable 503
+    code, _, body = post(port, {"prompt": "x", "max_new_tokens": 1})
+    assert code == 503, (code, body)
+    assert body["retryable"] is True, body
+    try:
+        with urllib.request.urlopen(f"http://127.0.0.1:{port}/healthz",
+                                    timeout=60) as resp:
+            raise AssertionError(f"/healthz returned {resp.status} "
+                                 "while draining")
+    except urllib.error.HTTPError as e:
+        assert e.code == 503, e.code
+
     httpd.shutdown()
     th.join(10)
     httpd.server_close()
@@ -204,7 +268,8 @@ def run_smoke(engine) -> None:
     assert not engine._streams, "streams left open after drain"
     print(f"HTTP smoke OK: {len(events) - 1} tokens streamed over SSE, "
           f"finish={events[-1]['finish_reason']}, "
-          f"overlap_share={stats['overlap_share']}, clean drain")
+          f"overlap_share={stats['overlap_share']}, "
+          "admission taxonomy 429/413/503 verified, clean drain")
 
 
 def main():

@@ -1,8 +1,14 @@
 """Async serving core: double-buffered scheduler, per-request token
 streams, SLO-aware admission (see ``async_core.engine``)."""
-from repro.serve.async_core.admission import AdmissionError, AdmissionPolicy
+from repro.serve.async_core.admission import (AdmissionError,
+                                              AdmissionPolicy,
+                                              DrainingError,
+                                              InfeasibleDeadlineError,
+                                              PromptTooLongError,
+                                              QueueFullError)
 from repro.serve.async_core.engine import AsyncServingEngine
 from repro.serve.async_core.stream import TokenStream
 
 __all__ = ["AsyncServingEngine", "AdmissionError", "AdmissionPolicy",
-           "TokenStream"]
+           "QueueFullError", "PromptTooLongError", "DrainingError",
+           "InfeasibleDeadlineError", "TokenStream"]

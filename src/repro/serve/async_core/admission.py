@@ -3,14 +3,30 @@
 Admission has two half-lives and this module owns the FAST one:
 
 * **at submit** (here): should the server take this request at all?
-  Reject early — a 503 the client can retry beats a request that sits
-  in the queue past its own deadline.  Checks: drain state, queue
-  depth, deadline feasibility.
+  Reject early — a typed refusal the client can act on beats a request
+  that sits in the queue past its own deadline.  Checks: drain state,
+  queue depth, deadline feasibility.
 * **at the step boundary** (the engine): HOW an accepted request enters
   the batch — the ``prefill_chunk`` token budget splits long prompt
   prefills into chunks riding along with decode steps, so one long
   admission never stalls live rows beyond the budget
   (``ServingEngine._chunk_step``).
+
+Refusals are a small TAXONOMY, not one blanket 503: each subclass
+carries the HTTP status the front-end maps it to and whether retrying
+the SAME request can ever succeed —
+
+====================== ====== ========= ==============================
+error                  status retryable meaning
+====================== ====== ========= ==============================
+QueueFullError         429    yes       backpressure; retry after
+                                        ``retry_after_s``
+PromptTooLongError     413    no        prompt exceeds the admission
+                                        token limit
+DrainingError          503    yes       server draining or failed;
+                                        retry against another replica
+InfeasibleDeadlineError 400   no        deadline expired at submit
+====================== ====== ========= ==============================
 
 Policy objects are immutable; the engine evaluates them under its
 scheduler lock so depth checks cannot race concurrent submitters.
@@ -23,8 +39,41 @@ from typing import Optional
 
 class AdmissionError(RuntimeError):
     """Request refused at submit time; ``status`` maps it onto the HTTP
-    front-end's response code (503 → retryable)."""
+    front-end's response code and ``retryable`` says whether resubmitting
+    the same request can ever succeed (the base class keeps the legacy
+    blanket-503 behaviour for direct raisers)."""
     status = 503
+    retryable = True
+
+
+class QueueFullError(AdmissionError):
+    """Backpressure: the admission queue is at its bound.  Retryable —
+    ``retry_after_s`` is the server's pacing hint (the HTTP front-end
+    sends it as ``Retry-After``)."""
+    status = 429
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
+class PromptTooLongError(AdmissionError):
+    """The prompt exceeds the policy's admission token limit; the same
+    request can never succeed here."""
+    status = 413
+    retryable = False
+
+
+class DrainingError(AdmissionError):
+    """The server is draining (SIGINT) or has failed (crash/watchdog);
+    retry against another replica."""
+    status = 503
+
+
+class InfeasibleDeadlineError(AdmissionError):
+    """The request's SLO deadline was already expired at submit."""
+    status = 400
+    retryable = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,29 +81,35 @@ class AdmissionPolicy:
     """``max_queue``: refuse when this many requests already wait
     unadmitted (None = unbounded).  ``max_prompt_tokens``: refuse
     prompts longer than this before tokenizer-side truncation kicks in
-    (None = engine ``max_len`` rules only)."""
+    (None = engine ``max_len`` rules only).  ``retry_after_s``: pacing
+    hint attached to queue-full refusals."""
     max_queue: Optional[int] = None
     max_prompt_tokens: Optional[int] = None
+    retry_after_s: float = 1.0
 
     def check(self, engine, prompt_len: int,
               deadline_s: Optional[float] = None,
               draining: bool = False) -> None:
-        """Raise :class:`AdmissionError` when the request should be
-        refused; called by ``AsyncServingEngine.stream`` under its
-        scheduler lock."""
+        """Raise the matching :class:`AdmissionError` subclass when the
+        request should be refused; called by
+        ``AsyncServingEngine.stream`` under its scheduler lock."""
         if draining:
-            raise AdmissionError("server is draining")
+            raise DrainingError("server is draining")
         if (self.max_queue is not None
                 and engine.queue_depth() >= self.max_queue):
-            raise AdmissionError(
-                f"admission queue full ({self.max_queue})")
+            raise QueueFullError(
+                f"admission queue full ({self.max_queue})",
+                retry_after_s=self.retry_after_s)
         if (self.max_prompt_tokens is not None
                 and prompt_len > self.max_prompt_tokens):
-            raise AdmissionError(
+            raise PromptTooLongError(
                 f"prompt of {prompt_len} tokens exceeds the "
                 f"{self.max_prompt_tokens}-token admission limit")
         if deadline_s is not None and deadline_s <= 0:
-            raise AdmissionError("deadline already expired at submit")
+            raise InfeasibleDeadlineError(
+                "deadline already expired at submit")
 
 
-__all__ = ["AdmissionError", "AdmissionPolicy"]
+__all__ = ["AdmissionError", "AdmissionPolicy", "QueueFullError",
+           "PromptTooLongError", "DrainingError",
+           "InfeasibleDeadlineError"]

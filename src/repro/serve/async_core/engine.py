@@ -57,6 +57,24 @@ applies the :class:`AdmissionPolicy` before enqueueing.
 sleeping on a condition while idle.  ``drain()`` stops admission
 (queued requests reject, live rows finish, streams flush) — the
 SIGINT path; ``shutdown()`` joins the thread.
+
+**Crash safety.**  The serve loop is wrapped in a catch-everything
+boundary: an unexpected exception in ``step_once`` (or an injected
+``step_error`` fault) marks the engine ``failed``, finishes every
+live/queued request with ``finish_reason="error"``, puts the error
+sentinel on EVERY open stream (no consumer blocks forever), and
+QUIESCES the paged pool — refcounts back to baseline
+(``allocated_blocks == 0``) — before the thread exits.  A
+``watchdog_s`` budget adds a sidecar thread that detects a STUCK step
+(wall clock since the step started); it fires the same failure path
+lock-free — only flags, request marks, and thread-safe stream
+sentinels — so consumers unblock even while the serve thread is still
+wedged inside the step, and the structural teardown runs when (if) the
+step returns.  After failure ``stream()`` refuses with the draining
+error and ``server_stats()["failed"]`` carries the reason.  The
+one-step launch-ahead means a fault detected at a consume (e.g. a
+non-finite row) may ride one extra in-flight step — the same lag the
+EOS path already pays.
 """
 from __future__ import annotations
 
@@ -76,11 +94,20 @@ from repro.serve.async_core.stream import TokenStream
 
 class AsyncServingEngine(ServingEngine):
     def __init__(self, *args, overlap: bool = True,
-                 policy: Optional[AdmissionPolicy] = None, **kw):
+                 policy: Optional[AdmissionPolicy] = None,
+                 watchdog_s: Optional[float] = None, **kw):
         super().__init__(*args, **kw)
         self.overlap = overlap
         self.policy = policy if policy is not None else AdmissionPolicy()
-        self.stats.update({"host_overlap_s": 0.0, "overlapped_steps": 0})
+        # crash-safe loop state: ``failed`` carries the reason once the
+        # loop (or watchdog) gives up; ``watchdog_s`` bounds one step's
+        # wall clock (None = no watchdog thread)
+        self.watchdog_s = watchdog_s
+        self.failed: Optional[str] = None
+        self._step_t0: Optional[float] = None
+        self._watchdog: Optional[threading.Thread] = None
+        self.stats.update({"host_overlap_s": 0.0, "overlapped_steps": 0,
+                           "crashes": 0, "watchdog_fires": 0})
         # the on-device last-token vector the chained launch reads; every
         # sample path merges its (B,) result in, so a launch never needs
         # host-side tokens
@@ -109,11 +136,20 @@ class AsyncServingEngine(ServingEngine):
 
     def _sample_launch(self, logits, rows, counts=None):
         samp = super()._sample_launch(logits, rows, counts)
+        toks_dev, _ = samp
         mask = np.zeros((self.max_batch,), bool)
         mask[rows] = True
-        self._tok_dev = self._merge_fn(self._tok_dev, samp,
+        self._tok_dev = self._merge_fn(self._tok_dev, toks_dev,
                                        jnp.asarray(mask))
         return samp
+
+    def _merge_host_tokens(self, toks) -> None:
+        """Preemption-resume hook: a resumed row's next feed is its last
+        COMMITTED token, not the discarded admission sample the merge in
+        ``_sample_launch`` just wrote — overwrite those rows of the
+        on-device vector with the host values."""
+        for i, t in toks.items():
+            self._tok_dev = self._tok_dev.at[i].set(int(t))
 
     def _chainable_live(self) -> Optional[List[int]]:
         """Rows for a chained launch (decode *t+1* before *t*'s tokens
@@ -142,19 +178,25 @@ class AsyncServingEngine(ServingEngine):
             return None             # admission possible: full pass first
         return live
 
-    def _launch_decode(self, live: List[int]) -> None:
+    def _launch_decode(self, live: List[int]) -> bool:
         """Launch ONE decode for the live rows reading ``_tok_dev`` —
         no host-side token needed, so this can run before the previous
         step's sample is synced.  Sampling is launched (not synced) and
-        the result chained back into ``_tok_dev``."""
+        the result chained back into ``_tok_dev``.  KV pressure
+        preempts (``_ensure_rows_room``) exactly like the blocking
+        path — a victim's in-flight token is simply discarded at the
+        consume (its slot is empty), matching the resume contract that
+        re-prefills everything COMMITTED.  Returns whether a step was
+        launched (False: every row was preempted, no in-flight
+        installed)."""
         bsz = self.max_batch
         if self.pager is not None:
-            grown = np.zeros((bsz,), bool)
-            for i in live:                    # on-demand block growth
-                grown[i] = self.pager.ensure_decode_room(i)
+            live, grown = self._ensure_rows_room(live)
             if grown.any():
                 self._upload_tables(np.zeros((bsz,), bool),
                                     np.zeros((bsz,), np.int32), grown)
+            if not live:
+                return False
         off = np.ones((bsz,), np.int32)
         live_mask = np.zeros((bsz,), bool)
         pend = set(self._inflight[0]) if self._inflight is not None else ()
@@ -177,16 +219,21 @@ class AsyncServingEngine(ServingEngine):
         if self.pager is not None:
             self.pager.advance(live)
         self._inflight = (live, samp, time.perf_counter())
+        return True
 
     def _consume_inflight(self, inflight: tuple) -> None:
         """Sync an in-flight step's sampled tokens and commit them in
         step order.  Rows that finished or cancelled while the step was
         in flight discard their token (the EOS-lag step) and rewind the
-        paged write position the launch advanced."""
+        paged write position the launch advanced; rows whose logits
+        went non-finite QUARANTINE here (finish_reason "error") instead
+        of committing garbage."""
         live, samp, launch_t = inflight
+        toks_dev, fin_dev = samp
         self.stats["host_overlap_s"] += time.perf_counter() - launch_t
         t0 = time.perf_counter()
-        toks = np.asarray(samp)
+        toks = np.asarray(toks_dev)
+        fin = np.asarray(fin_dev)
         self.stats["device_wait_s"] += time.perf_counter() - t0
         self.stats["sync_steps"] += 1
         now = time.perf_counter()
@@ -195,6 +242,11 @@ class AsyncServingEngine(ServingEngine):
             if r is None:
                 continue    # slot reclaimed while the step was in flight
             if r.done or r.cancel_requested or r.expired(now):
+                if self.pager is not None:
+                    self.pager.rollback(i, 1)
+                continue
+            if not fin[i]:
+                self._quarantine(i, r)
                 if self.pager is not None:
                     self.pager.rollback(i, 1)
                 continue
@@ -210,7 +262,8 @@ class AsyncServingEngine(ServingEngine):
         # apples-to-apples stall metric: blocking consumes immediately
         # (sync, THEN host work), overlapped leaves the step in flight
         # for ``step_once`` to chain the next launch ahead of the sync.
-        self._launch_decode(live)
+        if not self._launch_decode(live):
+            return                      # whole batch preempted, no step
         if not self.overlap:
             prev, self._inflight = self._inflight, None
             self._consume_inflight(prev)
@@ -224,11 +277,14 @@ class AsyncServingEngine(ServingEngine):
         if self._inflight is not None:
             live = self._chainable_live()
             if live is not None:
+                self._fault_probe()
                 prev = self._inflight
-                self._launch_decode(live)   # installs the NEW in-flight
+                if not self._launch_decode(live):
+                    self._inflight = None   # all preempted: nothing new
                 self._consume_inflight(prev)
                 finished = self._reclaim()
                 finished += self._cull_queue()
+                finished += self._pop_errored()
                 return finished
             prev, self._inflight = self._inflight, None
             self._consume_inflight(prev)
@@ -243,8 +299,9 @@ class AsyncServingEngine(ServingEngine):
                temperature: float = 0.0,
                deadline_s: Optional[float] = None) -> TokenStream:
         """Submit a request and return its token stream.  Thread-safe;
-        raises :class:`AdmissionError` (HTTP 503) when the admission
-        policy refuses or the server is draining."""
+        raises the matching :class:`AdmissionError` subclass (429 queue
+        full / 413 prompt too long / 503 draining-or-failed / 400
+        infeasible deadline) when the admission policy refuses."""
         ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
         with self._work:
             self.policy.check(self, len(ids), deadline_s=deadline_s,
@@ -273,15 +330,23 @@ class AsyncServingEngine(ServingEngine):
     # -- serve loop --------------------------------------------------------
 
     def start(self) -> None:
-        """Pump the scheduler on a daemon thread; ``stream()`` wakes it."""
+        """Pump the scheduler on a daemon thread; ``stream()`` wakes it.
+        With ``watchdog_s`` set, a sidecar thread watches for a stuck
+        step and fires the failure path."""
         if self._thread is not None:
             raise RuntimeError("serve loop already started")
         self._stopped = False
         self._thread = threading.Thread(target=self._serve_loop,
                                         name="rrs-serve-loop", daemon=True)
         self._thread.start()
+        if self.watchdog_s is not None and self._watchdog is None:
+            self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                              name="rrs-serve-watchdog",
+                                              daemon=True)
+            self._watchdog.start()
 
     def _serve_loop(self) -> None:
+        crashed: Optional[str] = None
         try:
             while True:
                 with self._work:
@@ -292,9 +357,23 @@ class AsyncServingEngine(ServingEngine):
                         break
                     if self._draining and not self._has_work():
                         break
-                    self.step_once()
+                    self._step_t0 = time.perf_counter()
+                    try:
+                        self.step_once()
+                    finally:
+                        self._step_t0 = None
+        except BaseException as e:  # noqa: BLE001 — crash-safe contract:
+            # ANY step-loop escape converts to bounded degradation
+            crashed = f"{type(e).__name__}: {e}"
+            self.stats["crashes"] += 1
         finally:
-            with self._work:   # hard stop / crash: terminate open streams
+            with self._work:
+                if crashed is not None or self.failed is not None:
+                    reason = crashed or self.failed
+                    self._fail(reason)      # idempotent (watchdog may
+                    self._quiesce(reason)   # have fired it already)
+                # normal stop path: straggler streams (never-admitted
+                # requests on a hard stop) terminate "rejected"
                 for st in list(self._streams.values()):
                     r = st.request
                     if not r.done:
@@ -302,6 +381,74 @@ class AsyncServingEngine(ServingEngine):
                         r.finish_reason = r.finish_reason or "rejected"
                     st._finish(r.finish_reason)
                 self._streams.clear()
+
+    def _fail(self, reason: str) -> None:
+        """Flip the engine into the failed state — idempotent and
+        LOCK-FREE, because the watchdog calls it while the serve thread
+        may be wedged INSIDE a step holding the scheduler lock.  Only
+        sets flags, marks requests done with the error taxonomy, and
+        puts the error sentinel on every open stream (SimpleQueue is
+        thread-safe) — so no consumer blocks forever even if the stuck
+        step never returns.  Structural teardown (slot/pool cleanup)
+        is :meth:`_quiesce`, run by the serve thread once it regains
+        control."""
+        if self.failed is None:
+            self.failed = reason
+        self._draining = True       # stream() refuses from here on
+        self._stopped = True
+        for r in list(self.queue) + [s for s in self.slots
+                                     if s is not None]:
+            if not r.done:
+                r.done = True
+                r.finish_reason = "error"
+                r.error = r.error or reason
+        for st in list(self._streams.values()):
+            st._finish(st.request.finish_reason or "error")
+
+    def _quiesce(self, reason: str) -> None:
+        """Crash-path teardown (serve thread, under the lock): clear
+        every slot and queue entry (finishing stragglers with the error
+        taxonomy), drop the in-flight step, terminate remaining
+        streams, and return the paged pool's refcounts to baseline
+        (``PagedKVManager.quiesce`` — ``allocated_blocks == 0``)."""
+        self._inflight = None
+        self._pending_prefill.clear()
+        self._admit_ids.clear()
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if not r.done:
+                r.done, r.finish_reason = True, "error"
+                r.error = r.error or reason
+            self.slots[i] = None
+            if self.spec is not None:
+                self.spec.release(i)
+        for r in self.queue:
+            if not r.done:
+                r.done, r.finish_reason = True, "error"
+                r.error = r.error or reason
+        self.queue.clear()
+        if self.pager is not None:
+            self.pager.quiesce()
+        for st in list(self._streams.values()):
+            st._finish(st.request.finish_reason or "error")
+        self._streams.clear()
+
+    def _watchdog_loop(self) -> None:
+        """Sidecar stuck-step detector: if one ``step_once`` exceeds
+        ``watchdog_s`` of wall clock, fire the lock-free failure path.
+        Pool quiesce then happens when (if) the step returns and the
+        serve thread reaches its crash boundary."""
+        poll = min(0.01, self.watchdog_s / 4)
+        while not self._stopped and self.failed is None:
+            t0 = self._step_t0
+            if (t0 is not None
+                    and time.perf_counter() - t0 > self.watchdog_s):
+                self.stats["watchdog_fires"] += 1
+                self._fail(f"watchdog: step exceeded "
+                           f"{self.watchdog_s:g}s")
+                break
+            time.sleep(poll)
 
     def drain(self) -> None:
         """Stop admitting (new ``stream()`` calls 503, queued requests
@@ -327,6 +474,9 @@ class AsyncServingEngine(ServingEngine):
         if self._thread is not None:
             self._thread.join(timeout)
             self._thread = None
+        if self._watchdog is not None:
+            self._watchdog.join(timeout)
+            self._watchdog = None
 
     def __enter__(self) -> "AsyncServingEngine":
         self.start()
@@ -350,6 +500,7 @@ class AsyncServingEngine(ServingEngine):
             out.update({
                 "active_streams": len(self._streams),
                 "draining": self._draining,
+                "failed": self.failed,
                 "overlap": self.overlap,
                 "overlap_share": (busy / (busy + wait)
                                   if busy + wait > 0 else None),

@@ -8,8 +8,10 @@ per step, speculative decode pushes a 1..k+1 chunk per round, chunked
 prefill pushes the first token when the prompt's last chunk lands.  The
 stream terminates with a sentinel carrying the request's
 ``finish_reason`` ("stop" | "length" | "cancelled" | "expired" |
-"rejected"), after which iteration stops and :attr:`finish_reason` is
-set.
+"rejected" | "error"), after which iteration stops and
+:attr:`finish_reason` is set.  The "error" sentinel is the crash-safe
+contract: numeric quarantine, an engine failure, or a watchdog fire
+all terminate every open stream — a consumer never blocks forever.
 
 Both consumption styles share one queue:
 

@@ -66,6 +66,33 @@ speculative decoding doubles cache traffic, so donation pays twice.
 
 ``serve_step`` (= one decode for the full batch) is the unit the dry-run
 lowers at the assignment's decode shapes.
+
+**Graceful degradation.**  Resource pressure and numeric faults convert
+into bounded, observable degradation — never a crash or a hung stream:
+
+* *KV-pressure preemption* — a paged decode/verify step that cannot
+  grow a row (``PagedKVManager.ensure_room`` raises the typed
+  :class:`~repro.serve.paging.PoolExhausted`) preempts the
+  LATEST-ADMITTED victim row at the step boundary: its blocks return to
+  the pool, the request requeues at the queue head, and re-admission
+  prefills ``prompt + out_tokens[:-1]`` (the radix cache turns the
+  already-indexed chain into block reuse, bounding recompute to the
+  evicted suffix) without re-committing anything — greedy fp outputs
+  are token-identical to an un-preempted run, and temperature sampling
+  resumes on the same per-(request, count) seeds.
+* *Numeric quarantine* — the batch sampler returns a per-row finite
+  flag over the raw logits; a non-finite row finishes with
+  ``finish_reason="error"`` instead of committing garbage, and its slot
+  frees at the next boundary sweep (blocks released, chain NOT indexed
+  into the radix cache) before its embedding keeps feeding the
+  batch-global runtime-smooth scales.
+* *Fault injection* — an optional :class:`~repro.serve.faults.\
+FaultInjector` drives every one of these paths deterministically
+  (pool-exhaustion, step-loop exceptions, NaN logits, latency spikes)
+  so they are testable in CI; see ``tests/test_faults.py``.
+
+The async engine layers the crash-safe serve loop (watchdog, stream
+error sentinels, pool quiesce) on top — see ``serve.async_core``.
 """
 from __future__ import annotations
 
@@ -83,7 +110,8 @@ from repro.core import methods
 from repro.data import tokenizer as tok
 from repro.dist.sharding import batch_dim_of_spec
 from repro.models.model_factory import Model
-from repro.serve.paging import BlockPool, PagedKVManager
+from repro.serve.faults import FaultInjector, InjectedFault
+from repro.serve.paging import BlockPool, PagedKVManager, PoolExhausted
 from repro.serve.prepare import (load_prepared, prepare_params,
                                  prepared_nbytes)
 
@@ -103,8 +131,17 @@ class Request:
     # reclaimed at the next step boundary (finish_reason "expired")
     deadline_s: Optional[float] = None
     # why the request ended: "stop" (EOS) | "length" (budget) |
-    # "cancelled" | "expired" | "rejected" (drained before admission)
+    # "cancelled" | "expired" | "rejected" (drained before admission) |
+    # "error" (numeric quarantine, admission dead-end, or engine
+    # failure — the taxonomy detail lands in ``error``)
     finish_reason: Optional[str] = None
+    # human-readable detail when finish_reason == "error"
+    error: Optional[str] = None
+    # KV-pressure preemptions survived (victim -> requeue -> resume);
+    # a preempted-then-completed request still ends "stop"/"length"
+    preemptions: int = 0
+    # admission sequence number — the latest-admitted-first victim pick
+    admit_order: int = -1
     # latency trail: submit wall-clock + one commit stamp per token
     # (spec decode commits chunks, so stamps may repeat) — the raw
     # material for TTFT / inter-token-latency percentiles
@@ -138,7 +175,8 @@ class ServingEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  spec: Optional[str] = None, spec_k: int = 4,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
@@ -162,7 +200,11 @@ class ServingEngine:
         one long admission never stalls live rows by more than a
         chunk-width step; transformer families without MLA or a
         sliding-window ring.  None (default) keeps the monolithic
-        one-step admission prefill."""
+        one-step admission prefill.  ``faults``: optional
+        :class:`~repro.serve.faults.FaultInjector` — a seeded schedule
+        of injected degradations (pool exhaustion, step errors, NaN
+        logits, latency spikes) for chaos tests and the degradation
+        benchmark; None (default) costs nothing."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if cache not in ("dense", "paged"):
@@ -211,8 +253,16 @@ class ServingEngine:
         self.spec_kind = spec
         self.spec_k = spec_k
         self.prefill_chunk = prefill_chunk
+        self.faults = faults
         self.queue: List[Request] = []
         self._rid = 0
+        self._admit_seq = 0                  # victim-pick admission order
+        # admission ids per seated slot (prompt, or the resumed
+        # prompt+output chain) — what the paged commit indexes
+        self._admit_ids: Dict[int, List[int]] = {}
+        # requests failed outside a slot (admission dead-ends); drained
+        # into step_once's finished list
+        self._errored: List[Request] = []
         self._prepared = prepare or already
         prepared = self._prepared
         step_qcfg = self.target_qcfg if spec is not None else qcfg
@@ -256,7 +306,7 @@ class ServingEngine:
             self.kv_storage_kind = storage
             self.pager: Optional[PagedKVManager] = PagedKVManager(
                 max_batch, max_len, BlockPool(nb, block_size),
-                prefix_cache=prefix_cache)
+                prefix_cache=prefix_cache, faults=faults)
             self._cache_init, self._cache_axes = model.init_cache(
                 max_batch, max_len, kv_storage=storage,
                 paged=(nb, block_size), kv_group=qcfg.kv_group_size)
@@ -280,6 +330,11 @@ class ServingEngine:
                       "spec_proposed": 0, "spec_accepted": 0,
                       "spec_committed": 0, "chunk_steps": 0,
                       "cancelled": 0, "expired": 0,
+                      # graceful degradation: KV-pressure victims,
+                      # their requeues, numeric-quarantine finishes,
+                      # admission dead-end errors
+                      "preempted": 0, "requeued": 0,
+                      "quarantined": 0, "errored": 0,
                       # host stall: wall time blocked syncing sampled
                       # tokens off device (the async engine's overlap
                       # stats add host_overlap_s / overlapped_steps)
@@ -369,7 +424,7 @@ class ServingEngine:
             self.params, jnp.asarray(tokens), self.cache, off_arg)
         self.stats["prefill_steps"] += 1
         for i, r in admit.items():
-            self.slots[i] = r
+            self._seat(i, r)
         self._sample_into(logits, list(admit))
         if self.spec is not None:
             # draft prefill AFTER sampling: the first target sample seeds
@@ -381,33 +436,39 @@ class ServingEngine:
         blocks (their K/V is already resident — NOT recomputed), allocate
         fresh blocks for the rest, and prefill only the suffixes in ONE
         left-padded batched step.  Requests the pool cannot hold are
-        re-queued and retried as blocks free up."""
+        re-queued and retried as blocks free up.
+
+        A PREEMPTED request re-enters here with committed tokens: its
+        prefill chain is ``prompt + out_tokens[:-1]`` (the radix cache
+        turns the previously indexed chain into block reuse), its
+        admission sample is checked but DISCARDED (that logit
+        re-predicts the already-committed last token), and the next
+        decode feeds ``out_tokens[-1]`` — so a resumed greedy fp row is
+        token-identical to one that was never preempted."""
         bsz = self.max_batch
         planned: Dict[int, int] = {}        # slot -> reused token count
+        ids_of: Dict[int, List[int]] = {}   # slot -> prefill chain
         deferred: List[Request] = []
         for i in sorted(admit):
             r = admit[i]
-            reuse = self.pager.admit(i, r.prompt, r.max_new_tokens)
+            ids = self._prefill_ids(r)
+            reuse = self.pager.admit(i, ids, self._budget_left(r))
             if reuse is None:
                 deferred.append(r)
             else:
                 planned[i] = reuse
+                ids_of[i] = ids
         self.queue[:0] = deferred           # retry later, FIFO preserved
         if not planned:
-            if not any(s is not None for s in self.slots):
-                pool = self.pager.pool
-                raise RuntimeError(
-                    f"KV block pool ({pool.num_blocks} blocks x "
-                    f"{pool.block_size} tokens) cannot hold a single "
-                    "queued prompt; raise num_blocks")
+            self._maybe_fail_admission()
             return
-        s_pad = max(len(admit[i].prompt) - planned[i] for i in planned)
+        s_pad = max(len(ids_of[i]) - planned[i] for i in planned)
         tokens = np.zeros((bsz, s_pad), np.int32)
         off = np.full((bsz,), s_pad, np.int32)   # default: fully frozen
         mask = np.zeros((bsz,), bool)
         pos_vals = np.zeros((bsz,), np.int32)
         for i, reuse in planned.items():
-            suffix = admit[i].prompt[reuse:]
+            suffix = ids_of[i][reuse:]
             tokens[i, s_pad - len(suffix):] = suffix
             off[i] = s_pad - len(suffix)
             mask[i] = True
@@ -417,17 +478,32 @@ class ServingEngine:
         logits, self.cache = self._step_fn(
             self.params, jnp.asarray(tokens), self.cache, off_arg)
         self.stats["prefill_steps"] += 1
+        resumed: List[int] = []
         for i, reuse in planned.items():
             r = admit[i]
-            self.slots[i] = r
-            self.pager.commit_prompt(i, r.prompt)
+            self._seat(i, r)
+            self._admit_ids[i] = ids_of[i]
+            if r.out_tokens:
+                resumed.append(i)
             self.stats["prefix_hit_tokens"] += reuse
-            self.stats["prefill_tokens"] += len(r.prompt) - reuse
-        self._sample_into(logits, list(planned))
+            self.stats["prefill_tokens"] += len(ids_of[i]) - reuse
+        # sample (and run the finite guard) BEFORE the radix commit: a
+        # poisoned prefill must never index its chain for sharing;
+        # resumed rows check but do not re-commit
+        self._sample_into(logits, list(planned),
+                          commit_rows=[i for i in planned
+                                       if i not in resumed])
+        clean = [i for i in planned
+                 if self.slots[i].finish_reason != "error"]
+        for i in clean:
+            self.pager.commit_prompt(i, ids_of[i])
+        self._merge_host_tokens(
+            {i: self.slots[i].out_tokens[-1] for i in resumed
+             if self.slots[i].finish_reason != "error"})
         if self.spec is not None:
             # the draft cache is dense and cold: it prefills the FULL
-            # prompt even when the target reused radix prefix blocks
-            self.spec.admit_rows({i: admit[i].prompt for i in planned})
+            # chain even when the target reused radix prefix blocks
+            self.spec.admit_rows({i: ids_of[i] for i in clean})
 
     def _admit_chunked(self, admit: Dict[int, Request]):
         """Chunked admission PLAN: reset/allocate the rows now, defer the
@@ -442,34 +518,34 @@ class ServingEngine:
                 mask[i] = True
             self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
             for i, r in admit.items():
-                self.slots[i] = r
+                self._seat(i, r)
+                self._admit_ids[i] = list(r.prompt)
                 self._pending_prefill[i] = list(r.prompt)
             return
         planned: Dict[int, int] = {}
+        ids_of: Dict[int, List[int]] = {}
         deferred: List[Request] = []
         for i in sorted(admit):
             r = admit[i]
-            reuse = self.pager.admit(i, r.prompt, r.max_new_tokens)
+            ids = self._prefill_ids(r)
+            reuse = self.pager.admit(i, ids, self._budget_left(r))
             if reuse is None:
                 deferred.append(r)
             else:
                 planned[i] = reuse
+                ids_of[i] = ids
         self.queue[:0] = deferred           # retry later, FIFO preserved
         if not planned:
-            if not any(s is not None for s in self.slots):
-                pool = self.pager.pool
-                raise RuntimeError(
-                    f"KV block pool ({pool.num_blocks} blocks x "
-                    f"{pool.block_size} tokens) cannot hold a single "
-                    "queued prompt; raise num_blocks")
+            self._maybe_fail_admission()
             return
         mask = np.zeros((bsz,), bool)
         pos_vals = np.zeros((bsz,), np.int32)
         for i, reuse in planned.items():
             mask[i] = True
             pos_vals[i] = reuse               # row resumes past the hit
-            self.slots[i] = admit[i]
-            self._pending_prefill[i] = list(admit[i].prompt[reuse:])
+            self._seat(i, admit[i])
+            self._admit_ids[i] = ids_of[i]
+            self._pending_prefill[i] = list(ids_of[i][reuse:])
             self.stats["prefix_hit_tokens"] += reuse
         self._upload_tables(mask, pos_vals, mask)
 
@@ -485,12 +561,12 @@ class ServingEngine:
         bsz = self.max_batch
         w = self.prefill_chunk
         if self.pager is not None:
-            grown = np.zeros((bsz,), bool)
-            for i in live:                    # riding decode writes
-                grown[i] = self.pager.ensure_decode_room(i)
+            live, grown = self._ensure_rows_room(live)  # riding decodes
             if grown.any():
                 self._upload_tables(np.zeros((bsz,), bool),
                                     np.zeros((bsz,), np.int32), grown)
+            if not live and not self._pending_prefill:
+                return                        # everything preempted
         tokens = np.zeros((bsz, w), np.int32)
         off = np.full((bsz,), w, np.int32)   # default: fully frozen
         completed: List[int] = []
@@ -513,18 +589,29 @@ class ServingEngine:
         self.stats["slot_steps"] += len(live)
         if self.pager is not None:
             self.pager.advance(live)
-            for i in completed:
-                self.pager.commit_prompt(i, self.slots[i].prompt)
         for i in completed:
             del self._pending_prefill[i]
+        # a completing row with committed tokens is a preemption resume:
+        # its first-token logit re-predicts out_tokens[-1] — check the
+        # finite guard, discard the sample (see _admit_paged)
+        resumed = [i for i in completed if self.slots[i].out_tokens]
         sample_rows = live + completed
         if sample_rows:
-            self._sample_into(logits, sample_rows)
-        if self.spec is not None and completed:
+            self._sample_into(logits, sample_rows,
+                              commit_rows=[i for i in sample_rows
+                                           if i not in resumed])
+        clean = [i for i in completed
+                 if self.slots[i].finish_reason != "error"]
+        if self.pager is not None:
+            for i in clean:   # after the guard: no poisoned radix chains
+                self.pager.commit_prompt(i, self._admit_ids[i])
+        self._merge_host_tokens(
+            {i: self.slots[i].out_tokens[-1] for i in resumed
+             if self.slots[i].finish_reason != "error"})
+        if self.spec is not None and clean:
             # draft prefill AFTER sampling (the monolithic-admission
             # ordering): the first target sample seeds the catch-up
-            self.spec.admit_rows({i: self.slots[i].prompt
-                                  for i in completed})
+            self.spec.admit_rows({i: self._admit_ids[i] for i in clean})
 
     def _upload_tables(self, pos_mask, pos_vals, table_mask):
         """Mirror the host-authoritative block tables into the device
@@ -544,22 +631,174 @@ class ServingEngine:
     def _free_slot(self, i: int, park: bool = True):
         self.slots[i] = None
         self._pending_prefill.pop(i, None)
+        self._admit_ids.pop(i, None)
         if self.pager is not None:
             self.pager.release(i, park=park)
         if self.spec is not None:
             self.spec.release(i)
 
+    # -- graceful degradation ---------------------------------------------
+
+    def _seat(self, i: int, r: Request) -> None:
+        """Install a request in a slot, stamping the admission order the
+        preemption victim pick runs on (latest-admitted first)."""
+        self._admit_seq += 1
+        r.admit_order = self._admit_seq
+        self.slots[i] = r
+
+    @staticmethod
+    def _prefill_ids(r: Request) -> List[int]:
+        """The token chain a (re-)admission prefills: the prompt, plus —
+        after a preemption — every committed token but the LAST (the
+        last one is the next decode's feed, exactly where the row
+        stopped)."""
+        if r.out_tokens:
+            return list(r.prompt) + r.out_tokens[:-1]
+        return list(r.prompt)
+
+    @staticmethod
+    def _budget_left(r: Request) -> int:
+        """Cache writes the row still needs past its prefill chain: the
+        remaining token budget plus one slot to re-feed the last
+        committed token — totals ``len(prompt) + max_new_tokens``, the
+        fresh-admission bound, so resume never over-reserves."""
+        if not r.out_tokens:
+            return r.max_new_tokens
+        return r.max_new_tokens - len(r.out_tokens) + 1
+
+    def _pick_victim(self, avoid: Optional[int] = None) -> Optional[int]:
+        """Latest-admitted occupied slot (skipping ``avoid`` and rows
+        already finished — their blocks free at the boundary sweep
+        anyway), or None when no other victim exists."""
+        best = None
+        for j, r in enumerate(self.slots):
+            if r is None or j == avoid or r.done:
+                continue
+            if best is None or r.admit_order > self.slots[best].admit_order:
+                best = j
+        return best
+
+    def _preempt(self, v: int) -> None:
+        """Evict row ``v`` under KV pressure: release its blocks to the
+        pool (park=False — the victim's refs are the relief), drop any
+        mid-flight chunked prefill, and requeue the request at the HEAD
+        of the queue for re-admission (see :meth:`_prefill_ids` for the
+        resume contract)."""
+        r = self.slots[v]
+        self.slots[v] = None
+        self._pending_prefill.pop(v, None)
+        self._admit_ids.pop(v, None)
+        self.pager.release(v, park=False)
+        if self.spec is not None:
+            self.spec.release(v)
+        r.preemptions += 1
+        self.stats["preempted"] += 1
+        self.stats["requeued"] += 1
+        self.queue.insert(0, r)
+
+    def _ensure_rows_room(self, live: List[int], n_tokens: int = 1):
+        """Grow every live row's block chain for its next ``n_tokens``
+        writes, converting :class:`PoolExhausted` into preemption at
+        this step boundary: evict the latest-admitted victim, retry —
+        preempting the starved row itself when it is the only candidate.
+        Returns ``(surviving live rows, (B,) grown mask)`` for the
+        table re-upload."""
+        grown = np.zeros((self.max_batch,), bool)
+        for i in live:
+            while self.slots[i] is not None:   # may be victimized itself
+                try:
+                    if self.pager.ensure_room(i, n_tokens):
+                        grown[i] = True
+                    break
+                except PoolExhausted:
+                    v = self._pick_victim(avoid=i)
+                    if v is None:
+                        v = i                  # no other victim: evict self
+                    self._preempt(v)
+                    grown[v] = False
+                    if v == i:
+                        break
+        return [i for i in live if self.slots[i] is not None], grown
+
+    def _quarantine(self, i: int, r: Request,
+                    reason: str = "non-finite logits") -> None:
+        """Numeric quarantine: finish row ``i`` with the error taxonomy
+        instead of committing a garbage token.  The boundary sweep frees
+        the slot with park=False (blocks straight back to the pool) so
+        the poisoned row stops feeding the batch-global runtime-smooth
+        scales, and its chain is never indexed into the radix cache."""
+        if r is None or r.done:
+            return
+        r.done = True
+        r.finish_reason = "error"
+        r.error = reason
+        self.stats["quarantined"] += 1
+
+    def _finish_error(self, r: Request, msg: str) -> None:
+        """Fail a request that never (re-)reached a slot — surfaced in
+        step_once's finished list via :meth:`_pop_errored`."""
+        r.done = True
+        r.finish_reason = "error"
+        r.error = msg
+        self.stats["errored"] += 1
+        self._errored.append(r)
+        self._on_finish(r)
+
+    def _pop_errored(self) -> List[Request]:
+        out, self._errored = self._errored, []
+        return out
+
+    def _maybe_fail_admission(self) -> None:
+        """Admission planned nothing and nothing is running: if the
+        head-of-queue prompt can NEVER fit the pool, fail it with the
+        error taxonomy instead of wedging the scheduler; transient
+        shortfalls (injected faults, racing frees) stay queued for
+        retry."""
+        if not self.queue or any(s is not None for s in self.slots):
+            return
+        r = self.queue[0]
+        # minimum viable footprint: the prefill chain PLUS one decode
+        # write — a pool that only fits the prefill can never commit a
+        # token (admit, starve on the next write, self-preempt, repeat),
+        # so refusing it here is what makes re-admission terminate
+        need = -(-(len(self._prefill_ids(r)) + 1) // self.pager.block_size)
+        if need > self.pager.pool.num_blocks:
+            self.queue.pop(0)
+            pool = self.pager.pool
+            self._finish_error(
+                r, f"prompt needs {need} KV blocks but the pool holds "
+                   f"{pool.num_blocks} x {pool.block_size}-token blocks")
+
+    def _merge_host_tokens(self, toks: Dict[int, int]) -> None:
+        """Resume hook: the async engine overwrites its on-device
+        last-token vector with these host values — a resumed row's next
+        feed is its last COMMITTED token, not the discarded admission
+        sample.  No-op on the blocking engine (decode reads host
+        ``out_tokens[-1]`` directly)."""
+
+    def _fault_probe(self) -> None:
+        """One probe per scheduler iteration for the latency-spike and
+        step-error injection sites (the crash-safe loop's triggers)."""
+        if self.faults is None:
+            return
+        self.faults.sleep("latency")
+        if self.faults.fire("step_error"):
+            raise InjectedFault("injected step-loop fault")
+
     def _decode_step(self, live: List[int]):
         """One decode for the full batch; rows not in ``live`` are frozen
-        (offset 1 = their single token is all padding)."""
+        (offset 1 = their single token is all padding).  Paged rows grow
+        their block chains first — KV pressure preempts the
+        latest-admitted victim rather than crashing the step (see
+        :meth:`_ensure_rows_room`)."""
         bsz = self.max_batch
         if self.pager is not None:
-            grown = np.zeros((bsz,), bool)
-            for i in live:                    # on-demand block growth
-                grown[i] = self.pager.ensure_decode_room(i)
+            live, grown = self._ensure_rows_room(live)
             if grown.any():
                 self._upload_tables(np.zeros((bsz,), bool),
                                     np.zeros((bsz,), np.int32), grown)
+            if not live:
+                return                        # everything preempted
         nxt = np.zeros((bsz, 1), np.int32)
         off = np.ones((bsz,), np.int32)
         for i in live:
@@ -583,8 +822,10 @@ class ServingEngine:
 
     def _sample_launch(self, logits, rows: List[int],
                        counts: Optional[Dict[int, int]] = None):
-        """Launch whole-batch sampling on device; returns the (B,)
-        device token array WITHOUT syncing it to host."""
+        """Launch whole-batch sampling on device; returns the device
+        ``(tokens (B,), finite (B,))`` pair WITHOUT syncing it to host
+        — the numeric-quarantine guard rides the same single sync the
+        engine already pays for the tokens."""
         bsz = self.max_batch
         temps = np.zeros((bsz,), np.float32)
         seeds = np.zeros((bsz,), np.uint32)
@@ -593,25 +834,41 @@ class ServingEngine:
             temps[i] = r.temperature
             n = len(r.out_tokens) if counts is None else counts[i]
             seeds[i] = self._seed_for(r, n)
-        return self._sample_fn(logits[:, -1], jnp.asarray(temps),
+        last = logits[:, -1]
+        if self.faults is not None:           # nonfinite_logits site
+            last = self.faults.poison_logits(last, rows)
+        return self._sample_fn(last, jnp.asarray(temps),
                                jnp.asarray(seeds))
 
-    def _sample_commit(self, samp_dev, rows: List[int]):
-        """Sync the sampled (B,) array (the step's single host/device
-        round-trip — timed as host stall) and commit the listed rows'
-        tokens."""
+    def _sample_commit(self, samp_dev, rows: List[int],
+                       commit_rows: Optional[List[int]] = None):
+        """Sync the sampled tokens + finite flags (the step's single
+        host/device round-trip — timed as host stall), QUARANTINE rows
+        whose logits went non-finite, and commit the rest.
+        ``commit_rows`` (default: all of ``rows``) lets a preemption
+        resume run the finite guard on a row without re-committing its
+        already-committed last token."""
+        toks_dev, fin_dev = samp_dev
         t0 = time.perf_counter()
-        toks = np.asarray(samp_dev)
+        toks = np.asarray(toks_dev)
+        fin = np.asarray(fin_dev)
         self.stats["device_wait_s"] += time.perf_counter() - t0
         self.stats["sync_steps"] += 1
         now = time.perf_counter()
+        commit = rows if commit_rows is None else commit_rows
         for i in rows:
-            self._commit(i, self.slots[i], int(toks[i]), now=now)
+            r = self.slots[i]
+            if not fin[i]:
+                self._quarantine(i, r)
+            elif i in commit:
+                self._commit(i, r, int(toks[i]), now=now)
 
-    def _sample_into(self, logits, rows: List[int]):
+    def _sample_into(self, logits, rows: List[int],
+                     commit_rows: Optional[List[int]] = None):
         """Sample the whole batch on device in one jit'd op; append the
         single synced (B,) token array into the listed rows' requests."""
-        self._sample_commit(self._sample_launch(logits, rows), rows)
+        self._sample_commit(self._sample_launch(logits, rows), rows,
+                            commit_rows=commit_rows)
 
     def _commit(self, i: int, r: Request, t: int,
                 now: Optional[float] = None,
@@ -645,9 +902,10 @@ class ServingEngine:
     def _reclaim(self) -> List[Request]:
         """The step-boundary sweep: mark cancelled/expired rows done,
         free every finished row's slot, fire the finish hook.  A
-        cancelled or expired row releases its paged block refs back to
-        the pool (NOT parked: its table never feeds another request's
-        prefix, so the refcount baseline is restored immediately)."""
+        cancelled, expired, or QUARANTINED (finish_reason "error") row
+        releases its paged block refs back to the pool (NOT parked: its
+        table never feeds another request's prefix, so the refcount
+        baseline is restored immediately)."""
         finished: List[Request] = []
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
@@ -663,6 +921,8 @@ class ServingEngine:
                     r.done, r.finish_reason = True, "expired"
                     self.stats["expired"] += 1
                     park = False
+            if r.finish_reason == "error":
+                park = False
             if r.done:
                 if r.finish_reason is None:     # legacy direct .done set
                     r.finish_reason = "stop"
@@ -679,6 +939,9 @@ class ServingEngine:
         now = time.perf_counter()
         keep: List[Request] = []
         for r in self.queue:
+            if r.done:   # failed while queued (crash/watchdog path):
+                culled.append(r)   # stream already finished by _fail
+                continue
             if r.cancel_requested or r.expired(now):
                 r.done = True
                 r.finish_reason = ("cancelled" if r.cancel_requested
@@ -713,11 +976,13 @@ class ServingEngine:
         this step boundary.  ``run`` is a loop over this; the async
         engine pumps it from its serve thread and overlaps the decode
         inside."""
+        self._fault_probe()
         if self.scheduler == "wave":
             return self._step_wave()
         finished = self._reclaim()
         finished += self._cull_queue()
         self._admit_phase()
+        finished += self._pop_errored()
         live = self._live_rows()
         if self._pending_prefill:
             self._chunk_step(live)
@@ -757,6 +1022,7 @@ class ServingEngine:
         live = self._live_rows()
         if not live and not self._pending_prefill and self.queue:
             self._admit(dict(enumerate(self._wave_group())))
+            finished += self._pop_errored()
             live = self._live_rows()
         if self._pending_prefill:
             self._chunk_step(live)
@@ -881,6 +1147,8 @@ class ServingEngine:
             "prefill_chunk": self.prefill_chunk,
             "acceptance_rate": (st["spec_accepted"] / st["spec_proposed"]
                                 if st["spec_proposed"] else None),
+            "faults": (self.faults.describe()
+                       if self.faults is not None else None),
             "kv_cache": self.kv_cache_stats(),
             "attn_io": self.attn_io_stats(),
             "counters": st,
@@ -940,10 +1208,15 @@ def _paged_set_rows(cache, pos_mask, pos_vals, table_mask, tables):
 
 
 def _sample_batch(logits: jnp.ndarray, temps: jnp.ndarray,
-                  seeds: jnp.ndarray) -> jnp.ndarray:
+                  seeds: jnp.ndarray):
     """Whole-batch sampling in one jit'd op: greedy rows take argmax,
-    temperature rows add per-row gumbel noise from their own seed."""
+    temperature rows add per-row gumbel noise from their own seed.
+    Also returns a per-row FINITE flag over the raw logits — the
+    numeric-quarantine guard (a NaN/Inf row must finish with the error
+    taxonomy, not commit a garbage token) rides the same host sync the
+    tokens already pay."""
     logits = logits.astype(jnp.float32)
+    finite = jnp.isfinite(logits).all(axis=-1)
     greedy = jnp.argmax(logits, axis=-1)
 
     def noisy(row, t, seed):
@@ -951,7 +1224,8 @@ def _sample_batch(logits: jnp.ndarray, temps: jnp.ndarray,
         return jnp.argmax(row / jnp.maximum(t, 1e-6) + g)
 
     sampled = jax.vmap(noisy)(logits, temps, seeds)
-    return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+    return (jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32),
+            finite)
 
 
 __all__ = ["ServingEngine", "Request", "prepare_params", "load_prepared"]

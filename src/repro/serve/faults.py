@@ -1,0 +1,140 @@
+"""Deterministic fault-injection seam for the serving stack.
+
+Every graceful-degradation path in the engine — KV-pressure preemption,
+numeric quarantine, the crash-safe serve loop, watchdog recovery — must
+be exercisable in CI without waiting for a real fault.  A
+:class:`FaultInjector` is a seeded schedule of named **sites** the
+serving code probes at well-defined points:
+
+* ``pool_exhausted`` — :meth:`PagedKVManager._alloc` returns None as if
+  the block pool were dry (admission defers / decode preempts a victim);
+* ``step_error`` — the scheduler raises :class:`InjectedFault` at the
+  top of ``step_once`` (the crash-safe serve loop's exception path);
+* ``nonfinite_logits`` — one row of the step's logits is overwritten
+  with NaN before sampling (the numeric-quarantine guard's trigger —
+  exactly what a spike-outlier overflow in the quantized path produces);
+* ``latency`` — the scheduler sleeps ``duration_s`` at a step boundary
+  (a stuck step, the watchdog's trigger).
+
+Schedules are DETERMINISTIC: a site fires at the explicit probe indices
+in ``at`` and/or by a Bernoulli draw from a per-site
+``numpy.random.default_rng`` keyed on ``(seed, crc32(site))`` — the
+same seed always yields the same fault sequence, independent of wall
+clock, so degradation benchmarks and chaos tests are reproducible
+run-to-run.  Probes are counted per site (``probes``) and hits recorded
+(``fired``) for reporting.
+
+The injector is pure host-side bookkeeping; the only device work is the
+``nonfinite_logits`` poke (one ``.at[row].set(nan)`` on the already
+materialized logits).  A ``faults=None`` engine pays nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """An exception raised ON PURPOSE by the fault-injection seam — the
+    chaos suite's stand-in for an unexpected step-loop crash."""
+
+
+SITES = ("pool_exhausted", "step_error", "nonfinite_logits", "latency")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Schedule for one site: fire at the explicit probe indices ``at``
+    (0-based, per site) and/or with probability ``rate`` per probe.
+    ``duration_s`` is the sleep length for latency sites."""
+    rate: float = 0.0
+    at: Tuple[int, ...] = ()
+    duration_s: float = 0.0
+
+
+def _as_spec(v) -> FaultSpec:
+    if isinstance(v, FaultSpec):
+        return v
+    if isinstance(v, (int, float)):
+        return FaultSpec(rate=float(v))
+    return FaultSpec(at=tuple(int(i) for i in v))
+
+
+class FaultInjector:
+    """Seeded, per-site deterministic fault schedule.
+
+    >>> FaultInjector(seed=0, pool_exhausted=0.1,       # 10% of allocs
+    ...               step_error=(12,),                 # 13th step raises
+    ...               latency=FaultSpec(at=(3,), duration_s=0.5))
+    """
+
+    def __init__(self, seed: int = 0, **sites):
+        unknown = set(sites) - set(SITES)
+        if unknown:
+            raise ValueError(f"unknown fault sites {sorted(unknown)}; "
+                             f"known: {SITES}")
+        self.seed = seed
+        self.specs: Dict[str, FaultSpec] = {
+            k: _as_spec(v) for k, v in sites.items() if v is not None}
+        self._rng = {k: np.random.default_rng(
+            [seed, zlib.crc32(k.encode())]) for k in SITES}
+        self.probes = {k: 0 for k in SITES}
+        self.fired = {k: 0 for k in SITES}
+
+    # -- the probe ---------------------------------------------------------
+
+    def fire(self, site: str) -> bool:
+        """One probe of ``site``; returns whether the fault fires here.
+        Advances the site's probe counter (and its RNG when a rate is
+        configured) so schedules stay aligned across runs."""
+        spec = self.specs.get(site)
+        n = self.probes[site]
+        self.probes[site] = n + 1
+        if spec is None:
+            return False
+        hit = n in spec.at
+        if spec.rate > 0.0:
+            hit = bool(self._rng[site].random() < spec.rate) or hit
+        if hit:
+            self.fired[site] += 1
+        return hit
+
+    # -- site-specific helpers --------------------------------------------
+
+    def sleep(self, site: str = "latency") -> bool:
+        """Latency-spike site: sleep ``duration_s`` when scheduled."""
+        spec = self.specs.get(site)
+        if spec is None or not self.fire(site):
+            return False
+        if spec.duration_s > 0.0:
+            time.sleep(spec.duration_s)
+        return True
+
+    def poison_logits(self, logits, rows: Sequence[int]):
+        """``nonfinite_logits`` site: when scheduled, overwrite ONE of
+        ``rows``'s logits with NaN (deterministic round-robin over the
+        hit count) — the quarantine guard must catch it at the sample
+        sync before the garbage token feeds the next step."""
+        if not rows or not self.fire("nonfinite_logits"):
+            return logits
+        import jax.numpy as jnp
+        row = rows[(self.fired["nonfinite_logits"] - 1) % len(rows)]
+        return logits.at[row].set(jnp.nan)
+
+    # -- reporting ---------------------------------------------------------
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "seed": self.seed,
+            "sites": {k: dataclasses.asdict(v)
+                      for k, v in self.specs.items()},
+            "probes": dict(self.probes),
+            "fired": dict(self.fired),
+        }
+
+
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault", "SITES"]

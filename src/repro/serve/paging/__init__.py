@@ -13,8 +13,9 @@ Three host-side pieces (device-side gather/scatter primitives live in
 
 See the ROADMAP "Paged KV & prefix reuse" section for the contract.
 """
-from repro.serve.paging.block_pool import BlockPool
+from repro.serve.paging.block_pool import BlockPool, PoolError, PoolExhausted
 from repro.serve.paging.manager import PagedKVManager
 from repro.serve.paging.radix_cache import RadixNode, RadixPrefixCache
 
-__all__ = ["BlockPool", "RadixPrefixCache", "RadixNode", "PagedKVManager"]
+__all__ = ["BlockPool", "PoolError", "PoolExhausted", "RadixPrefixCache",
+           "RadixNode", "PagedKVManager"]

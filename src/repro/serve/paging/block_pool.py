@@ -21,6 +21,21 @@ from collections import deque
 from typing import Dict, Iterable, List, Optional
 
 
+class PoolError(ValueError):
+    """Misuse of the pool protocol: out-of-range block id, retain of a
+    free block, double release.  Subclasses ValueError so pre-existing
+    callers (and tests) that treated misuse as a ValueError still do."""
+
+
+class PoolExhausted(PoolError):
+    """The pool (after every eviction/reclaim fallback) cannot satisfy a
+    REQUIRED allocation — decode needs a block for its next write and
+    none is free.  This is the typed signal the slot scheduler converts
+    into preemption: catch it at the step boundary, evict a victim row,
+    retry.  Admission-time shortfalls never raise this (``alloc``/
+    ``admit`` return None and the request stays queued)."""
+
+
 class BlockPool:
     """Host-side allocator over a fixed arena of ``num_blocks`` KV blocks
     of ``block_size`` tokens each (ids ``0..num_blocks-1``)."""
@@ -75,20 +90,35 @@ class BlockPool:
         self.peak_allocated = max(self.peak_allocated, self.allocated_blocks)
         return ids
 
-    def retain(self, ids: Iterable[int]) -> None:
-        """Add a reference to already-allocated blocks (prefix sharing)."""
+    def _validate(self, ids: Iterable[int], op: str) -> List[int]:
+        """Check EVERY id (in range, currently allocated) before any
+        refcount is touched, so a bad batch leaves the pool unchanged
+        instead of IndexError-ing (or double-freeing) mid-update."""
+        ids = list(ids)
         for i in ids:
-            if self._ref[i] <= 0:
-                raise ValueError(f"retain of free block {i}")
+            if not 0 <= i < self.num_blocks:
+                raise PoolError(f"{op} of out-of-range block {i} "
+                                f"(pool has {self.num_blocks})")
+        need = 1 if op == "retain" else None   # release: whole batch must fit
+        for i in ids:
+            if self._ref[i] < (need or ids.count(i)):
+                raise PoolError(f"{op} of free block {i}")
+        return ids
+
+    def retain(self, ids: Iterable[int]) -> None:
+        """Add a reference to already-allocated blocks (prefix sharing).
+        Raises :class:`PoolError` — with the pool untouched — if any id
+        is out of range or free."""
+        for i in self._validate(ids, "retain"):
             self._ref[i] += 1
 
     def release(self, ids: Iterable[int]) -> int:
         """Drop one reference per id; blocks hitting refcount 0 return to
-        the free list.  Returns how many blocks were actually freed."""
+        the free list.  Returns how many blocks were actually freed.
+        Raises :class:`PoolError` — with the pool untouched — if any id
+        is out of range or already free (double release)."""
         freed = 0
-        for i in ids:
-            if self._ref[i] <= 0:
-                raise ValueError(f"release of free block {i}")
+        for i in self._validate(ids, "release"):
             self._ref[i] -= 1
             if self._ref[i] == 0:
                 self._free.append(i)

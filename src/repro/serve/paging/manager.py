@@ -40,15 +40,16 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.paging.block_pool import BlockPool
+from repro.serve.paging.block_pool import BlockPool, PoolExhausted
 from repro.serve.paging.radix_cache import RadixNode, RadixPrefixCache
 
 
 class PagedKVManager:
     def __init__(self, max_batch: int, max_len: int, pool: BlockPool,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, faults=None):
         bs = pool.block_size
         self.pool = pool
+        self.faults = faults            # optional FaultInjector seam
         self.block_size = bs
         self.max_len = max_len
         self.max_blocks_per_row = -(-max_len // bs)
@@ -68,6 +69,8 @@ class PagedKVManager:
         fallbacks (cheapest memory first: evicting an idle chain loses a
         possible future hit, reclaiming a parked slot only perturbs a
         frozen row's garbage)."""
+        if self.faults is not None and self.faults.fire("pool_exhausted"):
+            return None                 # injected: pretend the pool is dry
         if n > self.pool.free_blocks and self.radix is not None:
             self.radix.evict_until(n)
         if n > self.pool.free_blocks and self._parked:
@@ -94,7 +97,15 @@ class PagedKVManager:
     def admit(self, slot: int, prompt: Sequence[int],
               max_new_tokens: int) -> Optional[int]:
         """Plan one admission; returns the reused (skipped-prefill) token
-        count or None if the pool cannot hold the prompt's fresh blocks."""
+        count or None if the pool cannot hold the prompt's fresh blocks.
+
+        The plan reserves the prompt PLUS the first decode write
+        (``max_new_tokens >= 1`` means that position is always written):
+        seating a row whose chain holds exactly the prompt but whose
+        next write needs a block the pool can never supply would starve
+        at ``ensure_room`` forever — admit/preempt livelock under a
+        minimal pool — so viability is decided here, before the slot is
+        taken."""
         bs = self.block_size
         if len(prompt) + max_new_tokens > self.max_len:
             raise ValueError(
@@ -107,7 +118,7 @@ class PagedKVManager:
         pinned = (self.radix.match_and_lock(prompt, usable_blocks)
                   if self.radix is not None else [])
         reuse = len(pinned) * bs
-        need = -(-len(prompt) // bs) - len(pinned)
+        need = -(-(len(prompt) + 1) // bs) - len(pinned)
         fresh = self._alloc(need)
         if fresh is None:
             if self.radix is not None:
@@ -135,9 +146,20 @@ class PagedKVManager:
         (positions ``row_pos .. row_pos + n_tokens - 1``); returns
         whether any block was allocated (the engine re-uploads grown
         rows).  ``n_tokens > 1`` is the speculative verify chunk —
-        decode is the ``n_tokens=1`` case.  Raises when the pool (after
-        eviction and reclaim) is exhausted — over-committed admission
-        policy is the engine's to tune, this is the backstop."""
+        decode is the ``n_tokens=1`` case.
+
+        Raises :class:`PoolExhausted` when the pool (after eviction and
+        reclaim) cannot supply a needed block.  This is the typed
+        preemption signal of the over-commit protocol: the engine
+        catches it at the step boundary, preempts the latest-admitted
+        victim row (releasing its blocks, requeueing its request for
+        re-admission, where the radix cache bounds the recompute to the
+        evicted suffix), and retries — pressure degrades throughput, it
+        never crashes the step loop.  A partially grown row is safe to
+        preempt or retry: each allocated block is recorded in the
+        table/ownership before the raise, so refcounts stay exact.
+        Overflowing ``max_len`` is a plain RuntimeError — a planning
+        bug, not pressure."""
         first = int(self.row_pos[slot]) // self.block_size
         last = (int(self.row_pos[slot]) + n_tokens - 1) // self.block_size
         if last >= self.max_blocks_per_row:
@@ -149,10 +171,10 @@ class PagedKVManager:
                 continue
             ids = self._alloc(1)
             if ids is None:
-                raise RuntimeError(
+                raise PoolExhausted(
                     "KV block pool exhausted mid-decode "
                     f"({self.pool.num_blocks} blocks x {self.block_size} "
-                    "tokens); raise num_blocks or lower concurrency")
+                    "tokens); preempt a row or raise num_blocks")
             self.tables[slot, lb] = ids[0]
             self._owned[slot].append(ids[0])
             grown = True
@@ -225,6 +247,20 @@ class PagedKVManager:
             self._drop_holdings(slot)
         self.tables[slot, :] = -1
         self.row_pos[slot] = 0
+
+    def quiesce(self) -> None:
+        """Crash-path teardown: drop EVERY holding — all slots' refs and
+        pins (parked or live) and the whole radix index — returning the
+        pool's refcounts to baseline (``allocated_blocks == 0``).  Used
+        by the crash-safe serve loop after a failed step so a wedged
+        engine never strands blocks; the device arenas are untouched
+        (stale contents are unreachable once the tables are cleared)."""
+        for slot in range(self.tables.shape[0]):
+            self._drop_holdings(slot)
+        if self.radix is not None:
+            self.radix.evict_until(self.pool.num_blocks)
+        self.tables[:, :] = -1
+        self.row_pos[:] = 0
 
     # -- reporting --------------------------------------------------------
 

@@ -92,6 +92,17 @@ class SpecController:
         bsz = eng.max_batch
         reqs = eng.slots
 
+        # 0. room for the k+1 verify writes, BEFORE any draft work: KV
+        # pressure preempts the latest-admitted victim at this boundary
+        # (PoolExhausted -> requeue) instead of crashing mid-round
+        if eng.pager is not None:
+            live, grown = eng._ensure_rows_room(live, k + 1)
+            if grown.any():
+                eng._upload_tables(np.zeros((bsz,), bool),
+                                   np.zeros((bsz,), np.int32), grown)
+            if not live:
+                return                       # everything preempted
+
         # 1. draft k proposals per live row
         temps = np.zeros((bsz,), np.float32)
         dseeds = np.zeros((bsz,), np.uint32)
@@ -111,15 +122,14 @@ class SpecController:
             chunk[i, 0] = reqs[i].out_tokens[-1]
             chunk[i, 1:] = toks[i]
             off[i] = 0
-        if eng.pager is not None:
-            grown = np.zeros((bsz,), bool)
-            for i in live:
-                grown[i] = eng.pager.ensure_room(i, k + 1)
-            if grown.any():
-                eng._upload_tables(np.zeros((bsz,), bool),
-                                   np.zeros((bsz,), np.int32), grown)
         logits, eng.cache = self._verify_fn(
             eng.params, jnp.asarray(chunk), eng.cache, jnp.asarray(off))
+        if eng.faults is not None:   # nonfinite_logits injection site
+            logits = eng.faults.poison_logits(logits, live)
+        # per-row finite guard over the whole verify chunk: a poisoned
+        # row commits NOTHING this round (appended=0 rewinds its cache
+        # positions to pre-verify) and finishes with the error taxonomy
+        fin = np.asarray(jnp.isfinite(logits).all(axis=(1, 2)))
         if not temps.any():          # all-greedy round: skip the
             out_d, acc_d = self._greedy_fn(logits, jnp.asarray(toks))
         else:                        # rejection-sampling machinery
@@ -140,14 +150,17 @@ class SpecController:
             r = reqs[i]
             base = len(r.prompt) + len(r.out_tokens) - 1  # cache pos pre-verify
             appended = 0
-            for j in range(int(acc_np[i]) + 1):
-                t = int(out_np[i, j])
-                appended += 1
-                # the engine's single commit point: latency stamps,
-                # EOS/budget completion, stream hooks (one multi-token
-                # chunk commits under one timestamp)
-                if eng._commit(i, r, t, now=now, from_spec=True):
-                    break
+            if not fin[i]:
+                eng._quarantine(i, r)
+            else:
+                for j in range(int(acc_np[i]) + 1):
+                    t = int(out_np[i, j])
+                    appended += 1
+                    # the engine's single commit point: latency stamps,
+                    # EOS/budget completion, stream hooks (one
+                    # multi-token chunk commits under one timestamp)
+                    if eng._commit(i, r, t, now=now, from_spec=True):
+                        break
             # 4a. target-cache rewind plan: keep exactly the committed run
             mask[i] = True
             tgt_pos[i] = base + appended

@@ -133,7 +133,7 @@ class DraftRunner:
             # sampled tokens stay ON DEVICE through the k-step loop —
             # the next forward consumes them directly, and the single
             # host sync happens once on the stacked proposals
-            tj = self._sample_fn(last, temps_d, sj)          # (B,) int32
+            tj, _ = self._sample_fn(last, temps_d, sj)       # (B,) int32
             out_cols.append(tj)
             if j + 1 < k:
                 logits, self.cache = self._step_fn(

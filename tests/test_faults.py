@@ -1,0 +1,380 @@
+"""Chaos suite (ISSUE 8): the deterministic fault-injection seam and
+every graceful-degradation path it drives.
+
+* injector determinism — same seed, same fault schedule;
+* typed pool protocol — ``PoolError`` validate-before-mutate,
+  ``PoolExhausted`` as the preemption signal;
+* KV-pressure preemption — a pool sized below peak demand preempts and
+  resumes; greedy fp outputs stay token-identical to an un-preempted
+  run (the resume contract);
+* numeric quarantine — a NaN-poisoned row finishes ``error`` without
+  contaminating co-batched rows or the radix prefix cache;
+* crash-safe serve loop — an injected step-loop exception (and a
+  watchdog-detected stuck step) terminates every stream with the error
+  sentinel and returns the paged pool's refcounts to baseline;
+* admission taxonomy — typed refusals with HTTP statuses;
+* cancel racing a still-queued request (satellite 3).
+"""
+import types
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serve.paging import (BlockPool, PagedKVManager, PoolError,
+                                PoolExhausted)
+from repro.serve.async_core import (AdmissionError, AdmissionPolicy,
+                                    AsyncServingEngine, DrainingError,
+                                    InfeasibleDeadlineError,
+                                    PromptTooLongError, QueueFullError)
+
+TINY = ModelConfig(name="t32", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256, dtype="float32")
+FP = QuantConfig()
+
+PROMPTS = ["abcdef", "ghijkl", "mnopqr", "stuvwx"]
+BUDGETS = [10, 8, 12, 6]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run_blocking(model, params, subs, **kw):
+    eng = ServingEngine(model, params, FP, **kw)
+    for p, b in subs:
+        eng.submit(p, max_new_tokens=b)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# the injector itself
+# ---------------------------------------------------------------------------
+
+def test_injector_deterministic_schedule():
+    """Same seed -> identical fire sequence; ``at`` indices fire
+    exactly; probes/fired are counted for reporting."""
+    a = FaultInjector(seed=7, pool_exhausted=0.3)
+    b = FaultInjector(seed=7, pool_exhausted=0.3)
+    seq_a = [a.fire("pool_exhausted") for _ in range(64)]
+    seq_b = [b.fire("pool_exhausted") for _ in range(64)]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)
+    c = FaultInjector(seed=8, pool_exhausted=0.3)
+    assert [c.fire("pool_exhausted") for _ in range(64)] != seq_a
+
+    d = FaultInjector(seed=0, step_error=(2, 5))
+    hits = [i for i in range(8) if d.fire("step_error")]
+    assert hits == [2, 5]
+    assert d.probes["step_error"] == 8 and d.fired["step_error"] == 2
+    desc = d.describe()
+    assert desc["seed"] == 0 and desc["sites"]["step_error"]["at"] == (2, 5)
+
+    # unconfigured sites never fire; unknown site names are a hard error
+    assert not any(d.fire("latency") for _ in range(16))
+    with pytest.raises(ValueError):
+        FaultInjector(seed=0, not_a_site=0.5)
+
+
+def test_injector_poison_logits_round_robin():
+    import jax.numpy as jnp
+    inj = FaultInjector(seed=0, nonfinite_logits=(0, 1))
+    logits = jnp.zeros((4, 8))
+    out = inj.poison_logits(logits, [1, 3])
+    assert bool(jnp.isnan(out[1]).all()) and bool(jnp.isfinite(out[3]).all())
+    out2 = inj.poison_logits(logits, [1, 3])   # second hit -> next row
+    assert bool(jnp.isnan(out2[3]).all())
+    # schedule exhausted: logits pass through untouched
+    out3 = inj.poison_logits(logits, [1, 3])
+    assert bool(jnp.isfinite(out3).all())
+
+
+# ---------------------------------------------------------------------------
+# typed pool protocol (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_pool_validates_before_mutating():
+    """retain/release validate EVERY id before touching refcounts: a
+    partially-valid batch fails typed and leaves the pool unchanged."""
+    pool = BlockPool(num_blocks=4, block_size=8)
+    ids = pool.alloc(2)
+    snap = list(pool._ref)
+
+    with pytest.raises(PoolError):
+        pool.release([ids[0], 99])          # out of range
+    with pytest.raises(PoolError):
+        pool.retain([ids[1], -1])
+    free = [b for b in range(4) if b not in ids][0]
+    with pytest.raises(PoolError):
+        pool.retain([ids[0], free])         # retain of a free block
+    with pytest.raises(PoolError):
+        pool.release([ids[0], ids[0]])      # dup release past refcount 1
+    assert list(pool._ref) == snap          # nothing mutated
+
+    # double release is typed (and still a ValueError for old callers)
+    pool.release([ids[0]])
+    with pytest.raises(ValueError):
+        pool.release([ids[0]])
+    assert pool.refcount(ids[1]) == 1 and pool.free_blocks == 3
+
+
+def test_manager_raises_typed_pool_exhausted():
+    pool = BlockPool(num_blocks=2, block_size=4)
+    mgr = PagedKVManager(max_batch=2, max_len=64, pool=pool,
+                         prefix_cache=False)
+    assert mgr.admit(0, [1, 2, 3, 4, 5], max_new_tokens=8) is not None
+    mgr.commit_prompt(0, [1, 2, 3, 4, 5])
+    with pytest.raises(PoolExhausted) as ei:
+        for _ in range(16):
+            mgr.ensure_room(0, 4)
+            mgr.advance([0])
+    assert isinstance(ei.value, PoolError)
+    mgr.quiesce()
+    assert pool.allocated_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# KV-pressure preemption
+# ---------------------------------------------------------------------------
+
+def test_preemption_identity_blocking(tiny):
+    """A pool sized below peak demand preempts (latest-admitted victim,
+    release, requeue, resume) — and greedy fp outputs are TOKEN
+    IDENTICAL to a run that never felt pressure."""
+    model, params = tiny
+    subs = list(zip(PROMPTS, BUDGETS))
+    kw = dict(max_batch=2, max_len=96, cache="paged", block_size=8)
+    _, ref = _run_blocking(model, params, subs, **kw)
+
+    eng, done = _run_blocking(model, params, subs, num_blocks=3, **kw)
+    assert eng.stats["preempted"] > 0, "pool was not actually scarce"
+    assert eng.stats["requeued"] == eng.stats["preempted"]
+    assert [r.out_tokens for r in done] == [r.out_tokens for r in ref]
+    assert all(r.finish_reason in ("stop", "length") for r in done)
+    assert sum(r.preemptions for r in done) == eng.stats["preempted"]
+
+
+def test_preemption_identity_async_streams(tiny):
+    """Same pin through the async double-buffered engine: a preempted
+    row's in-flight token is discarded and the resume re-feeds the last
+    COMMITTED token, so streams match the pressure-free reference."""
+    model, params = tiny
+    subs = list(zip(PROMPTS, BUDGETS))
+    kw = dict(max_batch=2, max_len=96, cache="paged", block_size=8)
+    _, ref = _run_blocking(model, params, subs, **kw)
+
+    eng = AsyncServingEngine(model, params, FP, num_blocks=3, **kw)
+    handles = [eng.stream(p, max_new_tokens=b) for p, b in subs]
+    eng.run()
+    assert eng.stats["preempted"] > 0, "pool was not actually scarce"
+    assert ([h.result(timeout=5) for h in handles]
+            == [r.out_tokens for r in ref])
+    assert all(h.finish_reason in ("stop", "length") for h in handles)
+
+
+def test_injected_pool_faults_still_terminate(tiny):
+    """With allocation failures injected at a 30% rate, every request
+    still reaches a DEFINITE finish reason — transient shortfalls defer
+    admission or preempt, they never wedge or crash the loop."""
+    model, params = tiny
+    inj = FaultInjector(seed=2, pool_exhausted=0.3)
+    eng = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        cache="paged", block_size=8, faults=inj)
+    for p, b in zip(PROMPTS, BUDGETS):
+        eng.submit(p, max_new_tokens=b)
+    done = eng.run()
+    assert len(done) == len(PROMPTS)
+    assert all(r.done and r.finish_reason in ("stop", "length", "error")
+               for r in done)
+    assert inj.fired["pool_exhausted"] > 0
+    assert eng.server_stats()["faults"]["fired"]["pool_exhausted"] > 0
+
+
+def test_impossible_prompt_errors_not_wedges(tiny):
+    """A prompt that can NEVER fit the pool fails with the error
+    taxonomy instead of wedging the scheduler."""
+    model, params = tiny
+    eng = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        cache="paged", block_size=8, num_blocks=2)
+    eng.submit(list(range(1, 41)), max_new_tokens=4)    # needs 5 blocks
+    (r,) = eng.run()
+    assert r.finish_reason == "error" and "KV blocks" in r.error
+    assert eng.stats["errored"] == 1
+
+
+# ---------------------------------------------------------------------------
+# numeric quarantine
+# ---------------------------------------------------------------------------
+
+def test_nan_quarantine_isolates_row(tiny):
+    """A NaN-poisoned decode step quarantines exactly the poisoned row
+    (finish ``error``, no garbage token committed); co-batched rows'
+    outputs are untouched — identical to the fault-free reference."""
+    model, params = tiny
+    subs = [(p, 8) for p in PROMPTS[:3]]
+    kw = dict(max_batch=3, max_len=96)
+    _, ref = _run_blocking(model, params, subs, **kw)
+
+    inj = FaultInjector(seed=0, nonfinite_logits=(3,))
+    eng = ServingEngine(model, params, FP, faults=inj, **kw)
+    for p, b in subs:
+        eng.submit(p, max_new_tokens=b)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+
+    errored = [r for r in done if r.finish_reason == "error"]
+    assert len(errored) == 1 and errored[0].error == "non-finite logits"
+    assert eng.stats["quarantined"] == 1
+    for r, ref_r in zip(done, ref):
+        if r.finish_reason != "error":
+            assert r.out_tokens == ref_r.out_tokens
+        else:   # quarantined before its budget — garbage never committed
+            assert len(r.out_tokens) < len(ref_r.out_tokens)
+
+
+def test_admission_nan_skips_radix_indexing(tiny):
+    """A NaN at the ADMISSION sample quarantines before
+    ``commit_prompt``, so the poisoned chain is never indexed into the
+    radix prefix cache — a clean resubmit of the same prompt recomputes
+    and matches the fault-free reference."""
+    model, params = tiny
+    kw = dict(max_batch=2, max_len=96, cache="paged", block_size=8)
+    _, ref = _run_blocking(model, params, [("abcdef", 8)], **kw)
+
+    inj = FaultInjector(seed=0, nonfinite_logits=(0,))
+    eng = ServingEngine(model, params, FP, faults=inj, **kw)
+    eng.submit("abcdef", max_new_tokens=8)
+    (bad,) = eng.run()
+    assert bad.finish_reason == "error" and bad.out_tokens == []
+    assert eng.pager.radix is not None
+    eng.submit("abcdef", max_new_tokens=8)      # schedule exhausted now
+    (good,) = eng.run()
+    assert good.finish_reason in ("stop", "length")
+    assert good.out_tokens == ref[0].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# crash-safe serve loop
+# ---------------------------------------------------------------------------
+
+def test_step_crash_fails_engine_and_drains(tiny):
+    """An unexpected step-loop exception: every open stream terminates
+    with the ``error`` sentinel (no consumer blocks forever), the
+    engine surfaces ``failed``, and the paged pool's refcounts return
+    to baseline."""
+    model, params = tiny
+    inj = FaultInjector(seed=0, step_error=(2,))
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             cache="paged", block_size=8, faults=inj)
+    eng.start()
+    handles = [eng.stream(p, max_new_tokens=32) for p in PROMPTS[:3]]
+    for h in handles:
+        h.result(timeout=60)
+    assert all(h.finish_reason == "error" for h in handles)
+    assert all(h.request.error for h in handles)
+    assert eng.failed is not None and "InjectedFault" in eng.failed
+    assert eng.stats["crashes"] == 1
+    with pytest.raises(AdmissionError):         # failed == draining
+        eng.stream("abcdef", max_new_tokens=4)
+    # structural teardown (_quiesce) runs on the serve thread as it
+    # unwinds — join it before pinning the pool back to baseline
+    eng.shutdown(drain=False, timeout=30)
+    assert eng._thread is None
+    assert eng.pager.pool.allocated_blocks == 0
+    assert eng.server_stats()["failed"] == eng.failed
+
+
+def test_watchdog_detects_stuck_step(tiny):
+    """A stuck step (injected latency spike >> ``watchdog_s``) fires
+    the lock-free watchdog path: streams get the error sentinel WHILE
+    the step is still wedged, and teardown completes once the serve
+    thread returns."""
+    model, params = tiny
+    inj = FaultInjector(seed=0,
+                        latency=FaultSpec(at=(1,), duration_s=1.0))
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             cache="paged", block_size=8, faults=inj,
+                             watchdog_s=0.2)
+    eng.start()
+    handles = [eng.stream(p, max_new_tokens=32) for p in PROMPTS[:2]]
+    for h in handles:
+        h.result(timeout=60)
+    assert all(h.finish_reason == "error" for h in handles)
+    assert eng.stats["watchdog_fires"] >= 1
+    assert eng.failed is not None and "watchdog" in eng.failed
+    eng.shutdown(drain=False, timeout=30)
+    assert eng.pager.pool.allocated_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# cancel racing a still-queued request (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_cancel_races_queued_request(tiny):
+    """``cancel()`` on a request still waiting in the admission queue:
+    it is culled at the next boundary WITHOUT ever taking a slot — zero
+    tokens, ``cancelled`` sentinel, pool refcounts at baseline."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=1, max_len=96,
+                             cache="paged", block_size=8,
+                             prefix_cache=False)
+    baseline = eng.pager.pool.free_blocks
+    live = eng.stream("abcdef", max_new_tokens=6)
+    queued = eng.stream("ghijkl", max_new_tokens=6)
+    queued.cancel()                     # before any step ran
+    eng.run()
+    assert queued.result(timeout=5) == []
+    assert queued.finish_reason == "cancelled"
+    assert live.result(timeout=5) and live.finish_reason == "length"
+    assert eng.stats["cancelled"] == 1
+    # only the live row's finished slot parks blocks; the cancelled
+    # request never held any
+    pager = eng.pager
+    assert pager._parked == {0}
+    parked_held = sum(len(pager._owned[s]) for s in pager._parked)
+    assert pager.pool.free_blocks + parked_held == baseline
+
+
+# ---------------------------------------------------------------------------
+# typed admission taxonomy (satellite 1, engine side)
+# ---------------------------------------------------------------------------
+
+def test_admission_error_taxonomy_statuses():
+    assert AdmissionError("x").status == 503        # legacy pin
+    assert AdmissionError("x").retryable is True
+    e = QueueFullError("full", retry_after_s=2.5)
+    assert e.status == 429 and e.retryable and e.retry_after_s == 2.5
+    assert PromptTooLongError("long").status == 413
+    assert PromptTooLongError("long").retryable is False
+    assert DrainingError("bye").status == 503
+    assert DrainingError("bye").retryable is True
+    assert InfeasibleDeadlineError("late").status == 400
+    assert InfeasibleDeadlineError("late").retryable is False
+    for cls in (QueueFullError, PromptTooLongError, DrainingError,
+                InfeasibleDeadlineError):
+        assert issubclass(cls, AdmissionError)
+
+
+def test_admission_policy_raises_typed():
+    pol = AdmissionPolicy(max_queue=2, max_prompt_tokens=16,
+                          retry_after_s=3.0)
+    eng = types.SimpleNamespace(queue_depth=lambda: 2)
+    with pytest.raises(DrainingError):
+        pol.check(eng, prompt_len=4, draining=True)
+    with pytest.raises(QueueFullError) as ei:
+        pol.check(eng, prompt_len=4)
+    assert ei.value.retry_after_s == 3.0
+    eng.queue_depth = lambda: 0
+    with pytest.raises(PromptTooLongError):
+        pol.check(eng, prompt_len=17)
+    with pytest.raises(InfeasibleDeadlineError):
+        pol.check(eng, prompt_len=4, deadline_s=-1.0)
+    pol.check(eng, prompt_len=16, deadline_s=5.0)   # in-bounds: admits
