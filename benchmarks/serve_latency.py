@@ -1,7 +1,7 @@
 """Serving latency: the repo's first TTFT / inter-token-latency
 trajectory, plus the async core's two latency levers measured head-on.
 
-Two studies sharing ``serve_throughput``'s queue builder (the
+Three studies sharing ``serve_throughput``'s queue builder (the
 fixed-seed reproducibility contract) on a latency-bench model sized so
 DEVICE compute per decode step (~10ms at d_model 256) clearly exceeds
 host dispatch overhead — on the throughput bench's smaller model the
@@ -80,6 +80,41 @@ def run_overlap(model, params, qcfg, overlap, n_requests, max_batch,
         "overlap_share": round(busy / (busy + wait), 4)
         if busy + wait > 0 else None,
         **latency_summary(done),
+    }
+
+
+def run_telemetry_overhead(model, params, qcfg, n_requests, seed=0):
+    """The "observability is cheap" claim as a measured number: the same
+    fixed-seed queue served with telemetry OFF (the step loop records
+    nothing) and ON (per-step timeline record, trace spans, histogram
+    observes — everything except the opt-in quant-health probe), at the
+    latency-bench shape.  Reports scheduler steps/s for both arms and
+    the delta."""
+    arms = {}
+    for tel in (False, True):
+        eng = AsyncServingEngine(model, params, qcfg, max_batch=4,
+                                 max_len=128, prepare=False,
+                                 telemetry=tel)
+        build_queue(eng, n_requests, seed=seed)
+        eng.run()                 # untimed warmup (jit all shapes)
+        eng.reset_stats()
+        build_queue(eng, n_requests, seed=seed)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        steps = eng.stats["decode_steps"] + eng.stats["prefill_steps"]
+        arms["on" if tel else "off"] = {
+            "steps": steps, "wall_s": dt, "steps_s": steps / dt,
+            "tokens": sum(len(r.out_tokens) for r in done)}
+    off, on = arms["off"], arms["on"]
+    return {
+        "name": "serve_telemetry_overhead",
+        "steps_s_telemetry_off": round(off["steps_s"], 2),
+        "steps_s_telemetry_on": round(on["steps_s"], 2),
+        "steps_off": off["steps"], "steps_on": on["steps"],
+        # positive = telemetry costs steps/s; near zero is the claim
+        "steps_s_overhead_pct": round(
+            (off["steps_s"] - on["steps_s"]) / off["steps_s"] * 100, 2),
     }
 
 
@@ -163,6 +198,13 @@ def run(quick: bool = False, seed: int = 0):
             1.0 - chunked["live_row_max_gap_ms"]
             / max(mono["live_row_max_gap_ms"], 1e-9), 3),
     })
+
+    rows.append(run_telemetry_overhead(model, prepped, qcfg,
+                                       n_requests, seed=seed))
+    r = rows[-1]
+    print(f"telemetry overhead: {r['steps_s_telemetry_off']} steps/s off "
+          f"vs {r['steps_s_telemetry_on']} on "
+          f"({r['steps_s_overhead_pct']}% delta)")
     emit(rows, "serve_latency")
     return rows
 

@@ -17,7 +17,15 @@ Endpoints:
   block refs free at the next step boundary.
 * ``GET /stats`` — ``AsyncServingEngine.server_stats()``: queue depth,
   active slots/streams, overlap share, spec acceptance rate, KV-cache
-  accounting, raw step counters.
+  accounting, raw step counters, telemetry summary (schema documented
+  in :mod:`repro.serve.telemetry`).
+* ``GET /metrics`` — Prometheus text exposition of the telemetry
+  registry: request/step counters, TTFT/ITL/step-duration histograms,
+  fault probe/fired counts, KV-byte gauges, quant-health series (the
+  scrape target for the planned multi-replica router).
+* ``GET /trace`` — Chrome trace-event JSON of recorded request/step
+  spans (``engine.export_trace()``); load in Perfetto to see a
+  request's queued → prefill → decode → finish life as nested bars.
 * ``GET /healthz`` — liveness (200 while serving, 503 once draining).
 
 Graceful drain: SIGINT stops admission (new requests 503, queued ones
@@ -64,6 +72,16 @@ class Handler(BaseHTTPRequestHandler):
                         "draining": draining, "failed": failed})
         elif self.path == "/stats":
             self._json(200, eng.server_stats())
+        elif self.path == "/metrics":
+            body = eng.render_metrics().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        elif self.path == "/trace":
+            self._json(200, eng.export_trace())
         else:
             self._json(404, {"error": f"no route {self.path}"})
 
@@ -180,7 +198,8 @@ def build_engine(args):
         model, path, max_batch=args.max_batch, max_len=args.max_len,
         cache=args.cache, spec=args.spec, spec_k=args.spec_k,
         prefill_chunk=args.prefill_chunk, overlap=args.overlap,
-        policy=policy)
+        policy=policy, telemetry=not args.no_telemetry,
+        telemetry_every=args.telemetry_every)
 
 
 def run_smoke(engine) -> None:
@@ -229,8 +248,56 @@ def run_smoke(engine) -> None:
                                 timeout=60) as resp:
         stats = json.loads(resp.read())
     for key in ("queue_depth", "active_slots", "overlap_share",
-                "kv_cache", "counters"):
+                "kv_cache", "attn_io", "counters", "telemetry"):
         assert key in stats, f"/stats missing {key}"
+
+    # telemetry endpoints: exposition parses, core series present,
+    # trace is valid Chrome trace-event JSON — snapshots land next to
+    # the bench JSONs for the CI artifact upload (skipped when the
+    # caller handed us a telemetry-off engine: /metrics is then empty
+    # by contract)
+    import re
+    from pathlib import Path
+    n_trace = 0
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}/metrics",
+                                timeout=60) as resp:
+        assert resp.headers["Content-Type"].startswith("text/plain")
+        metrics = resp.read().decode()
+    if engine.telemetry is None:
+        assert metrics == "", "telemetry-off /metrics not empty"
+    else:
+        sample_re = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? "
+                               r"[^ ]+$")
+        for line in metrics.splitlines():
+            if line.startswith("#") or not line:
+                continue
+            assert sample_re.match(line), f"bad exposition line: {line!r}"
+        for series in ("repro_requests_submitted_total",
+                       "repro_request_ttft_seconds_bucket",
+                       "repro_step_duration_seconds_count",
+                       "repro_engine_steps_total",
+                       "repro_kv_bytes"):
+            assert series in metrics, f"/metrics missing {series}"
+        with urllib.request.urlopen(f"http://127.0.0.1:{port}/trace",
+                                    timeout=60) as resp:
+            trace = json.loads(resp.read())
+        assert isinstance(trace.get("traceEvents"), list) and trace[
+            "traceEvents"], "empty trace"
+        for ev in trace["traceEvents"]:
+            assert {"name", "ph", "pid", "tid"} <= set(ev), ev
+            if ev["ph"] == "X":
+                assert "ts" in ev and "dur" in ev, ev
+        spans = {e["name"] for e in trace["traceEvents"]}
+        assert {"request", "queued", "prefill"} <= spans, spans
+        n_trace = len(trace["traceEvents"])
+        outdir = Path("benchmarks/results")
+        if outdir.is_dir():
+            (outdir / "http_smoke_metrics.prom").write_text(metrics)
+            (outdir / "http_smoke_trace.json").write_text(
+                json.dumps(trace))
+            print(f"telemetry snapshots -> "
+                  f"{outdir}/http_smoke_metrics.prom, "
+                  f"{outdir}/http_smoke_trace.json")
 
     # admission taxonomy over real HTTP: swap policies on the live
     # engine (stream() re-reads self.policy per submit)
@@ -269,7 +336,9 @@ def run_smoke(engine) -> None:
     print(f"HTTP smoke OK: {len(events) - 1} tokens streamed over SSE, "
           f"finish={events[-1]['finish_reason']}, "
           f"overlap_share={stats['overlap_share']}, "
-          "admission taxonomy 429/413/503 verified, clean drain")
+          f"{n_trace} trace events, "
+          "metrics exposition + admission taxonomy 429/413/503 "
+          "verified, clean drain")
 
 
 def main():
@@ -297,6 +366,12 @@ def main():
                     help="disable the double-buffered step loop")
     ap.add_argument("--max-queue", type=int, default=64,
                     help="admission queue bound (503 past it)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the metrics/trace/timeline layer "
+                         "(/metrics empty, /trace bare)")
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help="sample the quant-health probe every N decode "
+                         "launches (0 = off)")
     ap.add_argument("--port", type=int, default=8471)
     args = ap.parse_args()
 

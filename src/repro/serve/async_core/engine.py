@@ -156,9 +156,15 @@ class AsyncServingEngine(ServingEngine):
         are consumed), or None when the next step must wait for consumed
         results: overlap off, spec verify (needs host tokens), a chunked
         prefill mid-flight, or possible admission (queue + free slot —
-        the blocking pass admits first, exactly like ``run()``)."""
+        the blocking pass admits first, exactly like ``run()``).  Each
+        None return stamps ``_chain_break_reason`` for the step
+        timeline."""
         if (not self.overlap or self.spec is not None
                 or self._pending_prefill):
+            self._chain_break_reason = (
+                "overlap_off" if not self.overlap
+                else "spec_verify" if self.spec is not None
+                else "chunked_prefill")
             return None
         pend = set(self._inflight[0])
         now = time.perf_counter()
@@ -172,9 +178,11 @@ class AsyncServingEngine(ServingEngine):
                 continue            # finishes in the in-flight step
             live.append(i)
         if not live:
+            self._chain_break_reason = "no_live_rows"
             return None
         if self.queue and self.scheduler != "wave" \
                 and any(s is None for s in self.slots):
+            self._chain_break_reason = "admission_possible"
             return None             # admission possible: full pass first
         return live
 
@@ -209,6 +217,8 @@ class AsyncServingEngine(ServingEngine):
             counts[i] = (len(self.slots[i].out_tokens)
                          + (1 if i in pend else 0))
         tok_in = self._mask_fn(self._tok_dev, jnp.asarray(live_mask))
+        if self.telemetry_every > 0 and self.telemetry is not None:
+            self._maybe_quant_health(tok_in[jnp.asarray(live)])
         logits, self.cache = self._step_fn_nodonate(
             self.params, tok_in[:, None], self.cache, jnp.asarray(off))
         samp = self._sample_launch(logits, live, counts=counts)
@@ -219,6 +229,7 @@ class AsyncServingEngine(ServingEngine):
         if self.pager is not None:
             self.pager.advance(live)
         self._inflight = (live, samp, time.perf_counter())
+        self._tl_launch_ts = self._inflight[2]
         return True
 
     def _consume_inflight(self, inflight: tuple) -> None:
@@ -237,6 +248,7 @@ class AsyncServingEngine(ServingEngine):
         self.stats["device_wait_s"] += time.perf_counter() - t0
         self.stats["sync_steps"] += 1
         now = time.perf_counter()
+        self._tl_consume_ts = now
         for i in live:
             r = self.slots[i]
             if r is None:
@@ -268,12 +280,13 @@ class AsyncServingEngine(ServingEngine):
             prev, self._inflight = self._inflight, None
             self._consume_inflight(prev)
 
-    def step_once(self) -> List[Request]:
-        """One async scheduler iteration.  With a step in flight and a
-        chainable live set: launch *t+1* FIRST (device stays busy), then
-        consume *t* and run the boundary sweep — the double buffer.
-        Otherwise: consume, then fall through to the blocking pass
-        (which itself LAUNCHES the next decode when eligible)."""
+    def _step_impl(self) -> List[Request]:
+        """One async scheduler iteration (the base ``step_once`` wraps
+        this with the step-timeline record).  With a step in flight and
+        a chainable live set: launch *t+1* FIRST (device stays busy),
+        then consume *t* and run the boundary sweep — the double
+        buffer.  Otherwise: consume, then fall through to the blocking
+        pass (which itself LAUNCHES the next decode when eligible)."""
         if self._inflight is not None:
             live = self._chainable_live()
             if live is not None:
@@ -288,7 +301,7 @@ class AsyncServingEngine(ServingEngine):
                 return finished
             prev, self._inflight = self._inflight, None
             self._consume_inflight(prev)
-        return super().step_once()
+        return super()._step_impl()
 
     def _has_work(self) -> bool:
         return super()._has_work() or self._inflight is not None
@@ -323,6 +336,7 @@ class AsyncServingEngine(ServingEngine):
             st._push(t)
 
     def _on_finish(self, r: Request) -> None:
+        super()._on_finish(r)
         st = self._streams.pop(r.rid, None)
         if st is not None:
             st._finish(r.finish_reason)
@@ -379,6 +393,8 @@ class AsyncServingEngine(ServingEngine):
                     if not r.done:
                         r.done = True
                         r.finish_reason = r.finish_reason or "rejected"
+                        if self.telemetry is not None:
+                            self.telemetry.request_finished(r)
                     st._finish(r.finish_reason)
                 self._streams.clear()
 
@@ -402,6 +418,8 @@ class AsyncServingEngine(ServingEngine):
                 r.done = True
                 r.finish_reason = "error"
                 r.error = r.error or reason
+                if self.telemetry is not None:
+                    self.telemetry.request_finished(r)
         for st in list(self._streams.values()):
             st._finish(st.request.finish_reason or "error")
 
@@ -420,6 +438,8 @@ class AsyncServingEngine(ServingEngine):
             if not r.done:
                 r.done, r.finish_reason = True, "error"
                 r.error = r.error or reason
+                if self.telemetry is not None:
+                    self.telemetry.request_finished(r)
             self.slots[i] = None
             if self.spec is not None:
                 self.spec.release(i)
@@ -427,6 +447,8 @@ class AsyncServingEngine(ServingEngine):
             if not r.done:
                 r.done, r.finish_reason = True, "error"
                 r.error = r.error or reason
+                if self.telemetry is not None:
+                    self.telemetry.request_finished(r)
         self.queue.clear()
         if self.pager is not None:
             self.pager.quiesce()

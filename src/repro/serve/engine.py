@@ -114,6 +114,7 @@ from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.paging import BlockPool, PagedKVManager, PoolExhausted
 from repro.serve.prepare import (load_prepared, prepare_params,
                                  prepared_nbytes)
+from repro.serve.telemetry import StepRecord, Telemetry
 
 
 @dataclasses.dataclass
@@ -176,7 +177,8 @@ class ServingEngine:
                  prefix_cache: bool = True,
                  spec: Optional[str] = None, spec_k: int = 4,
                  prefill_chunk: Optional[int] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 telemetry=None, telemetry_every: int = 0):
         """``params`` may be raw weights (prepared here when ``prepare``)
         or an already-prepared tree (PreparedLinear leaves, e.g. from
         :func:`~repro.serve.prepare.load_prepared` — detected, never
@@ -204,7 +206,15 @@ class ServingEngine:
         :class:`~repro.serve.faults.FaultInjector` — a seeded schedule
         of injected degradations (pool exhaustion, step errors, NaN
         logits, latency spikes) for chaos tests and the degradation
-        benchmark; None (default) costs nothing."""
+        benchmark; None (default) costs nothing.  ``telemetry``: None
+        (off, default — the step loop pays nothing), True (build a
+        fresh :class:`~repro.serve.telemetry.Telemetry`), or an
+        existing instance (share a registry across engines).
+        ``telemetry_every``: sample the quantization-health probe (the
+        paper's Eq. 1 quantities, a separate tiny jit — never the
+        decode graph) every N decode launches; 0 (default) disables
+        sampling — the identity tests pin that the decode jaxpr and
+        greedy tokens are unaffected either way."""
         if scheduler not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if cache not in ("dense", "paged"):
@@ -254,6 +264,16 @@ class ServingEngine:
         self.spec_k = spec_k
         self.prefill_chunk = prefill_chunk
         self.faults = faults
+        self.telemetry_every = int(telemetry_every)
+        if telemetry is True or (telemetry is None
+                                 and self.telemetry_every > 0):
+            telemetry = Telemetry()
+        self.telemetry: Optional[Telemetry] = telemetry or None
+        # step-timeline scratch the step_once wrapper reads; the async
+        # loop fills the launch/consume stamps and chain-break reason
+        self._chain_break_reason: Optional[str] = None
+        self._tl_launch_ts: Optional[float] = None
+        self._tl_consume_ts: Optional[float] = None
         self.queue: List[Request] = []
         self._rid = 0
         self._admit_seq = 0                  # victim-pick admission order
@@ -380,6 +400,8 @@ class ServingEngine:
                                   temperature, truncated=truncated,
                                   deadline_s=deadline_s,
                                   t_submit=time.perf_counter()))
+        if self.telemetry is not None:
+            self.telemetry.request_submitted(self._rid, len(ids))
         return self._rid
 
     def queue_depth(self) -> int:
@@ -577,6 +599,10 @@ class ServingEngine:
             off[i] = w - take
             del rem[:take]
             self.stats["prefill_tokens"] += take
+            if self.telemetry is not None:
+                self.telemetry.request_instant(
+                    self.slots[i].rid, "prefill_chunk",
+                    tokens=take, remaining=len(rem))
             if not rem:
                 completed.append(i)
         for i in live:
@@ -645,6 +671,9 @@ class ServingEngine:
         self._admit_seq += 1
         r.admit_order = self._admit_seq
         self.slots[i] = r
+        if self.telemetry is not None:
+            self.telemetry.request_phase(r.rid, "prefill", slot=i,
+                                         resumed=bool(r.out_tokens))
 
     @staticmethod
     def _prefill_ids(r: Request) -> List[int]:
@@ -695,6 +724,8 @@ class ServingEngine:
         self.stats["preempted"] += 1
         self.stats["requeued"] += 1
         self.queue.insert(0, r)
+        if self.telemetry is not None:
+            self.telemetry.request_preempted(r.rid, r.preemptions)
 
     def _ensure_rows_room(self, live: List[int], n_tokens: int = 1):
         """Grow every live row's block chain for its next ``n_tokens``
@@ -781,7 +812,9 @@ class ServingEngine:
         step-error injection sites (the crash-safe loop's triggers)."""
         if self.faults is None:
             return
-        self.faults.sleep("latency")
+        slept = self.faults.sleep("latency")
+        if slept and self.telemetry is not None:
+            self.telemetry.fault_sleep(slept)
         if self.faults.fire("step_error"):
             raise InjectedFault("injected step-loop fault")
 
@@ -804,6 +837,8 @@ class ServingEngine:
         for i in live:
             nxt[i, 0] = self.slots[i].out_tokens[-1]
             off[i] = 0
+        if self.telemetry_every > 0 and self.telemetry is not None:
+            self._maybe_quant_health(nxt[live, 0])
         logits, self.cache = self._step_fn(
             self.params, jnp.asarray(nxt), self.cache, jnp.asarray(off))
         self.stats["decode_steps"] += 1
@@ -811,6 +846,16 @@ class ServingEngine:
         if self.pager is not None:
             self.pager.advance(live)
         self._sample_into(logits, live)
+
+    def _maybe_quant_health(self, tokens) -> None:
+        """The ``telemetry_every`` seam: every Nth decode launch, run
+        the Eq. 1 quant-health probe (a separate tiny jit over the
+        embed rows of this step's input tokens — the decode graph is
+        untouched).  Callers pre-check telemetry is on."""
+        if self.stats["decode_steps"] % self.telemetry_every:
+            return
+        self.telemetry.quant_health(self.params, tokens, self.qcfg,
+                                    emb_scale=self.cfg.emb_scale)
 
     @staticmethod
     def _seed_for(r: Request, count: int) -> int:
@@ -886,16 +931,21 @@ class ServingEngine:
             r.done, r.finish_reason = True, "length"
         if self.spec is not None and not from_spec:
             self.spec.notify_commit(i, t)
+        if self.telemetry is not None:
+            self.telemetry.commit(r, r.t_tokens[-1])
         self._on_commit(i, r, t)
         return r.done
 
-    # -- stream hooks (no-ops here; the async engine overrides them) ------
+    # -- stream hooks (the async engine overrides them) --------------------
 
     def _on_commit(self, i: int, r: Request, t: int) -> None:
         pass
 
     def _on_finish(self, r: Request) -> None:
-        pass
+        # every terminal path funnels through here exactly once
+        # (reclaim sweep, queue cull, admission dead-end, crash _fail)
+        if self.telemetry is not None:
+            self.telemetry.request_finished(r)
 
     # -- schedulers -------------------------------------------------------
 
@@ -971,6 +1021,79 @@ class ServingEngine:
                 and i not in self._pending_prefill]
 
     def step_once(self) -> List[Request]:
+        """ONE scheduler iteration (see :meth:`_step_impl`) — plus,
+        when telemetry is on, exactly one :class:`StepRecord` into the
+        step timeline, derived from the stats deltas around the step.
+        Both the blocking loop and the async chained loop flow through
+        here, so ``record_step`` has a single call site."""
+        tel = self.telemetry
+        if tel is None:
+            return self._step_impl()
+        t0 = time.perf_counter()
+        snap = dict(self.stats)
+        seq0 = self._admit_seq
+        tok0 = tel.tokens_committed()
+        fired0 = dict(self.faults.fired) if self.faults is not None else {}
+        self._chain_break_reason = None
+        self._tl_launch_ts = None
+        self._tl_consume_ts = None
+        try:
+            finished = self._step_impl()
+        except BaseException:
+            # the crash-safe serve loop turns this into degradation;
+            # the timeline keeps the evidence of the step that blew up
+            self._record_step(tel, t0, time.perf_counter(), snap, seq0,
+                              tok0, fired0, finished=0, kind="error")
+            raise
+        self._record_step(tel, t0, time.perf_counter(), snap, seq0,
+                          tok0, fired0, finished=len(finished))
+        return finished
+
+    def _record_step(self, tel: Telemetry, t0: float, t1: float,
+                     snap: Dict[str, float], seq0: int, tok0: float,
+                     fired0: Dict[str, int], finished: int,
+                     kind: Optional[str] = None) -> None:
+        """Derive the step's record from the stats deltas around it —
+        no mutation-site scatter: what the step DID is what its
+        counters say it did."""
+        st = self.stats
+        def d(k):
+            return st[k] - snap.get(k, 0)
+        if kind is None:
+            if d("spec_rounds"):
+                kind = "spec"
+            elif d("chunk_steps"):
+                kind = "chunk"
+            elif d("prefill_steps"):
+                kind = "prefill"
+            elif d("decode_steps"):
+                kind = "decode"
+            else:
+                kind = "idle"
+        tags = ()
+        if self.faults is not None:
+            tags = tuple(s for s, n in self.faults.fired.items()
+                         if n > fired0.get(s, 0))
+        occ = sum(s is not None for s in self.slots)
+        tel.record_step(StepRecord(
+            step=tel.timeline.total_steps,
+            t_start=t0, t_end=t1, kind=kind,
+            occupancy=occ,
+            frozen_rows=occ - len(self._live_rows()),
+            queue_depth=len(self.queue),
+            admissions=self._admit_seq - seq0,
+            preemptions=d("preempted"),
+            quarantines=d("quarantined"),
+            finished=finished,
+            committed_tokens=int(tel.tokens_committed() - tok0),
+            device_wait_s=d("device_wait_s"),
+            launch_ts=self._tl_launch_ts,
+            consume_ts=self._tl_consume_ts,
+            chain_break=self._chain_break_reason,
+            fault_tags=tags))
+        tel.sync_engine(st, faults=self.faults)
+
+    def _step_impl(self) -> List[Request]:
         """ONE scheduler iteration — reclaim, admit, one generation (or
         chunked-prefill) step — returning the requests that finished at
         this step boundary.  ``run`` is a loop over this; the async
@@ -1132,12 +1255,57 @@ class ServingEngine:
             "read_vs_resident": read / resident if resident else None,
         }
 
+    def export_trace(self) -> Dict[str, object]:
+        """Chrome trace-event JSON of the recorded request/step spans
+        (renders in Perfetto).  An engine without telemetry exports an
+        empty trace rather than erroring — the endpoint is total."""
+        if self.telemetry is None:
+            return {"traceEvents": []}
+        return self.telemetry.export_trace()
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of the telemetry registry, with
+        the legacy accumulators (stats counters, fault probe/fired
+        counts, KV-byte accounting) mirrored in at scrape time.  Empty
+        string without telemetry."""
+        tel = self.telemetry
+        if tel is None:
+            return ""
+        tel.sync_engine(self.stats, faults=self.faults,
+                        kv=self.kv_cache_stats())
+        return tel.render()
+
     def server_stats(self) -> Dict[str, object]:
         """The /stats payload core (the async engine layers stream and
-        overlap fields on top): queue/slot occupancy, scheduler/cache
-        configuration, spec acceptance rate, KV-cache memory accounting,
-        the paged attention-IO model, and the raw step counters."""
+        overlap fields on top) — schema documented in
+        :mod:`repro.serve.telemetry`: queue/slot occupancy,
+        scheduler/cache configuration, spec acceptance rate, KV-cache
+        memory accounting, the attention-IO model (an explicit
+        dense-schema block when there is no paged model to price), the
+        raw step counters, and the telemetry summary."""
         st = dict(self.stats)
+        kv = self.kv_cache_stats()
+        aio = self.attn_io_stats()
+        if aio is not None:
+            aio = dict(aio, kind="paged")
+        else:
+            # dense cache: same keys, modeled-read fields None — a
+            # dense arena is worst-case resident by construction and
+            # has no block-table read model to price
+            aio = {"kind": "dense", "impl": None,
+                   "kv_storage": self.kv_storage_kind,
+                   "live_rows": sum(s is not None for s in self.slots),
+                   "mean_ctx": None,
+                   "resident_kv_bytes": kv["kv_bytes_resident"],
+                   "step_read_bytes": None,
+                   "step_read_bytes_kernel": None,
+                   "step_read_bytes_gather": None,
+                   "kernel_vs_gather_drop": None,
+                   "read_vs_resident": None}
+        tel = None
+        if self.telemetry is not None:
+            tel = dict(self.telemetry.summary(),
+                       telemetry_every=self.telemetry_every)
         return {
             "queue_depth": self.queue_depth(),
             "active_slots": sum(s is not None for s in self.slots),
@@ -1149,9 +1317,10 @@ class ServingEngine:
                                 if st["spec_proposed"] else None),
             "faults": (self.faults.describe()
                        if self.faults is not None else None),
-            "kv_cache": self.kv_cache_stats(),
-            "attn_io": self.attn_io_stats(),
+            "kv_cache": kv,
+            "attn_io": aio,
             "counters": st,
+            "telemetry": tel,
         }
 
 

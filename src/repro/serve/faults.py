@@ -105,14 +105,17 @@ class FaultInjector:
 
     # -- site-specific helpers --------------------------------------------
 
-    def sleep(self, site: str = "latency") -> bool:
-        """Latency-spike site: sleep ``duration_s`` when scheduled."""
+    def sleep(self, site: str = "latency") -> float:
+        """Latency-spike site: sleep ``duration_s`` when scheduled.
+        Returns the injected duration (0.0 — still falsy — when the
+        site did not fire), so the engine can feed the sleep into the
+        telemetry latency histogram and tag the step."""
         spec = self.specs.get(site)
         if spec is None or not self.fire(site):
-            return False
+            return 0.0
         if spec.duration_s > 0.0:
             time.sleep(spec.duration_s)
-        return True
+        return spec.duration_s
 
     def poison_logits(self, logits, rows: Sequence[int]):
         """``nonfinite_logits`` site: when scheduled, overwrite ONE of

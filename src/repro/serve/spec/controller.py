@@ -146,6 +146,7 @@ class SpecController:
         dpos = np.zeros((bsz,), np.int32)
         rolled = np.zeros((bsz,), bool)
         now = time.perf_counter()
+        committed_per_row: List[int] = []
         for i in live:
             r = reqs[i]
             base = len(r.prompt) + len(r.out_tokens) - 1  # cache pos pre-verify
@@ -179,10 +180,13 @@ class SpecController:
             assert r.done or self.pending[i], "live row with empty catch-up"
             eng.stats["spec_accepted"] += min(appended, int(acc_np[i]))
             eng.stats["spec_committed"] += appended
+            committed_per_row.append(appended)
         eng.stats["spec_rounds"] += 1
         eng.stats["spec_row_rounds"] += len(live)
         eng.stats["verify_steps"] += 1
         eng.stats["spec_proposed"] += k * len(live)
+        if eng.telemetry is not None:
+            eng.telemetry.spec_round(committed_per_row)
 
         # 4c. apply the rewinds on device
         if eng.pager is None:

@@ -1,0 +1,257 @@
+"""Serving telemetry: metrics registry, per-request tracing, step
+timeline, and quantization-health monitors — dependency-free, wired
+through both engines and the HTTP front-end.
+
+Construct one :class:`Telemetry` per engine (``ServingEngine(...,
+telemetry=True)`` builds it for you) and the engine records into it at
+its existing host-side boundaries; nothing here touches a jit graph.
+``GET /metrics`` on ``launch/serve_http`` renders the registry as
+Prometheus text exposition; ``GET /trace`` (and
+``engine.export_trace()``) emits Chrome trace-event JSON.
+
+THE STATS SCHEMA (the single source of truth — ``/stats`` and
+``/metrics`` both derive from it, so they cannot diverge):
+
+``engine.server_stats()`` returns, on EVERY configuration:
+
+* ``queue_depth``      int — requests admitted nowhere yet
+* ``active_slots``     int — seated rows
+* ``scheduler``        "continuous" | "wave"
+* ``cache``            "dense" | "paged"
+* ``spec``             None | "rrs_draft"
+* ``prefill_chunk``    None | int
+* ``acceptance_rate``  None | float (spec only)
+* ``faults``           None | {seed, sites, probes, fired}
+* ``kv_cache``         dict — ALWAYS present: {kind, kv_bytes_capacity,
+  kv_bytes_resident, kv_bytes_peak}; paged adds {kv_block_bytes, pool
+  counters, parked_slots, radix stats}
+* ``attn_io``          dict — ALWAYS present (PR 9; was None on dense):
+  {kind: "dense"|"paged", impl, kv_storage, live_rows, mean_ctx,
+  resident_kv_bytes, step_read_bytes, ...}; the dense block carries the
+  same keys with the modeled-read fields None (a dense cache reads its
+  whole worst-case arena — there is no block-table model to price)
+* ``counters``         dict — the resettable step counters:
+  prefill_steps, decode_steps, slot_steps, prefill_tokens,
+  prefix_hit_tokens, verify_steps, spec_rounds, spec_row_rounds,
+  spec_proposed, spec_accepted, spec_committed, chunk_steps, cancelled,
+  expired, preempted, requeued, quarantined, errored, device_wait_s,
+  sync_steps (async adds host_overlap_s, overlapped_steps, crashes,
+  watchdog_fires)
+* ``telemetry``        None | dict — {steps_recorded, timeline_len,
+  timeline_dropped, trace_events, trace_dropped, quant_samples,
+  telemetry_every} when telemetry is on
+
+Async engines add ``active_streams``, ``draining``, ``failed``,
+``overlap``, ``overlap_share``.
+
+The metric families mirror the same numbers (``repro_engine_*_total``
+counters are set from ``counters`` via a max-monotonic mirror, so a
+racing scrape never sees a counter regress), plus what only histograms
+can carry: ``repro_request_ttft_seconds``, ``repro_request_itl_seconds``,
+``repro_request_e2e_seconds``, ``repro_step_duration_seconds``,
+``repro_fault_sleep_seconds``, ``repro_spec_accept_len``, and the
+quant-health series (``repro_quant_*``, sampled every
+``telemetry_every`` decode steps — see :mod:`.quant_health`).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.serve.telemetry.metrics import (LATENCY_BUCKETS_S,
+                                           MetricsRegistry, log_buckets)
+from repro.serve.telemetry.timeline import StepRecord, StepTimeline
+from repro.serve.telemetry.tracing import TraceRecorder
+
+FINISH_REASONS = ("stop", "length", "cancelled", "expired", "rejected",
+                  "error")
+
+
+class Telemetry:
+    """Facade bundling the registry, trace recorder, step timeline and
+    (lazily) the quant-health probe, plus the engine-facing helpers
+    that record into all of them consistently."""
+
+    def __init__(self, max_trace_events: int = 20000,
+                 timeline_len: int = 2048,
+                 spike_factor: float = 8.0):
+        self.registry = MetricsRegistry()
+        self.trace = TraceRecorder(max_events=max_trace_events)
+        self.timeline = StepTimeline(maxlen=timeline_len)
+        self._spike_factor = spike_factor
+        self._quant = None              # lazy QuantHealthProbe
+        r = self.registry
+        self._c_submitted = r.counter(
+            "repro_requests_submitted_total",
+            "requests accepted by submit()").default
+        self._f_finished = r.counter(
+            "repro_requests_finished_total",
+            "requests reaching a terminal state", labels=("reason",))
+        self._c_tokens = r.counter(
+            "repro_tokens_committed_total",
+            "tokens committed to request outputs").default
+        self._h_ttft = r.histogram(
+            "repro_request_ttft_seconds",
+            "submit -> first committed token").default
+        self._h_itl = r.histogram(
+            "repro_request_itl_seconds",
+            "gap between consecutive committed tokens").default
+        self._h_e2e = r.histogram(
+            "repro_request_e2e_seconds",
+            "submit -> terminal state").default
+        self._h_step = r.histogram(
+            "repro_step_duration_seconds",
+            "one scheduler iteration, wall clock").default
+        self._h_fault_sleep = r.histogram(
+            "repro_fault_sleep_seconds",
+            "injected latency-site sleep durations").default
+        self._h_accept = r.histogram(
+            "repro_spec_accept_len",
+            "committed tokens per spec row-round",
+            bounds=log_buckets(1.0, 64.0, 19)).default
+        self._g_queue = r.gauge(
+            "repro_queue_depth", "requests waiting for a slot").default
+        self._g_slots = r.gauge(
+            "repro_active_slots", "seated rows").default
+        self._f_engine = r.counter(
+            "repro_engine_steps_total",
+            "engine step counters, mirrored from server_stats counters",
+            labels=("counter",))
+        self._g_engine_s = r.gauge(
+            "repro_engine_seconds",
+            "engine wall-clock accumulators (device wait, host overlap)",
+            labels=("kind",))
+        self._f_fault_probes = r.counter(
+            "repro_fault_probes_total",
+            "fault-injection site probes", labels=("site",))
+        self._f_fault_fired = r.counter(
+            "repro_fault_fired_total",
+            "fault-injection site hits", labels=("site",))
+        self._g_kv = r.gauge(
+            "repro_kv_bytes", "KV arena accounting", labels=("kind",))
+
+    # -- request lifecycle -------------------------------------------------
+
+    def request_submitted(self, rid: int, prompt_tokens: int) -> None:
+        self._c_submitted.inc()
+        self.trace.submit(rid, prompt_tokens=prompt_tokens)
+
+    def request_phase(self, rid: int, name: str, **args) -> None:
+        self.trace.phase(rid, name, **args)
+
+    def request_instant(self, rid: int, name: str, **args) -> None:
+        self.trace.instant(rid, name, **args)
+
+    def request_preempted(self, rid: int, preemptions: int) -> None:
+        self.trace.instant(rid, "preempt", preemptions=preemptions)
+        self.trace.phase(rid, "queued", resumed=True)
+
+    def request_finished(self, r) -> None:
+        """Terminal: close the trace, count the reason, observe e2e."""
+        reason = r.finish_reason or "stop"
+        self._f_finished.labels(reason=reason).inc()
+        now = time.perf_counter()
+        if r.t_submit:
+            self._h_e2e.observe(max(now - r.t_submit, 1e-9))
+        self.trace.finish(r.rid, reason,
+                          tokens=len(r.out_tokens),
+                          preemptions=r.preemptions,
+                          error=r.error)
+
+    def commit(self, r, now: float) -> None:
+        """One committed token: TTFT on the first, ITL on the rest.
+        Called AFTER the engine appended to ``t_tokens`` (so the
+        previous stamp is at index -2)."""
+        self._c_tokens.inc()
+        if len(r.t_tokens) == 1:
+            self._h_ttft.observe(max(now - r.t_submit, 1e-9))
+            self.trace.phase(r.rid, "decode")
+        else:
+            self._h_itl.observe(max(now - r.t_tokens[-2], 1e-9))
+
+    # -- steps / faults ----------------------------------------------------
+
+    def record_step(self, rec: StepRecord) -> None:
+        self.timeline.record(rec)
+        self._h_step.observe(max(rec.t_end - rec.t_start, 1e-9))
+        self._g_queue.set(rec.queue_depth)
+        self._g_slots.set(rec.occupancy)
+        self.trace.step(f"step:{rec.kind}", rec.t_start, rec.t_end,
+                        step=rec.step, occupancy=rec.occupancy,
+                        queue_depth=rec.queue_depth,
+                        admissions=rec.admissions,
+                        preemptions=rec.preemptions,
+                        chain_break=rec.chain_break,
+                        fault_tags=list(rec.fault_tags))
+
+    def fault_sleep(self, duration_s: float) -> None:
+        self._h_fault_sleep.observe(max(duration_s, 1e-9))
+
+    def spec_round(self, committed_per_row: List[int]) -> None:
+        for n in committed_per_row:
+            self._h_accept.observe(max(n, 1))
+
+    def tokens_committed(self) -> float:
+        return self._c_tokens.value
+
+    # -- quant health ------------------------------------------------------
+
+    def quant_health(self, params, tokens, qcfg,
+                     emb_scale: float = 1.0) -> Optional[Dict[str, float]]:
+        if self._quant is None:
+            from repro.serve.telemetry.quant_health import QuantHealthProbe
+            self._quant = QuantHealthProbe(self.registry,
+                                           spike_factor=self._spike_factor)
+        return self._quant.sample(params, tokens, qcfg,
+                                  emb_scale=emb_scale)
+
+    @property
+    def quant_samples(self) -> int:
+        return 0 if self._quant is None else self._quant.samples
+
+    # -- mirroring + export ------------------------------------------------
+
+    def sync_engine(self, stats: Dict[str, float],
+                    faults=None, kv: Optional[Dict] = None) -> None:
+        """Mirror the engine's legacy accumulators into the registry:
+        step counters via the max-monotonic ``set_total`` (safe against
+        racing scrapes), wall-clock accumulators and KV bytes as
+        gauges, fault probe/fired counts per site."""
+        for k, v in stats.items():
+            if k in ("device_wait_s", "host_overlap_s"):
+                self._g_engine_s.labels(kind=k).set(float(v))
+            else:
+                self._f_engine.labels(counter=k).set_total(float(v))
+        if faults is not None:
+            for site, n in faults.probes.items():
+                self._f_fault_probes.labels(site=site).set_total(n)
+            for site, n in faults.fired.items():
+                self._f_fault_fired.labels(site=site).set_total(n)
+        if kv is not None:
+            for key in ("kv_bytes_capacity", "kv_bytes_resident",
+                        "kv_bytes_peak"):
+                if kv.get(key) is not None:
+                    self._g_kv.labels(kind=key).set(float(kv[key]))
+
+    def render(self) -> str:
+        """Prometheus text exposition of every family."""
+        return self.registry.render()
+
+    def export_trace(self) -> dict:
+        return self.trace.export()
+
+    def summary(self) -> Dict[str, object]:
+        """The server_stats()["telemetry"] block."""
+        return {
+            "steps_recorded": self.timeline.total_steps,
+            "timeline_len": len(self.timeline),
+            "timeline_dropped": self.timeline.dropped,
+            "trace_events": len(self.trace._events),
+            "trace_dropped": self.trace.dropped_events,
+            "quant_samples": self.quant_samples,
+        }
+
+
+__all__ = ["Telemetry", "MetricsRegistry", "TraceRecorder",
+           "StepTimeline", "StepRecord", "FINISH_REASONS",
+           "LATENCY_BUCKETS_S", "log_buckets"]

@@ -1,0 +1,331 @@
+"""Dependency-free metrics primitives: counters, gauges, histograms,
+and a thread-safe registry with Prometheus text exposition.
+
+Design constraints (serving hot path):
+
+* **O(1) record.**  ``Histogram.observe`` computes its bucket index
+  arithmetically from fixed LOG-SPACED bucket bounds (one ``log`` and an
+  int clamp — no bisect, no allocation), so the engine can observe every
+  step's latency without a measurable cost.
+* **Thread-safe.**  One lock per metric child; the serve thread records
+  while HTTP scrape threads render.  Rendering takes each child's lock
+  only long enough to snapshot plain floats/ints.
+* **Prometheus exposition.**  :meth:`MetricsRegistry.render` emits the
+  text format (``# HELP`` / ``# TYPE`` / sample lines with sorted label
+  sets; histograms emit cumulative ``_bucket{le=...}`` + ``_sum`` +
+  ``_count``) that the planned multi-replica router — or any off-the-
+  shelf Prometheus — can scrape from ``GET /metrics``.
+* **Histogram quantiles.**  :meth:`Histogram.quantile` interpolates
+  inside the target bucket (log-linear, matching the bucket spacing);
+  with log-spaced bounds of growth ``g`` the estimate is within a factor
+  ``g`` of the exact sample percentile — the contract
+  ``tests/test_telemetry.py`` pins against ``numpy.percentile``.  The
+  benchmarks' shared ``latency_summary`` builds on this, so TTFT/ITL
+  percentiles in ``serve_latency``/``serve_throughput`` and the live
+  ``/metrics`` series come from the SAME math.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def log_buckets(lo: float, hi: float, count: int) -> Tuple[float, ...]:
+    """``count`` log-spaced upper bounds from ``lo`` to ``hi``
+    (inclusive).  The implicit final bucket is +Inf."""
+    if not (lo > 0.0 and hi > lo and count >= 2):
+        raise ValueError(f"bad bucket spec lo={lo} hi={hi} count={count}")
+    g = (hi / lo) ** (1.0 / (count - 1))
+    return tuple(lo * g ** i for i in range(count))
+
+
+# Default latency buckets: 10us .. 120s, growth ~1.31 per bucket — wide
+# enough for TTFT on a cold jit, fine enough that a p50/p95 estimate is
+# within ~31% of the exact sample percentile (the log-interp bound).
+LATENCY_BUCKETS_S = log_buckets(1e-5, 120.0, 61)
+
+# Ratio-style buckets (smooth-scale spread, clip rates scaled to [0,1]
+# don't need these): 1 .. 4096, growth 2**0.5.
+RATIO_BUCKETS = log_buckets(1.0, 4096.0, 25)
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value formatting: integers bare, floats repr."""
+    if v == math.inf:
+        return "+Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _label_str(labels: Tuple[Tuple[str, str], ...]) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in labels)
+    return "{" + body + "}"
+
+
+def _escape(v: str) -> str:
+    return str(v).replace("\\", "\\\\").replace('"', '\\"').replace(
+        "\n", "\\n")
+
+
+class _Child:
+    """One (metric, label-set) time series."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+
+
+class Counter(_Child):
+    def __init__(self):
+        super().__init__()
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self._value += n
+
+    def set_total(self, v: float) -> None:
+        """Mirror an externally-maintained monotone total (the engine's
+        legacy ``stats`` dict counters) — takes ``max`` so a racing
+        scrape can never observe a counter going backwards."""
+        with self._lock:
+            self._value = max(self._value, float(v))
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Gauge(_Child):
+    def __init__(self):
+        super().__init__()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value -= n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Histogram(_Child):
+    """Fixed log-spaced buckets, O(1) observe, quantile estimation.
+
+    ``bounds`` are the finite upper bucket bounds (ascending, log-
+    spaced); observations above the last bound land in the implicit
+    +Inf bucket.  ``observe`` maps a value to its bucket with one log —
+    no search — because the bounds are ``lo * g**i`` by construction.
+    """
+
+    def __init__(self, bounds: Sequence[float] = LATENCY_BUCKETS_S):
+        super().__init__()
+        bounds = tuple(float(b) for b in bounds)
+        if len(bounds) < 2 or any(b <= a for a, b in zip(bounds,
+                                                         bounds[1:])):
+            raise ValueError("bounds must be ascending, len >= 2")
+        self.bounds = bounds
+        self._lo = bounds[0]
+        self._log_g = math.log(bounds[1] / bounds[0])
+        # verify log spacing: the O(1) index map depends on it
+        for i, b in enumerate(bounds):
+            expect = self._lo * math.exp(i * self._log_g)
+            if not math.isclose(b, expect, rel_tol=1e-9):
+                raise ValueError("bounds must be log-spaced (use "
+                                 "log_buckets())")
+        self._counts = [0] * (len(bounds) + 1)    # + the +Inf bucket
+        self._sum = 0.0
+        self._n = 0
+
+    def _index(self, v: float) -> int:
+        if v <= self._lo:
+            return 0
+        # bucket i holds (bounds[i-1], bounds[i]]
+        i = int(math.ceil(math.log(v / self._lo) / self._log_g - 1e-12))
+        return min(i, len(self.bounds))
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        i = self._index(v)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._n += 1
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._n
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def snapshot(self) -> Tuple[List[int], float, int]:
+        with self._lock:
+            return list(self._counts), self._sum, self._n
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Estimated ``q``-quantile (0..1): find the bucket holding the
+        rank, log-interpolate inside it.  None while empty.  The +Inf
+        bucket reports the last finite bound (an under-estimate — by
+        then the histogram's range was simply too small)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        counts, _, n = self.snapshot()
+        if n == 0:
+            return None
+        rank = q * n
+        cum = 0.0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                if i >= len(self.bounds):          # +Inf bucket
+                    return self.bounds[-1]
+                hi = self.bounds[i]
+                lo = self.bounds[i - 1] if i > 0 else hi / math.exp(
+                    self._log_g)
+                frac = (rank - cum) / c
+                return lo * (hi / lo) ** max(frac, 0.0)
+            cum += c
+        return self.bounds[-1]
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class _Family:
+    """A named metric plus its labeled children."""
+
+    def __init__(self, name: str, help_: str, kind: str,
+                 label_names: Tuple[str, ...],
+                 bounds: Optional[Sequence[float]]):
+        self.name = name
+        self.help = help_
+        self.kind = kind
+        self.label_names = label_names
+        self.bounds = bounds
+        self._children: Dict[Tuple[Tuple[str, str], ...], _Child] = {}
+        self._lock = threading.Lock()
+
+    def labels(self, **labels: str) -> _Child:
+        if tuple(sorted(labels)) != tuple(sorted(self.label_names)):
+            raise ValueError(
+                f"{self.name}: expected labels {self.label_names}, "
+                f"got {tuple(labels)}")
+        key = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = (Histogram(self.bounds) if self.kind == "histogram"
+                         else _KINDS[self.kind]())
+                self._children[key] = child
+            return child
+
+    @property
+    def default(self) -> _Child:
+        """The unlabeled child (only for label-less families)."""
+        if self.label_names:
+            raise ValueError(f"{self.name} takes labels "
+                             f"{self.label_names}")
+        return self.labels()
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {_escape(self.help)}",
+                 f"# TYPE {self.name} {self.kind}"]
+        with self._lock:
+            items = sorted(self._children.items())
+        for key, child in items:
+            if self.kind == "histogram":
+                counts, total, n = child.snapshot()
+                cum = 0
+                for b, c in zip(child.bounds, counts):
+                    cum += c
+                    lab = key + (("le", _fmt(b)),)
+                    lines.append(
+                        f"{self.name}_bucket{_label_str(lab)} {cum}")
+                lab = key + (("le", "+Inf"),)
+                lines.append(f"{self.name}_bucket{_label_str(lab)} {n}")
+                lines.append(f"{self.name}_sum{_label_str(key)} "
+                             f"{_fmt(total)}")
+                lines.append(f"{self.name}_count{_label_str(key)} {n}")
+            else:
+                lines.append(f"{self.name}{_label_str(key)} "
+                             f"{_fmt(child.value)}")
+        return lines
+
+
+class MetricsRegistry:
+    """Create-or-get metric families; render the whole set as Prometheus
+    text exposition.  All methods are thread-safe."""
+
+    def __init__(self):
+        self._families: Dict[str, _Family] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, help_: str, kind: str,
+             label_names: Sequence[str],
+             bounds: Optional[Sequence[float]] = None) -> _Family:
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name {name!r}")
+        label_names = tuple(label_names)
+        for ln in label_names:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"bad label name {ln!r}")
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = _Family(name, help_, kind, label_names, bounds)
+                self._families[name] = fam
+            elif fam.kind != kind or fam.label_names != label_names:
+                raise ValueError(
+                    f"metric {name!r} re-registered with different "
+                    f"kind/labels")
+            return fam
+
+    def counter(self, name: str, help_: str = "",
+                labels: Sequence[str] = ()) -> _Family:
+        return self._get(name, help_, "counter", labels)
+
+    def gauge(self, name: str, help_: str = "",
+              labels: Sequence[str] = ()) -> _Family:
+        return self._get(name, help_, "gauge", labels)
+
+    def histogram(self, name: str, help_: str = "",
+                  labels: Sequence[str] = (),
+                  bounds: Sequence[float] = LATENCY_BUCKETS_S) -> _Family:
+        return self._get(name, help_, "histogram", labels, bounds)
+
+    def render(self) -> str:
+        with self._lock:
+            fams = [self._families[k] for k in sorted(self._families)]
+        lines: List[str] = []
+        for fam in fams:
+            lines.extend(fam.render())
+        return "\n".join(lines) + "\n"
+
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "log_buckets", "LATENCY_BUCKETS_S", "RATIO_BUCKETS"]

@@ -1,0 +1,149 @@
+"""Quantization-health monitors: the paper's Eq. 1 quantities, live.
+
+Runtime Smooth's whole claim is that the per-channel absmax scales
+``s_j = max_n |X[n, j]|`` tame activation outliers so per-token int4
+quantization stays accurate.  This module samples those quantities from
+the REAL serving path — the token batch the engine is about to decode —
+and records them as histograms so drift toward int4 saturation is
+visible on ``/metrics`` instead of only in offline figures:
+
+* ``smooth_scale_max``   — max_j s_j of the sampled activations
+* ``smooth_scale_spread``— max_j s_j / median_j s_j (outlier severity;
+  flat ≈ 1 means no outliers, large means a few channels dominate)
+* ``int4_clip_rate``     — fraction of quantized codes at ±qmax after
+  grouped smoothing + per-token quant (Eq. 2); a healthy RRS pipeline
+  sits near 1/K (one absmax element per token row saturates by
+  construction), a drifting one climbs
+* ``spike_outliers``     — channels with s_j > ``spike_factor`` × median
+  (the paper's spike-outlier population, Fig. 2)
+
+The probe is a SEPARATE small jitted function over the embedding rows of
+the current step's tokens — it never touches the decode graph, so
+``telemetry_every=0`` (the default) provably changes nothing
+(``tests/test_telemetry.py`` pins decode-jaxpr and greedy-token
+identity).  On sampled steps it costs one tiny device program plus a
+host sync of four scalars.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hadamard, quant, smooth
+
+SPIKE_FACTOR = 8.0        # channels with s > 8x median count as spikes
+
+
+@partial(jax.jit, static_argnames=("a_bits", "group", "reorder",
+                                   "use_rotation", "rotate_block",
+                                   "spike_factor"))
+def _probe(embed: jnp.ndarray, tokens: jnp.ndarray, emb_scale: float,
+           *, a_bits: int, group: int, reorder: bool, use_rotation: bool,
+           rotate_block: int, spike_factor: float):
+    """Eq. 1 quantities for the activations X = embed[tokens]·scale,
+    after the method's rotation (if any) — the same tensor the first
+    quantized GEMM of the step sees."""
+    x = jnp.take(embed, tokens.reshape(-1), axis=0).astype(jnp.float32)
+    x = x * emb_scale
+    if use_rotation:
+        blk = hadamard.pick_rotate_block(x.shape[-1], rotate_block)
+        x = hadamard.rotate(x, block=blk)
+    s = smooth.runtime_scales(x)                       # Eq. 1, (K,)
+    med = jnp.maximum(jnp.median(s), 1e-8)
+    smooth_max = jnp.max(s)
+    spread = smooth_max / med
+    spikes = jnp.sum(s > spike_factor * med)
+    if a_bits < 16:
+        x_sm, _, _ = smooth.smooth(x, group=group, reorder=reorder)
+        codes, _ = quant.quantize_per_channel(x_sm, a_bits, axis=-1)
+        clip = jnp.mean(
+            (jnp.abs(codes) >= quant.qmax(a_bits)).astype(jnp.float32))
+    else:
+        clip = jnp.float32(0.0)
+    return smooth_max, spread, spikes, clip
+
+
+class QuantHealthProbe:
+    """Samples Eq. 1 health numbers into registry histograms + gauges.
+
+    Construct once per engine; call :meth:`sample` on telemetry-sampled
+    steps with the embed table and the step's token ids.  Safe no-op
+    when the params tree has no dense ``embed`` array.
+    """
+
+    def __init__(self, registry, spike_factor: float = SPIKE_FACTOR):
+        self.spike_factor = float(spike_factor)
+        self.samples = 0
+        r = registry
+        from repro.serve.telemetry.metrics import log_buckets
+        self._h_max = r.histogram(
+            "repro_quant_smooth_scale_max",
+            "Eq.1 per-channel absmax: max over channels, sampled steps",
+            bounds=log_buckets(1e-3, 1e3, 49)).default
+        self._h_spread = r.histogram(
+            "repro_quant_smooth_scale_spread",
+            "max/median of Eq.1 channel scales (outlier severity)",
+            bounds=log_buckets(1.0, 4096.0, 25)).default
+        self._h_clip = r.histogram(
+            "repro_quant_int4_clip_rate",
+            "fraction of activation codes at +-qmax after RRS smoothing",
+            bounds=log_buckets(1e-6, 1.0, 25)).default
+        self._h_spikes = r.histogram(
+            "repro_quant_spike_outliers",
+            "channels with scale > spike_factor x median, sampled steps",
+            bounds=log_buckets(1.0, 4096.0, 25)).default
+        self._g_last: Dict[str, object] = {
+            "smooth_scale_max": r.gauge(
+                "repro_quant_smooth_scale_max_last",
+                "most recent sampled smooth-scale max").default,
+            "smooth_scale_spread": r.gauge(
+                "repro_quant_smooth_scale_spread_last",
+                "most recent sampled smooth-scale spread").default,
+            "int4_clip_rate": r.gauge(
+                "repro_quant_int4_clip_rate_last",
+                "most recent sampled int4 clip rate").default,
+            "spike_outliers": r.gauge(
+                "repro_quant_spike_outliers_last",
+                "most recent sampled spike-outlier count").default,
+        }
+
+    def sample(self, params, tokens, qcfg, emb_scale: float = 1.0
+               ) -> Optional[Dict[str, float]]:
+        """Run the probe on ``embed[tokens]``; record + return the four
+        health numbers (None when the model has no embed table)."""
+        embed = params.get("embed") if hasattr(params, "get") else None
+        if embed is None or getattr(embed, "ndim", 0) != 2:
+            return None
+        tokens = jnp.asarray(tokens)
+        if tokens.size == 0:
+            return None
+        group = qcfg.group_size if (
+            qcfg.group_size > 1
+            and embed.shape[-1] % qcfg.group_size == 0) else 1
+        mx, spread, spikes, clip = _probe(
+            embed, tokens, float(emb_scale),
+            a_bits=int(qcfg.a_bits), group=int(group),
+            reorder=bool(qcfg.reorder and group > 1),
+            use_rotation=bool(qcfg.uses_rotation),
+            rotate_block=int(qcfg.rotate_block),
+            spike_factor=self.spike_factor)
+        out = {
+            "smooth_scale_max": float(mx),
+            "smooth_scale_spread": float(spread),
+            "spike_outliers": float(spikes),
+            "int4_clip_rate": float(clip),
+        }
+        self._h_max.observe(max(out["smooth_scale_max"], 1e-9))
+        self._h_spread.observe(max(out["smooth_scale_spread"], 1.0))
+        self._h_clip.observe(max(out["int4_clip_rate"], 1e-9))
+        self._h_spikes.observe(max(out["spike_outliers"], 1.0))
+        for k, g in self._g_last.items():
+            g.set(out[k])
+        self.samples += 1
+        return out
+
+
+__all__ = ["QuantHealthProbe", "SPIKE_FACTOR"]

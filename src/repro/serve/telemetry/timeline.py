@@ -1,0 +1,117 @@
+"""Step timeline: a bounded ring buffer of per-scheduler-step records.
+
+Answers "what did the batch look like at step t" without grepping logs:
+every iteration of either serve loop (blocking ``ServingEngine.step_once``
+or the async chained loop) appends exactly ONE :class:`StepRecord` via
+``record_step()`` — occupancy, frozen rows, queue depth, what kind of
+work ran, admissions/preemptions/quarantines that happened during the
+step, device-wait time, async launch/consume timestamps, the chain-break
+reason when the double-buffered loop fell back to blocking, and any
+fault sites that fired (so chaos benchmarks can correlate injected
+faults with observed tail latency).
+
+The ring is bounded (drop-oldest, ``dropped`` counts evictions), so a
+long-lived server keeps a fixed-size flight recorder of the most recent
+N steps.  ``snapshot()`` returns plain dicts for ``/stats`` and tests.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class StepRecord:
+    """One scheduler iteration, as observed from the host."""
+    step: int                      # monotone step index (engine lifetime)
+    t_start: float                 # perf_counter at step entry
+    t_end: float                   # perf_counter at step exit
+    kind: str                      # prefill | chunk | decode | spec | idle
+    occupancy: int                 # live slots at step exit
+    frozen_rows: int               # parked/frozen decode rows (async)
+    queue_depth: int               # waiting requests at step exit
+    admissions: int = 0            # requests seated during the step
+    preemptions: int = 0           # slots evicted back to queue
+    quarantines: int = 0           # rows quarantined for numerics
+    finished: int = 0              # requests that reached a terminal state
+    committed_tokens: int = 0      # tokens committed to streams/outputs
+    device_wait_s: float = 0.0     # host time blocked on device sync
+    launch_ts: Optional[float] = None    # async: dispatch timestamp
+    consume_ts: Optional[float] = None   # async: result-consume timestamp
+    chain_break: Optional[str] = None    # async: why chaining stopped
+    fault_tags: Tuple[str, ...] = ()     # fault sites that fired this step
+
+    def to_dict(self) -> Dict:
+        d = {
+            "step": self.step,
+            "t_start": self.t_start,
+            "t_end": self.t_end,
+            "duration_s": self.t_end - self.t_start,
+            "kind": self.kind,
+            "occupancy": self.occupancy,
+            "frozen_rows": self.frozen_rows,
+            "queue_depth": self.queue_depth,
+            "admissions": self.admissions,
+            "preemptions": self.preemptions,
+            "quarantines": self.quarantines,
+            "finished": self.finished,
+            "committed_tokens": self.committed_tokens,
+            "device_wait_s": self.device_wait_s,
+            "launch_ts": self.launch_ts,
+            "consume_ts": self.consume_ts,
+            "chain_break": self.chain_break,
+            "fault_tags": list(self.fault_tags),
+        }
+        return d
+
+
+class StepTimeline:
+    """Thread-safe bounded ring of :class:`StepRecord`."""
+
+    def __init__(self, maxlen: int = 2048):
+        self.maxlen = maxlen
+        self._ring: deque = deque(maxlen=maxlen)
+        self._lock = threading.Lock()
+        self.dropped = 0
+        self._steps = 0
+
+    def record(self, rec: StepRecord) -> None:
+        with self._lock:
+            if len(self._ring) == self._ring.maxlen:
+                self.dropped += 1
+            self._ring.append(rec)
+            self._steps += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    @property
+    def total_steps(self) -> int:
+        with self._lock:
+            return self._steps
+
+    def last(self) -> Optional[StepRecord]:
+        with self._lock:
+            return self._ring[-1] if self._ring else None
+
+    def snapshot(self, n: Optional[int] = None) -> List[Dict]:
+        """The most recent ``n`` records (all, if None) as plain dicts."""
+        with self._lock:
+            recs = list(self._ring)
+        if n is not None:
+            recs = recs[-n:]
+        return [r.to_dict() for r in recs]
+
+    def kind_counts(self) -> Dict[str, int]:
+        with self._lock:
+            recs = list(self._ring)
+        out: Dict[str, int] = {}
+        for r in recs:
+            out[r.kind] = out.get(r.kind, 0) + 1
+        return out
+
+
+__all__ = ["StepRecord", "StepTimeline"]

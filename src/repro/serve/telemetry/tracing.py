@@ -1,0 +1,176 @@
+"""Per-request tracing: phase spans recorded at host-side scheduler
+boundaries, exportable as Chrome trace-event JSON.
+
+Every :class:`~repro.serve.engine.Request` gets a trace id (its ``rid``)
+and moves through named PHASES — ``queued`` → ``prefill`` → ``decode``
+(→ ``queued`` again after a preemption → ``prefill`` on resume) — until
+a terminal ``finish`` instant (``stop`` / ``length`` / ``cancelled`` /
+``expired`` / ``error`` / ``rejected``).  The engine records phase
+transitions at the SAME host boundaries it already owns (submit, seat,
+first commit, preempt, reclaim), so tracing changes nothing inside any
+jit graph.
+
+Spans close by construction: :meth:`TraceRecorder.phase` ends the
+request's current phase before opening the next, and
+:meth:`TraceRecorder.finish` closes whatever is open plus the outer
+``request`` span — ``tests/test_telemetry.py`` pins that the full
+finish matrix {finish, cancel, expired, preempted-resume, quarantined-
+error} leaves no dangling span.
+
+Export is the Chrome trace-event format (``{"traceEvents": [...]}``):
+complete ``"ph": "X"`` events with microsecond ``ts``/``dur``, one
+``tid`` per request plus ``tid`` 0 for engine-scope step events — load
+the JSON in Perfetto / ``chrome://tracing`` and a request's life
+renders as a lane of nested phase bars.
+
+The event buffer is BOUNDED (drop-oldest ring; ``dropped_events``
+counts what fell off) so a long-lived server cannot grow without
+limit; open-span bookkeeping is per live request and is removed at
+``finish``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+ENGINE_TID = 0          # the engine-scope lane in the exported trace
+
+
+class TraceRecorder:
+    """Thread-safe span recorder.  All timestamps are
+    ``time.perf_counter()`` seconds; export converts to µs relative to
+    the recorder's epoch so Perfetto timelines start near 0."""
+
+    def __init__(self, max_events: int = 20000):
+        self._events: deque = deque(maxlen=max_events)
+        self._open: Dict[int, List[Tuple[str, float, dict]]] = {}
+        self._lock = threading.Lock()
+        self._epoch = time.perf_counter()
+        self.dropped_events = 0
+        self.max_events = max_events
+
+    # -- recording ---------------------------------------------------------
+
+    def _emit(self, ev: dict) -> None:
+        if len(self._events) == self._events.maxlen:
+            self.dropped_events += 1
+        self._events.append(ev)
+
+    def begin(self, rid: int, name: str,
+              ts: Optional[float] = None, **args) -> None:
+        ts = time.perf_counter() if ts is None else ts
+        with self._lock:
+            self._open.setdefault(rid, []).append((name, ts, args))
+
+    def end(self, rid: int, name: str,
+            ts: Optional[float] = None, **args) -> None:
+        """Close the MOST RECENT open span named ``name`` (LIFO — spans
+        nest).  Unknown spans are ignored (idempotent close)."""
+        ts = time.perf_counter() if ts is None else ts
+        with self._lock:
+            stack = self._open.get(rid, [])
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i][0] == name:
+                    _, t0, a0 = stack.pop(i)
+                    a0.update(args)
+                    self._emit({"name": name, "ph": "X", "tid": rid,
+                                "ts": t0, "dur": ts - t0, "args": a0})
+                    return
+
+    def phase(self, rid: int, name: str,
+              ts: Optional[float] = None, **args) -> None:
+        """Transition the request to phase ``name``: end its current
+        phase span (if any), begin the new one.  The outer ``request``
+        span (opened by :meth:`submit`) is left alone."""
+        ts = time.perf_counter() if ts is None else ts
+        with self._lock:
+            stack = self._open.get(rid, [])
+            while stack and stack[-1][0] != "request":
+                n, t0, a0 = stack.pop()
+                self._emit({"name": n, "ph": "X", "tid": rid,
+                            "ts": t0, "dur": ts - t0, "args": a0})
+            stack.append((name, ts, args))
+            self._open[rid] = stack
+
+    def submit(self, rid: int, ts: Optional[float] = None, **args) -> None:
+        """Open the outer ``request`` span and the ``queued`` phase."""
+        ts = time.perf_counter() if ts is None else ts
+        self.begin(rid, "request", ts=ts, **args)
+        self.phase(rid, "queued", ts=ts)
+
+    def instant(self, rid: int, name: str,
+                ts: Optional[float] = None, **args) -> None:
+        ts = time.perf_counter() if ts is None else ts
+        with self._lock:
+            self._emit({"name": name, "ph": "i", "tid": rid, "ts": ts,
+                        "s": "t", "args": args})
+
+    def finish(self, rid: int, reason: Optional[str],
+               ts: Optional[float] = None, **args) -> None:
+        """Terminal: close every open span (innermost first) and drop
+        the request's bookkeeping.  Safe to call twice (second is a
+        no-op) — quarantine marks then reclaim sweeps."""
+        ts = time.perf_counter() if ts is None else ts
+        with self._lock:
+            stack = self._open.pop(rid, None)
+            if stack is None:
+                return
+            for n, t0, a0 in reversed(stack):
+                if n == "request":
+                    a0["finish_reason"] = reason
+                a0.update(args if n == "request" else {})
+                self._emit({"name": n, "ph": "X", "tid": rid,
+                            "ts": t0, "dur": ts - t0, "args": a0})
+            self._emit({"name": f"finish:{reason}", "ph": "i",
+                        "tid": rid, "ts": ts, "s": "t", "args": {}})
+
+    def step(self, name: str, t0: float, t1: float, **args) -> None:
+        """Engine-scope step span (tid 0): one bar per scheduler
+        iteration in the exported timeline."""
+        with self._lock:
+            self._emit({"name": name, "ph": "X", "tid": ENGINE_TID,
+                        "ts": t0, "dur": t1 - t0, "args": args})
+
+    # -- introspection / export --------------------------------------------
+
+    def open_spans(self, rid: int) -> List[str]:
+        """Names of the request's still-open spans (outermost first) —
+        the test hook for the spans-close contract."""
+        with self._lock:
+            return [n for n, _, _ in self._open.get(rid, [])]
+
+    def open_requests(self) -> List[int]:
+        with self._lock:
+            return sorted(self._open)
+
+    def export(self) -> dict:
+        """Chrome trace-event JSON (dict — callers ``json.dumps`` it).
+        ``ts``/``dur`` are µs since the recorder epoch; ``pid`` is the
+        engine (0), ``tid`` the request id (0 = engine-scope steps)."""
+        def us(t: float) -> float:
+            return round((t - self._epoch) * 1e6, 3)
+
+        with self._lock:
+            events = list(self._events)
+        out = []
+        for ev in events:
+            o = {"name": ev["name"], "ph": ev["ph"], "pid": 0,
+                 "tid": ev["tid"], "ts": us(ev["ts"]),
+                 "args": ev.get("args", {})}
+            if ev["ph"] == "X":
+                o["dur"] = round(ev["dur"] * 1e6, 3)
+            if ev["ph"] == "i":
+                o["s"] = ev.get("s", "t")
+            out.append(o)
+        meta = [{"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+                 "args": {"name": "rrs-serving-engine"}},
+                {"name": "thread_name", "ph": "M", "pid": 0,
+                 "tid": ENGINE_TID, "args": {"name": "engine-steps"}}]
+        return {"traceEvents": meta + out,
+                "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped_events}}
+
+
+__all__ = ["TraceRecorder", "ENGINE_TID"]

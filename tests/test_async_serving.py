@@ -256,10 +256,12 @@ def test_tokenizer_decode_is_total():
 
 def test_http_sse_smoke(tiny):
     """End-to-end over a real socket: POST /generate streams SSE events
-    ending in a done record, /stats and /healthz answer, drain leaves no
-    thread or open streams (asserted inside run_smoke)."""
+    ending in a done record, /stats and /healthz answer, /metrics
+    exposition + /trace spans validate, drain leaves no thread or open
+    streams (asserted inside run_smoke)."""
     from repro.launch.serve_http import run_smoke
     model, params = tiny
     eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
-                             policy=AdmissionPolicy(max_queue=8))
+                             policy=AdmissionPolicy(max_queue=8),
+                             telemetry=True)
     run_smoke(eng)

@@ -1,0 +1,448 @@
+"""Serving telemetry (ISSUE 9): the dependency-free observability layer.
+
+* histogram math — log-spaced bucket index / cumulative counts /
+  log-interpolated quantiles pinned against exact numpy percentiles
+  (within one bucket-growth factor, the layer's documented contract);
+* Prometheus text exposition — every rendered line parses under the
+  name/label grammar, HELP/TYPE headers present, bucket counts
+  cumulative with a ``+Inf`` terminal;
+* per-request tracing — spans nest and CLOSE for the full lifecycle
+  matrix {finish, cancel, expired, preempted-resume, quarantined-error}
+  (no leaked open spans after any terminal path);
+* step timeline — the ring stays bounded under long runs and keeps an
+  honest dropped count;
+* the zero-cost contract — ``telemetry_every=0`` leaves the decode
+  graph byte-identical (lowered-text check) and greedy outputs
+  token-identical to a telemetry-free engine;
+* satellites — fault latency sleeps land in the histogram and tag the
+  step record; ``server_stats()`` carries the full schema (dense
+  ``attn_io`` block, ``telemetry`` summary) on every configuration.
+"""
+import math
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.async_core import AsyncServingEngine
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.telemetry import Telemetry
+from repro.serve.telemetry.metrics import (Histogram, MetricsRegistry,
+                                           log_buckets)
+from repro.serve.telemetry.timeline import StepRecord, StepTimeline
+from repro.serve.telemetry.tracing import TraceRecorder
+
+TINY = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256, dtype="float32")
+FP = QuantConfig()
+PROMPTS = ["abcdef", "ghijkl", "mnopqr", "stuvwx"]
+BUDGETS = [10, 8, 12, 6]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# histogram math
+# ---------------------------------------------------------------------------
+
+def test_log_buckets_shape_and_spacing():
+    b = log_buckets(1e-3, 1e3, 25)
+    assert len(b) == 25
+    assert b[0] == pytest.approx(1e-3) and b[-1] == pytest.approx(1e3)
+    ratios = [b[i + 1] / b[i] for i in range(len(b) - 1)]
+    assert max(ratios) / min(ratios) < 1 + 1e-9
+
+
+def test_histogram_index_boundaries():
+    h = Histogram(bounds=log_buckets(1.0, 1024.0, 11))   # growth = 2
+    # a value EXACTLY on a bound belongs to that bound's bucket (le=)
+    for i, bound in enumerate(h.bounds):
+        assert h._index(bound) == i
+    assert h._index(0.5) == 0                 # below range clamps low
+    assert h._index(2048.0) == len(h.bounds)  # above range -> +Inf
+
+
+def test_histogram_quantiles_vs_numpy():
+    rng = np.random.default_rng(0)
+    xs = np.exp(rng.normal(-3.0, 1.5, size=5000))     # lognormal seconds
+    h = Histogram()                                   # LATENCY_BUCKETS_S
+    for x in xs:
+        h.observe(float(x))
+    g = h.bounds[1] / h.bounds[0]                     # bucket growth
+    for q in (0.10, 0.50, 0.90, 0.99):
+        exact = float(np.percentile(xs, q * 100))
+        est = h.quantile(q)
+        assert est is not None
+        assert exact / g <= est <= exact * g, (q, exact, est)
+    assert h.count == len(xs)
+    assert h.sum == pytest.approx(float(xs.sum()), rel=1e-6)
+
+
+def test_histogram_empty_and_overflow():
+    h = Histogram(bounds=log_buckets(1.0, 100.0, 5))
+    assert h.quantile(0.5) is None
+    h.observe(1e9)                            # lands in +Inf bucket
+    # the estimate stays finite: reports the last finite bound
+    assert h.quantile(0.99) == pytest.approx(h.bounds[-1])
+
+
+def test_counter_set_total_is_max_monotonic():
+    r = MetricsRegistry()
+    c = r.counter("x_total", "t").default
+    c.set_total(5)
+    c.set_total(3)                            # a racing stale mirror
+    assert c.value == 5
+    c.inc(2)
+    assert c.value == 7
+
+
+def test_registry_rejects_kind_and_label_conflicts():
+    r = MetricsRegistry()
+    r.counter("a_total", "t")
+    with pytest.raises(ValueError):
+        r.gauge("a_total", "t")
+    r.counter("b_total", "t", labels=("site",))
+    with pytest.raises(ValueError):
+        r.counter("b_total", "t", labels=("reason",))
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition grammar
+# ---------------------------------------------------------------------------
+
+_SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"(,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})?'
+    r' [^ ]+$')
+
+
+def test_prometheus_exposition_parses():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests", labels=("reason",)) \
+        .labels(reason="stop").inc(3)
+    r.gauge("depth", "queue depth").default.set(2)
+    h = r.histogram("lat_seconds", "latency",
+                    bounds=log_buckets(0.001, 10.0, 9)).default
+    for v in (0.002, 0.01, 0.01, 5.0, 99.0):
+        h.observe(v)
+    text = r.render()
+    assert text.endswith("\n")
+    helps, types, samples = 0, 0, []
+    for line in text.splitlines():
+        if line.startswith("# HELP"):
+            helps += 1
+        elif line.startswith("# TYPE"):
+            types += 1
+        else:
+            assert _SAMPLE.match(line), line
+            samples.append(line)
+    assert helps == 3 and types == 3 and samples
+    # histogram: cumulative buckets, +Inf terminal equals _count
+    buckets = [line for line in samples if "lat_seconds_bucket" in line]
+    counts = [float(b.rsplit(" ", 1)[1]) for b in buckets]
+    assert counts == sorted(counts)
+    assert 'le="+Inf"' in buckets[-1] and counts[-1] == 5
+    count_line = next(l for l in samples
+                      if l.startswith("lat_seconds_count"))
+    assert float(count_line.rsplit(" ", 1)[1]) == 5
+
+
+# ---------------------------------------------------------------------------
+# tracing primitives
+# ---------------------------------------------------------------------------
+
+def test_trace_spans_nest_close_and_finish_idempotent():
+    tr = TraceRecorder()
+    tr.submit(7, prompt_tokens=4)
+    tr.phase(7, "prefill")
+    tr.phase(7, "decode")
+    assert [n for n, _, _ in tr._open[7]] == ["request", "decode"]
+    tr.finish(7, "stop", tokens=3)
+    assert tr.open_requests() == []
+    tr.finish(7, "stop")                      # second call: no-op
+    out = tr.export()
+    evs = out["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X" and e["tid"] == 7]
+    assert {e["name"] for e in xs} == {"request", "queued", "prefill",
+                                       "decode"}
+    assert all("dur" in e for e in xs)
+    req = next(e for e in xs if e["name"] == "request")
+    assert req["args"]["finish_reason"] == "stop"
+    assert any(e["ph"] == "i" and e["name"] == "finish:stop" for e in evs)
+    # nesting: every child span sits inside [request.ts, request.ts+dur]
+    for e in xs:
+        assert e["ts"] >= req["ts"] - 1
+        assert e["ts"] + e["dur"] <= req["ts"] + req["dur"] + 1
+
+
+def test_trace_ring_bounded():
+    tr = TraceRecorder(max_events=32)
+    for i in range(200):
+        tr.instant(0, f"i{i}")
+    assert len(tr._events) == 32
+    assert tr.dropped_events == 168
+    assert tr.export()["otherData"]["dropped_events"] == 168
+
+
+# ---------------------------------------------------------------------------
+# step timeline ring
+# ---------------------------------------------------------------------------
+
+def test_step_ring_bounded_under_long_runs():
+    tl = StepTimeline(maxlen=16)
+    for i in range(100):
+        tl.record(StepRecord(step=i, t_start=float(i), t_end=i + 0.5,
+                             kind="decode", occupancy=1, frozen_rows=0,
+                             queue_depth=0))
+    assert len(tl) == 16
+    assert tl.total_steps == 100 and tl.dropped == 84
+    snap = tl.snapshot()
+    assert [r["step"] for r in snap] == list(range(84, 100))
+    assert snap[-1]["duration_s"] == pytest.approx(0.5)
+    assert tl.kind_counts() == {"decode": 16}
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle matrix: spans close on EVERY terminal path
+# ---------------------------------------------------------------------------
+
+def _finish_instants(tel):
+    return [e["name"] for e in tel.export_trace()["traceEvents"]
+            if e["ph"] == "i" and e["name"].startswith("finish:")]
+
+
+def test_trace_matrix_finish_cancel_expired(tiny):
+    """One engine, three terminal paths: a normal length-capped finish,
+    a mid-stream cancel, and a pre-admission deadline expiry — every
+    request's span stack is closed and the reason counter matches."""
+    model, params = tiny
+    eng = AsyncServingEngine(model, params, FP, max_batch=2, max_len=96,
+                             telemetry=True)
+    victim = eng.stream("abcdef", max_new_tokens=64)
+    normal = eng.stream("ghijkl", max_new_tokens=6)
+    while len(victim.request.out_tokens) < 2:
+        eng.step_once()
+    victim.cancel()
+    expired = eng.stream("mnopqr", max_new_tokens=8, deadline_s=1e-6)
+    eng.run()
+    victim.result(timeout=5)
+    normal.result(timeout=5)
+    expired.result(timeout=5)
+    assert victim.finish_reason == "cancelled"
+    assert normal.finish_reason == "length"
+    assert expired.finish_reason == "expired"
+
+    tel = eng.telemetry
+    assert tel.trace.open_requests() == []
+    fins = _finish_instants(tel)
+    assert sorted(fins) == ["finish:cancelled", "finish:expired",
+                            "finish:length"]
+    fam = tel._f_finished
+    assert fam.labels(reason="cancelled").value == 1
+    assert fam.labels(reason="length").value == 1
+    assert fam.labels(reason="expired").value == 1
+    # steps were recorded and the engine mirror tracks the legacy stats
+    assert tel.timeline.total_steps > 0
+    assert "decode" in tel.timeline.kind_counts()
+
+
+def test_trace_preempt_resume(tiny):
+    """KV-pressure preemption: the victim's trace gains a ``preempt``
+    instant and a RESUMED ``queued`` span, then still closes on its
+    normal finish — the acceptance criterion's preempt->resume arc."""
+    model, params = tiny
+    eng = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        cache="paged", block_size=8, num_blocks=3,
+                        telemetry=True)
+    for p, b in zip(PROMPTS, BUDGETS):
+        eng.submit(p, max_new_tokens=b)
+    done = eng.run()
+    assert eng.stats["preempted"] > 0, "pool was not actually scarce"
+    assert all(r.finish_reason in ("stop", "length") for r in done)
+
+    tel = eng.telemetry
+    assert tel.trace.open_requests() == []
+    evs = tel.export_trace()["traceEvents"]
+    preempts = [e for e in evs if e["ph"] == "i"
+                and e["name"] == "preempt"]
+    assert len(preempts) == eng.stats["preempted"]
+    resumed = [e for e in evs if e["ph"] == "X"
+               and e["name"] == "queued"
+               and e.get("args", {}).get("resumed")]
+    assert resumed, "no resumed queued span after preemption"
+    # a resumed seat re-opens prefill with the resume marker
+    reprefill = [e for e in evs if e["ph"] == "X"
+                 and e["name"] == "prefill"
+                 and e.get("args", {}).get("resumed")]
+    assert reprefill
+    assert len(_finish_instants(tel)) == len(done)
+    # preemptions surfaced on the step timeline too
+    assert sum(r["preemptions"] for r in tel.timeline.snapshot()) \
+        == eng.stats["preempted"]
+
+
+def test_trace_quarantined_error(tiny):
+    """A NaN-quarantined row terminates ``error`` with its spans closed
+    and the error reason counted; co-batched rows finish normally."""
+    model, params = tiny
+    inj = FaultInjector(seed=0, nonfinite_logits=(3,))
+    eng = ServingEngine(model, params, FP, max_batch=3, max_len=96,
+                        faults=inj, telemetry=True)
+    for p in PROMPTS[:3]:
+        eng.submit(p, max_new_tokens=8)
+    done = eng.run()
+    assert sum(r.finish_reason == "error" for r in done) == 1
+
+    tel = eng.telemetry
+    assert tel.trace.open_requests() == []
+    fins = _finish_instants(tel)
+    assert len(fins) == 3 and fins.count("finish:error") == 1
+    assert tel._f_finished.labels(reason="error").value == 1
+    # the fault mirror picked up the injector's site counts
+    assert tel._f_fault_fired.labels(
+        site="nonfinite_logits").value == 1
+
+
+def test_fault_latency_histogram_and_step_tag(tiny):
+    """Satellite (b): an injected latency sleep lands in the
+    ``repro_fault_sleep_seconds`` histogram AND tags the step record it
+    stalled, so timeline spikes are attributable to chaos testing."""
+    model, params = tiny
+    inj = FaultInjector(seed=0,
+                        latency=FaultSpec(at=(1,), duration_s=0.05))
+    eng = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        faults=inj, telemetry=True)
+    eng.submit("abcdef", max_new_tokens=6)
+    eng.run()
+    tel = eng.telemetry
+    h = tel._h_fault_sleep
+    assert h.count == 1 and h.sum >= 0.045
+    tagged = [r for r in tel.timeline.snapshot()
+              if "latency" in r["fault_tags"]]
+    assert len(tagged) == 1
+    assert tagged[0]["duration_s"] >= 0.045
+    assert "repro_fault_sleep_seconds_bucket" in eng.render_metrics()
+
+
+# ---------------------------------------------------------------------------
+# counters mirror legacy stats; server_stats schema
+# ---------------------------------------------------------------------------
+
+def test_metrics_mirror_engine_stats(tiny):
+    model, params = tiny
+    eng = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        telemetry=True)
+    for p, b in zip(PROMPTS[:2], BUDGETS[:2]):
+        eng.submit(p, max_new_tokens=b)
+    done = eng.run()
+    text = eng.render_metrics()
+    m = re.search(
+        r'repro_engine_steps_total\{counter="decode_steps"\} (\S+)', text)
+    assert m and float(m.group(1)) == eng.stats["decode_steps"]
+    m = re.search(r"^repro_requests_submitted_total (\S+)", text, re.M)
+    assert m and float(m.group(1)) == 2
+    m = re.search(r"^repro_tokens_committed_total (\S+)", text, re.M)
+    assert m and float(m.group(1)) == sum(len(r.out_tokens)
+                                          for r in done)
+    # TTFT observed once per request, ITL once per subsequent token
+    assert eng.telemetry._h_ttft.count == 2
+    assert eng.telemetry._h_itl.count == sum(
+        len(r.out_tokens) - 1 for r in done)
+    m = re.search(r'repro_kv_bytes\{kind="kv_bytes_resident"\} (\S+)',
+                  text)
+    assert m and float(m.group(1)) >= 0
+
+
+def test_server_stats_schema_every_configuration(tiny):
+    """Satellite (a): ``attn_io`` is a dict on EVERY configuration —
+    the dense block carries the paged schema's keys with the modeled
+    read fields None — and ``telemetry`` summarises when enabled."""
+    model, params = tiny
+    dense = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                          telemetry=True)
+    dense.submit("abcdef", max_new_tokens=4)
+    dense.run()
+    srv = dense.server_stats()
+    aio = srv["attn_io"]
+    assert aio["kind"] == "dense"
+    for k in ("impl", "kv_storage", "live_rows", "mean_ctx",
+              "resident_kv_bytes", "step_read_bytes", "read_vs_resident"):
+        assert k in aio
+    assert aio["step_read_bytes"] is None          # no block-table model
+    assert aio["resident_kv_bytes"] == srv["kv_cache"]["kv_bytes_resident"]
+    tl = srv["telemetry"]
+    assert tl is not None and tl["steps_recorded"] > 0
+    assert tl["telemetry_every"] == 0 and tl["quant_samples"] == 0
+
+    off = ServingEngine(model, params, FP, max_batch=2, max_len=96)
+    srv_off = off.server_stats()
+    assert srv_off["telemetry"] is None
+    assert srv_off["attn_io"]["kind"] == "dense"   # block present anyway
+
+    paged = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                          cache="paged", block_size=8, telemetry=True)
+    paged.submit("abcdef", max_new_tokens=4)
+    paged.run()
+    assert paged.server_stats()["attn_io"]["kind"] == "paged"
+
+
+# ---------------------------------------------------------------------------
+# quant-health probe (opt-in) and the zero-cost contract
+# ---------------------------------------------------------------------------
+
+def test_quant_health_probe_samples(tiny):
+    model, params = tiny
+    q4 = QuantConfig(4, 4, 16, method="rrs", group_size=32)
+    eng = ServingEngine(model, params, q4, max_batch=2, max_len=96,
+                        telemetry_every=2)       # implies telemetry=True
+    eng.submit("abcdef", max_new_tokens=8)
+    eng.run()
+    tel = eng.telemetry
+    assert tel.quant_samples >= 1
+    text = eng.render_metrics()
+    for fam in ("repro_quant_smooth_scale_max",
+                "repro_quant_smooth_scale_spread",
+                "repro_quant_int4_clip_rate",
+                "repro_quant_spike_outliers"):
+        assert f"{fam}_count" in text, fam
+    # Eq. 1 sanity: runtime smooth scales are positive, spread >= 1
+    assert tel._quant._h_max.sum > 0
+    assert tel._quant._h_spread.quantile(0.5) >= 1.0
+
+
+def _lower_decode_text(eng):
+    bsz = eng.max_batch
+    return eng._step_fn.lower(
+        eng.params, jnp.zeros((bsz, 1), jnp.int32), eng._cache_init,
+        jnp.ones((bsz,), jnp.int32)).as_text()
+
+
+def test_telemetry_off_is_free(tiny):
+    """The acceptance criterion: ``telemetry_every=0`` changes neither
+    the decode graph (lowered text byte-identical) nor greedy outputs —
+    telemetry records only at host boundaries."""
+    model, params = tiny
+    subs = list(zip(PROMPTS, BUDGETS))
+    base = ServingEngine(model, params, FP, max_batch=2, max_len=96)
+    tel = ServingEngine(model, params, FP, max_batch=2, max_len=96,
+                        telemetry=True, telemetry_every=0)
+    assert _lower_decode_text(tel) == _lower_decode_text(base)
+    for p, b in subs:
+        base.submit(p, max_new_tokens=b)
+        tel.submit(p, max_new_tokens=b)
+    out_base = sorted(base.run(), key=lambda r: r.rid)
+    out_tel = sorted(tel.run(), key=lambda r: r.rid)
+    assert [r.out_tokens for r in out_tel] \
+        == [r.out_tokens for r in out_base]
+    assert tel.telemetry.timeline.total_steps > 0   # it did record
