@@ -1,0 +1,201 @@
+"""Static-vs-dynamic activation-scale A/B (``act_scale_mode``).
+
+The calibration observer subsystem (``repro.calib``) freezes the Eq. 1
+runtime-smooth scales offline; this benchmark measures what that buys
+and what it costs, in one artifact
+(``benchmarks/results/static_ab.json``):
+
+* **Kernel A/B** — the fused integer pipeline timed dynamic vs static
+  at a decode and a prefill shape, with the Pallas launch counts from
+  the lowered jaxpr (static rrs keeps 2 launches but drops the
+  cross-row absmax reduction; static unrotated rs collapses to ONE
+  launch) and the modeled HBM deltas (``static2_*`` keys of
+  ``kernels.ops.modeled_linear_bytes``).  Interpret-mode wall clock:
+  relative trend only, the structural evidence is launches + bytes.
+* **Serving A/B** — the same fixed-seed request queue served by a
+  dynamic engine and a calibrated static engine (fake exec path);
+  tokens/s for both, plus the static mode's functional win measured
+  directly: the same request decoded alone and co-batched is
+  token-identical under static scales (``composition_invariant``).
+
+    PYTHONPATH=src python -m benchmarks.static_ab [--quick] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import smooth
+from repro.kernels import ops
+from repro.kernels.fwht import fwht_absmax
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from benchmarks.common import emit, timeit
+
+KERNEL_SHAPES = [(8, 2048, 2048), (512, 2048, 2048)]
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                n += _count_pallas_calls(v.jaxpr)
+            elif isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        n += _count_pallas_calls(vv.jaxpr)
+    return n
+
+
+def kernel_rows(shapes, g: int = 128):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, m, k in shapes:
+        x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((m, k)) * 0.05, jnp.float32)
+        weights = ops.RRSWeights(w, group=g)
+        bn, pad = ops._row_geometry(n)
+        xp = x if pad == 0 else jnp.concatenate(
+            [x, jnp.zeros((pad, k), x.dtype)], axis=0)
+        _, cmax = fwht_absmax(xp, bn=bn)
+        s_g = smooth.group_smooth_scales(jnp.maximum(cmax, 1e-6), g)
+
+        dyn = jax.jit(lambda xx: ops.rrs_linear_fused(xx, weights))
+        sta = jax.jit(lambda xx, sg: ops.rrs_linear_fused_fields(
+            xx, w_packed=weights.w_packed, w_scale=weights.w_scale,
+            m=weights.m, group=g, static_sg=sg))
+        y_d, y_s = dyn(x), sta(x, s_g)
+        t_d, t_s = timeit(dyn, x), timeit(sta, x, s_g)
+        modeled = ops.modeled_linear_bytes(n, k, m, group=g)
+        rows.append({
+            "name": f"kernel_{n}x{m}x{k}",
+            "us_dynamic": round(t_d, 1),
+            "us_static": round(t_s, 1),
+            "static_over_dynamic_us": round(t_s / t_d, 3),
+            # frozen at this batch's own scales: must be bit-identical
+            "static_exact_vs_dynamic": bool(jnp.all(y_d == y_s)),
+            "launches_dynamic": _count_pallas_calls(
+                jax.make_jaxpr(lambda xx: ops.rrs_linear_fused(
+                    xx, weights))(x).jaxpr),
+            "launches_static_rrs": _count_pallas_calls(
+                jax.make_jaxpr(lambda xx: ops.rrs_linear_fused_fields(
+                    xx, w_packed=weights.w_packed,
+                    w_scale=weights.w_scale, m=weights.m, group=g,
+                    static_sg=s_g))(x).jaxpr),
+            "launches_static_rs": _count_pallas_calls(
+                jax.make_jaxpr(lambda xx: ops.rrs_linear_fused_fields(
+                    xx, w_packed=weights.w_packed,
+                    w_scale=weights.w_scale, m=weights.m, group=g,
+                    rotate=False, static_sg=s_g))(x).jaxpr),
+            "static2_bytes": modeled["static2_bytes"],
+            "fused2_bytes": modeled["fused2_bytes"],
+            "static_vs_fused_bytes_drop": round(
+                modeled["static_vs_fused_bytes_drop"], 5),
+        })
+        r = rows[-1]
+        print(f"  {r['name']}: dyn {t_d:.0f}us static {t_s:.0f}us | "
+              f"launches rrs {r['launches_dynamic']}->"
+              f"{r['launches_static_rrs']} rs ->{r['launches_static_rs']}"
+              f" | exact={r['static_exact_vs_dynamic']}", flush=True)
+    return rows
+
+
+def _build_queue(engine: ServingEngine, n_requests: int, seed: int):
+    rng = np.random.default_rng(seed)
+    lengths = [4, 7, 10, 13]
+    budgets = [8, 16, 24]
+    for i in range(n_requests):
+        prompt = (1 + rng.integers(0, 200,
+                                   size=lengths[i % len(lengths)])).tolist()
+        engine.submit(prompt, max_new_tokens=budgets[i % len(budgets)])
+
+
+def _serve(model, params, qcfg, mode, n_requests, seed, **eng_kw):
+    eng = ServingEngine(model, params, qcfg, max_batch=4, max_len=128,
+                        **eng_kw)
+    _build_queue(eng, n_requests, seed)
+    eng.run()                         # untimed warmup (jit all shapes)
+    eng.reset_stats()
+    _build_queue(eng, n_requests, seed)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    return eng, {
+        "name": f"serve_{mode}",
+        "act_scale_mode": mode,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(dt, 4),
+        "tok_s": round(toks / dt, 2),
+    }
+
+
+def _composition_invariant(model, params, qcfg, **eng_kw) -> bool:
+    """Decode one request alone, then co-batched with a stranger; static
+    scales make the two token streams identical."""
+    prompt = list(range(40, 58))
+    outs = []
+    for co_batch in (False, True):
+        eng = ServingEngine(model, params, qcfg, max_batch=2,
+                            max_len=96, **eng_kw)
+        eng.submit(prompt, max_new_tokens=8)
+        if co_batch:
+            eng.submit(list(range(100, 115)), max_new_tokens=8)
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        outs.append(done[0].out_tokens)
+    return outs[0] == outs[1]
+
+
+def run(quick: bool = False, seed: int = 0):
+    rows = kernel_rows(KERNEL_SHAPES[:1] if quick else KERNEL_SHAPES)
+
+    cfg = ModelConfig(name="static-ab", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=384, vocab_size=260,
+                      max_seq_len=512, dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    q_dyn = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+    q_sta = dataclasses.replace(q_dyn, act_scale_mode="static")
+    calib = 1 + np.random.default_rng(seed).integers(0, 200, size=(4, 32))
+
+    n_requests = 6 if quick else 12
+    _, row_d = _serve(model, params, q_dyn, "dynamic", n_requests, seed)
+    _, row_s = _serve(model, params, q_sta, "static", n_requests, seed,
+                      calib_tokens=calib)
+    rows += [row_d, row_s]
+    for r in (row_d, row_s):
+        print(f"  {r['name']}: {r['tok_s']} tok/s "
+              f"({r['tokens']} tokens)", flush=True)
+
+    invariant = _composition_invariant(model, params, q_sta,
+                                       calib_tokens=calib)
+    rows.append({
+        "name": "static_ab_summary",
+        "static_over_dynamic_tok_s": round(row_s["tok_s"]
+                                           / row_d["tok_s"], 3),
+        "composition_invariant": invariant,
+    })
+    print(f"  static/dynamic tok/s = "
+          f"{rows[-1]['static_over_dynamic_tok_s']} | composition "
+          f"invariant = {invariant}", flush=True)
+    emit(rows, "static_ab")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(quick=args.quick, seed=args.seed)

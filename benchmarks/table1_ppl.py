@@ -12,9 +12,15 @@ channel-wise + SwiGLU-spike outliers of Fig. 7/9), then evaluate:
 
 The validated claims are the ORDERING and failure modes of Table 1, not
 absolute WikiText numbers: RRS ≤ QuaRot < RS ≪ SmoothQuant/RTN at A4W4.
+
+Static-scale A/B: the runtime-smooth methods are additionally evaluated
+with observer-frozen calibration scales (``act_scale_mode="static"``,
+``repro.calib``) against the dynamic Eq. 1 scales on the SAME prepared
+tree — the accuracy cost of freezing the online reduction.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import sys
 import tempfile
@@ -114,6 +120,25 @@ def run(quick: bool = False):
                          "ppl": round(ppl, 3), "acc": round(acc, 4)})
             print(f"  {scheme:10s} {method:12s} ppl={ppl:10.3f} "
                   f"acc={acc:.4f}", flush=True)
+    # static-vs-dynamic A/B: calibrate once per runtime-smooth method,
+    # evaluate the SAME frozen tree under both act_scale_mode settings
+    from repro.calib import calibrate
+    calib_toks = [jnp.asarray(b["tokens"])
+                  for b in pipeline.eval_batches(2)]
+    for method in ("rs", "rrs"):
+        base = QuantConfig(method=method, group_size=128,
+                           w_quantizer="rtn", **SCHEMES["A4W4KV16"])
+        static_cfg = dataclasses.replace(base, act_scale_mode="static")
+        frozen = calibrate(model, params, static_cfg, calib_toks)
+        for mode, qcfg in (("dynamic", base), ("static", static_cfg)):
+            ppl, acc = eval_ppl_acc(model, frozen, pipeline, qcfg,
+                                    n_batches=2 if quick else 4)
+            rows.append({"name": f"A4W4KV16/{method}/{mode}-scales",
+                         "scheme": "A4W4KV16", "method": method,
+                         "act_scale_mode": mode,
+                         "ppl": round(ppl, 3), "acc": round(acc, 4)})
+            print(f"  A4W4KV16   {method + '/' + mode:12s} "
+                  f"ppl={ppl:10.3f} acc={acc:.4f}", flush=True)
     emit(rows, "table1_ppl")
     # assertion of the paper's ordering at A4W4KV16
     by = {r["method"]: r["ppl"] for r in rows

@@ -1,0 +1,29 @@
+"""Calibration observer subsystem: static activation scales.
+
+The paper's Runtime Smooth computes its Eq. 1 channel maxima online,
+which makes every activation scale batch-global — accurate, but it
+couples rows (the serving engines' known-coupling caveat).  This package
+is the training-free alternative: run a few calibration batches through
+the prepared model, record per-linear activation statistics at the
+``qlinear`` seam, and freeze them into ``PreparedLinear`` so
+``QuantConfig(act_scale_mode="static")`` serves with scales that are
+constants of the graph — bit-invariant to batch composition, and one
+fewer online pass in the fused kernel pipeline.
+
+    from repro.calib import calibrate
+    frozen = calibrate(model, params, qcfg, calib_token_batches)
+    eng = ServingEngine(model, frozen, qcfg_static, prepare=False)
+
+See :mod:`repro.calib.observe` for the observer mechanics and
+:mod:`repro.calib.calibrate` for the drivers.
+"""
+from repro.calib.observers import (EMAObserver, MinMaxObserver,
+                                   ReservoirSampler)
+from repro.calib.observe import (ObservedScales, ObserverContext,
+                                 observing, tag_params, untag_params)
+from repro.calib.calibrate import calibrate, freeze, run_observers
+
+__all__ = ["MinMaxObserver", "EMAObserver", "ReservoirSampler",
+           "ObservedScales", "ObserverContext", "observing",
+           "tag_params", "untag_params", "calibrate", "freeze",
+           "run_observers"]

@@ -1,0 +1,126 @@
+"""Drivers for the calibrate phase: prepare → observe → freeze.
+
+The three-step pipeline (each step usable on its own):
+
+    prepared = prepare_params(params, qcfg)          # offline, as always
+    ctx = run_observers(model, prepared, qcfg, batches)
+    frozen = freeze(prepared, ctx, qcfg)             # static-ready tree
+
+or in one call::
+
+    frozen = calibrate(model, params, qcfg, batches)
+
+``frozen`` is a normal prepared tree whose PreparedLinear leaves carry
+``static_smooth`` / ``act_scale``; it round-trips through
+``save_prepared`` / ``load_prepared`` (the fields ride the generic
+ARRAY_FIELDS serialization) and serves ``act_scale_mode="static"`` in
+either engine — including ``ServingEngine.from_artifact``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import methods
+from repro.calib.observe import (ObservedScales, ObserverContext,
+                                 observing, tag_params)
+
+
+def _as_batches(batches) -> Iterable:
+    """Accept a single (B, S) / (S,) token array or an iterable of
+    them."""
+    if hasattr(batches, "ndim"):
+        return [batches]
+    return batches
+
+
+def run_observers(model, prepared_params, qcfg: QuantConfig, batches, *,
+                  ctx: Optional[ObserverContext] = None,
+                  **observer_kw) -> ObserverContext:
+    """Run calibration batches through ``model.forward`` with the
+    observer installed; returns the populated context.  The tree must
+    already be prepared (phase 1) — the observation forwards run the
+    DYNAMIC path (static fields are still empty), so the recorded
+    statistics describe exactly what the online Eq. 1 pass would see."""
+    if not methods.tree_has_prepared(prepared_params):
+        raise ValueError(
+            "run_observers expects a prepared tree; call "
+            "serve.prepare.prepare_params first (or use calibrate())")
+    if ctx is None:
+        ctx = ObserverContext(**observer_kw)
+    elif observer_kw:
+        raise TypeError("pass either ctx or observer kwargs, not both")
+    tagged = tag_params(prepared_params)
+    with observing(ctx):
+        for toks in _as_batches(batches):
+            toks = jnp.asarray(toks)
+            if toks.ndim == 1:
+                toks = toks[None, :]
+            out = model.forward(tagged, {"tokens": toks}, qcfg)
+            # flush: every debug callback lands before the next batch
+            jax.block_until_ready(out[0] if isinstance(out, tuple)
+                                  else out)
+    if not ctx.stats:
+        raise ValueError(
+            "observer saw no quantized linears — is qcfg.quantize_acts "
+            "True and the tree actually prepared?")
+    return ctx
+
+
+def freeze(prepared_params,
+           scales: Union[ObserverContext, Dict[str, ObservedScales]],
+           qcfg: QuantConfig, *, per_tensor_act: bool = True,
+           strict: bool = True):
+    """Freeze observed reductions into the tree via each method's
+    ``freeze_scales`` (registry-resolved — third-party methods inherit
+    the base behavior).  ``per_tensor_act=False`` freezes only the
+    smoothing scales, leaving the per-token α dynamic (row-local either
+    way).  ``strict`` errors on prepared leaves the observer never saw
+    (e.g. a projection the calibration batches never exercised)."""
+    if isinstance(scales, ObserverContext):
+        scales = scales.scales()
+    missing = []
+
+    def one(path, leaf):
+        if not methods.is_prepared(leaf):
+            return leaf
+        tag = leaf.obs_tag or jax.tree_util.keystr(path)
+        s = scales.get(tag)
+        if s is None:
+            missing.append(tag)
+            return leaf.replace(obs_tag=None)
+        m = methods.get_method(leaf.method)
+        return m.freeze_scales(
+            leaf, qcfg, s.channel_absmax,
+            s.act_absmax if per_tensor_act else None)
+
+    frozen = jax.tree_util.tree_map_with_path(
+        one, prepared_params, is_leaf=methods.is_prepared)
+    if missing and strict:
+        raise ValueError(
+            f"no observed statistics for prepared leaves {missing}; "
+            f"run more calibration batches or pass strict=False")
+    return frozen
+
+
+def calibrate(model, params, qcfg: QuantConfig, batches, *,
+              calib=None, keep_dense: bool = False,
+              per_tensor_act: bool = True,
+              **observer_kw):
+    """One-call prepare → observe → freeze.  ``params`` may be raw
+    (prepared here, with optional weight-calibration ``calib``) or
+    already prepared."""
+    if methods.tree_has_prepared(params):
+        prepared = params
+    else:
+        from repro.serve.prepare import prepare_params
+        prepared = prepare_params(params, qcfg, calib=calib,
+                                  keep_dense=keep_dense)
+    ctx = run_observers(model, prepared, qcfg, batches, **observer_kw)
+    return freeze(prepared, ctx, qcfg, per_tensor_act=per_tensor_act)
+
+
+__all__ = ["run_observers", "freeze", "calibrate"]

@@ -1,0 +1,184 @@
+"""Observation pass: tag prepared leaves, install the registry hook,
+collect per-linear statistics while calibration batches run.
+
+How a statistic travels from the traced forward to the host::
+
+    qlinear -> QuantMethod.apply -> _OBSERVER_HOOK (this module)
+        -> method.observe_stats(x, prepared, cfg)       # in-graph
+        -> jax.debug.callback(ctx.record, ...)          # graph -> host
+        -> MinMax/EMA/Reservoir reductions per tag      # host
+
+The tag is the leaf's tree path (``jax.tree_util.keystr``), stored in
+``PreparedLinear.obs_tag`` — static pytree metadata, so it survives jit
+and ``lax.scan`` and is readable at trace time.  A layer-stacked leaf
+(the transformer scans homogeneous stacks, one PreparedLinear per
+projection with a leading (L,) axis) fires the callback once per scanned
+slice; all slices share the leaf's tag, so the observer aggregates
+across layers — exactly the granularity at which the frozen scales are
+stored back into the artifact.
+
+``jax.debug.callback`` works under jit and scan on CPU; the driver
+blocks on each batch's output so every callback has landed before the
+next reduction step.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax
+
+from repro.core import methods
+from repro.calib.observers import (ReservoirSampler, make_channel_observer)
+
+SMOOTH_REDUCTIONS = ("minmax", "ema", "quantile")
+
+
+@dataclass
+class ObservedScales:
+    """Frozen reductions for one prepared leaf (one tag)."""
+    channel_absmax: np.ndarray     # (K,) post-rotation/perm Eq. 1 absmax
+    act_absmax: float              # per-tensor quantile of token absmax
+    group_quantiles: Optional[np.ndarray]  # (K//g,) informational
+    n_observations: int            # callback count (batches x layers)
+    n_tokens: int                  # tokens seen by the reservoirs
+
+
+class _TagStats:
+    def __init__(self, reduction: str, ema_decay: float,
+                 max_token_samples: int, seed: int):
+        self.channel = make_channel_observer(reduction, ema_decay)
+        self.tokens = ReservoirSampler(max_token_samples, seed)
+        self.groups = ReservoirSampler(max_token_samples, seed + 1)
+
+    def update(self, cmax, tok_absmax, group_absmax) -> None:
+        self.channel.update(cmax)
+        self.tokens.update(tok_absmax)
+        self.groups.update(group_absmax)
+
+
+class ObserverContext:
+    """Accumulates per-tag statistics for one calibration run.
+
+    ``smooth_reduction`` picks how the per-channel smoothing scales are
+    reduced across batches: "minmax" (default — Eq. 1 over the whole
+    calibration set), "ema", or "quantile" (per-token-group quantile,
+    expanded back to per-channel; robust to single-token spikes).
+    ``act_quantile`` sets the per-tensor α reduction over token absmax.
+    """
+
+    def __init__(self, smooth_reduction: str = "minmax",
+                 ema_decay: float = 0.9, act_quantile: float = 0.999,
+                 group_quantile: float = 0.999,
+                 max_token_samples: int = 4096, seed: int = 0):
+        if smooth_reduction not in SMOOTH_REDUCTIONS:
+            raise ValueError(f"smooth_reduction must be one of "
+                             f"{SMOOTH_REDUCTIONS}, got "
+                             f"{smooth_reduction!r}")
+        if not 0.0 < act_quantile <= 1.0:
+            raise ValueError(f"act_quantile must be in (0, 1], got "
+                             f"{act_quantile}")
+        self.smooth_reduction = smooth_reduction
+        self.ema_decay = ema_decay
+        self.act_quantile = act_quantile
+        self.group_quantile = group_quantile
+        self.max_token_samples = max_token_samples
+        self.seed = seed
+        self.stats: Dict[str, _TagStats] = {}
+        self.records = 0
+
+    # -- graph-side hook ---------------------------------------------------
+
+    def hook(self, method, x, prepared, cfg) -> None:
+        """Installed as the registry observer for the duration of a
+        calibration pass (see :func:`observing`)."""
+        if prepared.obs_tag is None or not cfg.quantize_acts:
+            return
+        st = method.observe_stats(x, prepared, cfg)
+        tag = prepared.obs_tag          # static -> readable at trace time
+        jax.debug.callback(self._recorder(tag), st["cmax"],
+                           st["tok_absmax"], st["group_absmax"])
+
+    def _recorder(self, tag: str):
+        def rec(cmax, tok_absmax, group_absmax):
+            self.record(tag, cmax, tok_absmax, group_absmax)
+        return rec
+
+    # -- host-side accumulation -------------------------------------------
+
+    def record(self, tag: str, cmax, tok_absmax, group_absmax) -> None:
+        st = self.stats.get(tag)
+        if st is None:
+            st = self.stats[tag] = _TagStats(
+                self.smooth_reduction, self.ema_decay,
+                self.max_token_samples, self.seed)
+        st.update(np.asarray(cmax), np.asarray(tok_absmax),
+                  np.asarray(group_absmax))
+        self.records += 1
+
+    def scales(self) -> Dict[str, ObservedScales]:
+        """Reduce everything seen so far into per-tag frozen scales."""
+        out: Dict[str, ObservedScales] = {}
+        for tag, st in self.stats.items():
+            channel = np.asarray(st.channel.value, np.float32)
+            gq = None
+            if st.groups.seen:
+                gq = np.asarray(st.groups.quantile(self.group_quantile),
+                                np.float32)
+            if self.smooth_reduction == "quantile":
+                if gq is None:
+                    raise ValueError(f"no group samples recorded for "
+                                     f"{tag!r}")
+                g = channel.shape[-1] // gq.shape[-1]
+                channel = np.repeat(gq, g)
+            out[tag] = ObservedScales(
+                channel_absmax=channel,
+                act_absmax=float(st.tokens.quantile(self.act_quantile)),
+                group_quantiles=gq,
+                n_observations=st.channel.count,
+                n_tokens=st.tokens.seen)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# tagging + hook lifetime
+# ---------------------------------------------------------------------------
+
+def tag_params(params):
+    """Stamp every PreparedLinear leaf with its tree path as ``obs_tag``
+    (unique per leaf; static metadata).  Returns a new tree."""
+    def one(path, leaf):
+        if methods.is_prepared(leaf):
+            return leaf.replace(obs_tag=jax.tree_util.keystr(path))
+        return leaf
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=methods.is_prepared)
+
+
+def untag_params(params):
+    """Clear ``obs_tag`` everywhere (freeze_scales also clears it)."""
+    def one(leaf):
+        if methods.is_prepared(leaf) and leaf.obs_tag is not None:
+            return leaf.replace(obs_tag=None)
+        return leaf
+    return jax.tree.map(one, params, is_leaf=methods.is_prepared)
+
+
+@contextlib.contextmanager
+def observing(ctx: ObserverContext) -> Iterator[ObserverContext]:
+    """Install ``ctx.hook`` as the registry observer for the ``with``
+    body; always uninstalls, even on error.  Nesting is rejected —
+    one calibration pass at a time per process."""
+    if methods._OBSERVER_HOOK is not None:
+        raise RuntimeError("an observer hook is already installed")
+    methods.set_observer_hook(ctx.hook)
+    try:
+        yield ctx
+    finally:
+        methods.set_observer_hook(None)
+
+
+__all__ = ["ObserverContext", "ObservedScales", "tag_params",
+           "untag_params", "observing", "SMOOTH_REDUCTIONS"]

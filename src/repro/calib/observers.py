@@ -1,0 +1,104 @@
+"""Host-side statistic reductions for the calibration observer.
+
+The in-graph half (``QuantMethod.observe_stats``) emits three arrays per
+quantized linear per batch — the Eq. 1 per-channel absmax, the per-token
+absmax of the smoothed activation, and the per-token per-group absmax.
+These classes accumulate them across batches (and across a scanned layer
+stack's slices, which share one observer) on the host:
+
+* :class:`MinMaxObserver`  — running elementwise max (torchao-style
+  min-max; the faithful "Eq. 1 over the whole calibration set").
+* :class:`EMAObserver`     — exponential moving average of the per-batch
+  maxima; discounts early outliers (useful when the calibration stream
+  is long and drifting).
+* :class:`ReservoirSampler` — uniform reservoir over tokens feeding the
+  quantile reductions (per-tensor α, per-token-group quantile scales)
+  with bounded memory, deterministic under a fixed seed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class MinMaxObserver:
+    """Running elementwise max of every update (any fixed shape)."""
+
+    def __init__(self):
+        self.value: Optional[np.ndarray] = None
+        self.count = 0
+
+    def update(self, v: np.ndarray) -> None:
+        v = np.asarray(v, np.float32)
+        self.value = (v.copy() if self.value is None
+                      else np.maximum(self.value, v))
+        self.count += 1
+
+
+class EMAObserver:
+    """EMA of per-update values: ``v_t = d*v_{t-1} + (1-d)*u_t``.
+
+    The first update seeds the average.  Updates arrive once per
+    (batch × scanned-layer slice) for stacked leaves, so the decay acts
+    per observation, not per batch — document-grade detail only, the
+    reduction is a smoothing heuristic either way.
+    """
+
+    def __init__(self, decay: float = 0.9):
+        if not 0.0 < decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
+        self.decay = decay
+        self.value: Optional[np.ndarray] = None
+        self.count = 0
+
+    def update(self, v: np.ndarray) -> None:
+        v = np.asarray(v, np.float32)
+        self.value = (v.copy() if self.value is None
+                      else self.decay * self.value
+                      + (1.0 - self.decay) * v)
+        self.count += 1
+
+
+class ReservoirSampler:
+    """Uniform reservoir over items (rows of each update) with a fixed
+    capacity; :meth:`quantile` reduces the held sample.  Deterministic
+    for a given seed + update sequence."""
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        if cap <= 0:
+            raise ValueError(f"cap must be positive, got {cap}")
+        self.cap = cap
+        self._rng = np.random.default_rng(seed)
+        self._items: list = []
+        self.seen = 0
+
+    def update(self, arr: np.ndarray) -> None:
+        arr = np.asarray(arr, np.float32)
+        if arr.ndim == 0:
+            arr = arr[None]
+        for item in arr:
+            if len(self._items) < self.cap:
+                self._items.append(np.array(item, np.float32))
+            else:
+                j = int(self._rng.integers(0, self.seen + 1))
+                if j < self.cap:
+                    self._items[j] = np.array(item, np.float32)
+            self.seen += 1
+
+    def quantile(self, q: float) -> np.ndarray:
+        if not self._items:
+            raise ValueError("quantile() on an empty reservoir")
+        return np.quantile(np.stack(self._items), q, axis=0)
+
+
+def make_channel_observer(reduction: str, ema_decay: float = 0.9):
+    """Factory for the per-channel absmax reduction ("minmax" | "ema");
+    "quantile" channel scales come from the group reservoir instead."""
+    if reduction == "ema":
+        return EMAObserver(ema_decay)
+    return MinMaxObserver()
+
+
+__all__ = ["MinMaxObserver", "EMAObserver", "ReservoirSampler",
+           "make_channel_observer"]

@@ -79,6 +79,10 @@ class QuantConfig:
     kv_storage: str = "fake"      # "fake" (QDQ bf16 cache) | "int8"
                                   # (codes+scales at rest — halves decode
                                   # HBM traffic; beyond-paper §Perf)
+    act_scale_mode: str = "dynamic"  # "dynamic" (paper Eq. 1 online) |
+                                  # "static" (observer-calibrated scales
+                                  # frozen into PreparedLinear — drops the
+                                  # batch-global coupling; see repro.calib)
 
     def __post_init__(self):
         if self.method not in _METHOD_TRAITS:
@@ -88,6 +92,15 @@ class QuantConfig:
             raise ValueError("a_bits/w_bits must be 4, 8 or 16")
         if self.kv_bits not in (4, 8, 16):
             raise ValueError("kv_bits must be 4, 8 or 16")
+        if self.act_scale_mode not in ("dynamic", "static"):
+            raise ValueError(f"act_scale_mode must be 'dynamic' or "
+                             f"'static', got {self.act_scale_mode!r}")
+
+    @property
+    def static_acts(self) -> bool:
+        """Activation quantization with frozen observer-calibrated scales
+        (requires a calibrated PreparedLinear tree; repro.calib)."""
+        return self.quantize_acts and self.act_scale_mode == "static"
 
     @property
     def quantize_acts(self) -> bool:

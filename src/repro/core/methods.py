@@ -1,18 +1,29 @@
 """Unified quantization-method registry: the single dispatch seam.
 
 Every quantization scheme in the system — the paper's RRS plus all
-baselines — is a :class:`QuantMethod` with a two-phase lifecycle:
+baselines — is a :class:`QuantMethod` with a three-phase lifecycle (the
+middle phase is optional and only used by ``act_scale_mode="static"``):
 
     prepare_weight(w, cfg, calib_x=None) -> PreparedLinear    # OFFLINE
+    observe_stats(x, prepared, cfg)      -> stats             # CALIBRATE
+    freeze_scales(prepared, cfg, ...)    -> PreparedLinear    #   "
     apply(x, prepared, cfg)              -> y                 # ONLINE
 
 ``PreparedLinear`` is a jax pytree (registered with static metadata) that
 carries everything the online path needs: the fake-quant weight, the
 rotation block, merged SmoothQuant scales, an optional frozen channel
-reorder permutation, and — for ``cfg.exec_path == "kernel"`` — packed
-int4 codes + scales for the fused Pallas GEMM.  Because it is a pytree,
-prepared leaves flow through ``jax.lax.scan`` over layer stacks, through
-``jax.jit``, and through the serving engine unchanged.
+reorder permutation, observer-frozen static activation scales
+(``static_smooth`` / ``act_scale`` — see :mod:`repro.calib`), and — for
+``cfg.exec_path == "kernel"`` — packed int4 codes + scales for the fused
+Pallas GEMM.  Because it is a pytree, prepared leaves flow through
+``jax.lax.scan`` over layer stacks, through ``jax.jit``, and through the
+serving engine unchanged.
+
+The calibration phase hooks in WITHOUT touching any dispatch site:
+:func:`set_observer_hook` installs a process-global observer that
+:meth:`QuantMethod.apply` invokes before its normal work, so a
+third-party method registered from anywhere gets observed for free (its
+``observe_stats`` inherits the base implementation unless overridden).
 
 Dispatch sites (``core/rrs.py``, ``models/layers.py:qlinear``,
 ``serve/prepare.py``, ``serve/engine.py``) all resolve through
@@ -60,30 +71,46 @@ class PreparedLinear:
                   exec_path="kernel"
       w_scale   — per-output-channel weight quant scale (M,) f32, only
                   alongside w_packed
+      static_smooth — observer-frozen per-channel activation absmax
+                  (Eq. 1 over the calibration set), stored in the
+                  POST-rotation / POST-perm channel order; (K,), or
+                  lead-dims + (K,) on layer-stacked leaves.  Feeds the
+                  static smoothing scales (``act_scale_mode="static"``).
+      act_scale — observer-frozen per-tensor absmax (quantile over
+                  calibration tokens) of the SMOOTHED activation; (1,)
+                  or lead-dims + (1,).  Freezes the per-token α.
 
     Static metadata (pytree aux, hashable — survives jit/scan):
-      method, rotated, rotate_block, group
+      method, rotated, rotate_block, group, obs_tag (transient
+      calibration tag — None outside an observation pass)
     """
 
     __slots__ = ("w_dq", "sq_scale", "perm", "w_packed", "w_scale",
-                 "method", "rotated", "rotate_block", "group")
+                 "static_smooth", "act_scale",
+                 "method", "rotated", "rotate_block", "group", "obs_tag")
 
     def __init__(self, w_dq, sq_scale=None, perm=None, w_packed=None,
-                 w_scale=None, *, method: str = "none",
-                 rotated: bool = False, rotate_block: int = 0,
-                 group: int = 0):
+                 w_scale=None, static_smooth=None, act_scale=None, *,
+                 method: str = "none", rotated: bool = False,
+                 rotate_block: int = 0, group: int = 0,
+                 obs_tag: Optional[str] = None):
         self.w_dq = w_dq
         self.sq_scale = sq_scale
         self.perm = perm
         self.w_packed = w_packed
         self.w_scale = w_scale
+        self.static_smooth = static_smooth
+        self.act_scale = act_scale
         self.method = method
         self.rotated = rotated
         self.rotate_block = rotate_block
         self.group = group
+        self.obs_tag = obs_tag
 
-    ARRAY_FIELDS = ("w_dq", "sq_scale", "perm", "w_packed", "w_scale")
-    STATIC_FIELDS = ("method", "rotated", "rotate_block", "group")
+    ARRAY_FIELDS = ("w_dq", "sq_scale", "perm", "w_packed", "w_scale",
+                    "static_smooth", "act_scale")
+    STATIC_FIELDS = ("method", "rotated", "rotate_block", "group",
+                     "obs_tag")
 
     def tree_flatten_with_keys(self):
         children = [(jax.tree_util.GetAttrKey(f), getattr(self, f))
@@ -160,6 +187,40 @@ def get_method(name: str) -> "QuantMethod":
 def available_methods() -> Tuple[str, ...]:
     """Registered method names, registration (= builtin) order."""
     return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# calibration observer hook — the observe phase's only seam
+# ---------------------------------------------------------------------------
+
+# Process-global observer, installed by repro.calib.observe.observing()
+# for the duration of a calibration pass and None otherwise.  Called as
+# ``hook(method, x, prepared, cfg)`` at the top of QuantMethod.apply —
+# BEFORE the normal online work — so every dispatch site (qlinear, the
+# serving engines, benchmarks) is observed without a single edit, and
+# third-party registered methods participate automatically.  The cost
+# when inactive is one trace-time None check.
+_OBSERVER_HOOK = None
+
+
+def set_observer_hook(fn) -> None:
+    """Install (``fn(method, x, prepared, cfg)``) or clear (``None``)
+    the calibration observer.  Prefer the ``repro.calib.observing``
+    context manager, which pairs install/clear exception-safely."""
+    global _OBSERVER_HOOK
+    _OBSERVER_HOOK = fn
+
+
+def static_fake_quant(x: jnp.ndarray, act_absmax: jnp.ndarray,
+                      bits: int) -> jnp.ndarray:
+    """Per-tensor symmetric fake quant with a FROZEN absmax (the
+    observer's calibration quantile): α = absmax / qmax, no online
+    reduction of any kind — the static counterpart of
+    ``quant.fake_quant_per_channel``'s per-token α."""
+    q = float(2 ** (bits - 1) - 1)
+    a = jnp.maximum(act_absmax.astype(jnp.float32), 1e-8) / q
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / a), -q, q)
+    return (xq * a).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -262,12 +323,74 @@ class QuantMethod:
                 and cfg.group_size > 1 and cfg.group_size % 2 == 0
                 and k % cfg.group_size == 0)
 
+    # -- calibration half (observe -> freeze) ------------------------------
+
+    def observe_stats(self, x: jnp.ndarray, prepared: PreparedLinear,
+                      cfg: QuantConfig) -> Dict[str, jnp.ndarray]:
+        """In-graph calibration statistics for one apply() call — traced
+        alongside the normal forward, shipped to the host observer via
+        ``jax.debug.callback`` (works under jit AND lax.scan).
+
+        Returns, all over the activation in its QUANTIZER coordinate
+        system (post-rotation / post-SmoothQuant / post-frozen-perm):
+          cmax        (K,)       Eq. 1 per-channel absmax — kernel A's
+                                 cross-row reduction, observed offline
+          tok_absmax  (N,)       per-token absmax of the smoothed
+                                 activation (feeds the per-tensor α
+                                 quantile)
+          group_absmax (N, K//g) per-token per-group absmax (feeds the
+                                 quantile smooth-scale reduction)
+        """
+        k = x.shape[-1]
+        x2 = x.reshape(-1, k).astype(jnp.float32)
+        if prepared.rotated:
+            x2 = hadamard.rotate(x2, block=prepared.rotate_block)
+        if prepared.sq_scale is not None:
+            x2 = x2 / prepared.sq_scale.astype(x2.dtype)
+        if prepared.perm is not None:
+            x2 = jnp.take(x2, prepared.perm, axis=-1)
+        ax = jnp.abs(x2)
+        cmax = jnp.max(ax, axis=0)
+        g = self._act_group(cfg, k)
+        if self.uses_runtime_smooth:
+            sg = smooth.group_smooth_scales(jnp.maximum(cmax, 1e-6), g)
+            x_sm = ax / (jnp.repeat(sg, g) if g > 1 else sg)
+        else:
+            x_sm = ax
+        tok_absmax = jnp.max(x_sm, axis=-1)
+        group_absmax = jnp.max(ax.reshape(-1, k // g, g), axis=-1)
+        return {"cmax": cmax, "tok_absmax": tok_absmax,
+                "group_absmax": group_absmax}
+
+    def freeze_scales(self, prepared: PreparedLinear, cfg: QuantConfig,
+                      channel_absmax, act_absmax=None) -> PreparedLinear:
+        """Freeze observer reductions into the artifact: per-channel
+        ``static_smooth`` (Eq. 1 absmax over the calibration set) and the
+        per-tensor ``act_scale`` absmax (α = act_scale / qmax at apply
+        time, so the field is bits-agnostic).  Layer-stacked leaves
+        broadcast the single observed vector over their lead dims — the
+        observer aggregates across a scanned stack's layers, matching
+        the artifact's one-leaf-per-projection granularity."""
+        ref = (prepared.w_packed if prepared.w_packed is not None
+               else prepared.w_dq)
+        lead = () if ref is None else tuple(ref.shape[:-2])
+        ss = jnp.asarray(channel_absmax, jnp.float32).reshape(-1)
+        ss = jnp.broadcast_to(ss, lead + ss.shape)
+        aa = None
+        if act_absmax is not None:
+            aa = jnp.asarray(act_absmax, jnp.float32).reshape(1)
+            aa = jnp.broadcast_to(aa, lead + (1,))
+        return prepared.replace(static_smooth=ss, act_scale=aa,
+                                obs_tag=None)
+
     # -- online half -------------------------------------------------------
 
     def apply(self, x: jnp.ndarray, prepared: PreparedLinear,
               cfg: QuantConfig) -> jnp.ndarray:
         """y = online_ops(x) @ prepared.w_dqᵀ — dispatch target of every
         quantized linear in the system."""
+        if _OBSERVER_HOOK is not None:
+            _OBSERVER_HOOK(self, x, prepared, cfg)
         if not cfg.quantize_acts:
             return self._apply_noquant(x, prepared, cfg)
         return self._apply_quant(x, prepared, cfg)
@@ -296,30 +419,75 @@ class QuantMethod:
         g = cfg.group_size
         return g if (g > 0 and k % g == 0) else 1
 
+    @staticmethod
+    def _static_ready(prepared: PreparedLinear, cfg: QuantConfig) -> bool:
+        """True when this apply should take the frozen-scale path: the
+        config asks for static scales AND the artifact carries them (a
+        calibration forward itself — fields still None — runs dynamic)."""
+        return (cfg.act_scale_mode == "static"
+                and (prepared.static_smooth is not None
+                     or prepared.act_scale is not None))
+
     def _apply_kernel(self, x, prepared, cfg):
         """Fused integer Pallas pipeline (``cfg.exec_path == "kernel"``):
         two launches — [rotate ⊕ absmax] then [smooth ⊕ quantize ⊕ int4
         GEMM] (see kernels/ops.py).  Shared by every runtime-smooth
         method; ``prepared.rotated`` selects the identity-rotation branch
         (plain "rs") vs the FWHT one ("rrs").  M comes from ``w_scale``
-        so the artifact needs no dense ``w_dq`` copy at serving time."""
+        so the artifact needs no dense ``w_dq`` copy at serving time.
+
+        Static mode feeds frozen grouped smooth scales (and the frozen
+        per-tensor α absmax) into the pipeline, which then SKIPS kernel
+        A's cross-row absmax reduction — rotation-only launch (or no
+        kernel A at all for unrotated "rs")."""
         from repro.kernels import ops as kops
+        static_sg = act_absmax = None
+        if self._static_ready(prepared, cfg):
+            ss = jnp.maximum(
+                prepared.static_smooth.astype(jnp.float32), 1e-6)
+            static_sg = smooth.group_smooth_scales(ss, prepared.group)
+            act_absmax = prepared.act_scale
         y = kops.rrs_linear_fused_fields(
             x, w_packed=prepared.w_packed,
             w_scale=prepared.w_scale, m=prepared.w_scale.shape[-1],
             group=prepared.group, rotate_block=prepared.rotate_block,
-            rotate=prepared.rotated, perm=prepared.perm)
+            rotate=prepared.rotated, perm=prepared.perm,
+            static_sg=static_sg, act_absmax=act_absmax)
         return y.astype(x.dtype)
 
     def _smooth_gemm(self, x, prepared, cfg):
         """Runtime-smooth fake-quant GEMM (paper Eq. 3 / Fig. 4): exactly
         ``smooth.rs_gemm_fakequant`` but artifact-aware (frozen perm from
-        static_reorder means w's K axis is already permuted)."""
+        static_reorder means w's K axis is already permuted).
+
+        Static mode replaces the batch Eq. 1 reduction with the frozen
+        ``static_smooth`` channel scales (and the per-token α with the
+        frozen per-tensor ``act_scale`` when present) — every row's math
+        becomes row-local, so decode is bit-invariant to batch
+        composition.  The dynamic ``cfg.reorder`` argsort is skipped
+        under frozen scales (use ``static_reorder`` for a frozen perm)."""
         w = prepared.w_dq
         lead = x.shape[:-1]
         k = x.shape[-1]
         x2 = x.reshape(-1, k)
         g = self._act_group(cfg, k)
+        if self._static_ready(prepared, cfg):
+            if prepared.perm is not None:
+                x2 = jnp.take(x2, prepared.perm, axis=-1)
+            ss = jnp.maximum(
+                prepared.static_smooth.astype(jnp.float32), 1e-6)
+            sg = smooth.group_smooth_scales(ss, g)
+            expand = jnp.repeat(sg, g) if g > 1 else sg
+            x_sm = (x2.astype(jnp.float32) / expand).astype(x2.dtype)
+            if prepared.act_scale is not None:
+                x_dq = static_fake_quant(x_sm, prepared.act_scale,
+                                         cfg.a_bits)
+            else:
+                x_dq = quant.fake_quant_per_channel(x_sm, cfg.a_bits,
+                                                    axis=-1)
+            y = (x_dq.astype(jnp.float32) * expand) \
+                @ w.astype(jnp.float32).T
+            return y.reshape(*lead, w.shape[0]).astype(x.dtype)
         if prepared.perm is not None:
             # static_reorder: the frozen perm is already folded into w's
             # K axis — gather x once, skip the runtime argsort entirely
@@ -358,7 +526,11 @@ class RTN(QuantMethod):
     """Per-token symmetric RTN activations, per-channel RTN weights."""
 
     def _apply_quant(self, x, prepared, cfg):
-        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        if self._static_ready(prepared, cfg) \
+                and prepared.act_scale is not None:
+            x_q = static_fake_quant(x, prepared.act_scale, cfg.a_bits)
+        else:
+            x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
         return x_q @ prepared.w_dq.T.astype(x.dtype)
 
 
@@ -385,7 +557,11 @@ class SmoothQuant(QuantMethod):
     def _apply_quant(self, x, prepared, cfg):
         if prepared.sq_scale is not None:
             x = x / prepared.sq_scale.astype(x.dtype)
-        x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
+        if self._static_ready(prepared, cfg) \
+                and prepared.act_scale is not None:
+            x_q = static_fake_quant(x, prepared.act_scale, cfg.a_bits)
+        else:
+            x_q = quant.fake_quant_per_channel(x, cfg.a_bits, axis=-1)
         return x_q @ prepared.w_dq.T.astype(x.dtype)
 
 
@@ -414,7 +590,11 @@ class QuaRot(QuantMethod):
 
     def _apply_quant(self, x, prepared, cfg):
         x_rot = hadamard.rotate(x, block=prepared.rotate_block)
-        x_q = quant.fake_quant_per_channel(x_rot, cfg.a_bits, axis=-1)
+        if self._static_ready(prepared, cfg) \
+                and prepared.act_scale is not None:
+            x_q = static_fake_quant(x_rot, prepared.act_scale, cfg.a_bits)
+        else:
+            x_q = quant.fake_quant_per_channel(x_rot, cfg.a_bits, axis=-1)
         return x_q @ prepared.w_dq.T.astype(x.dtype)
 
 
@@ -451,6 +631,18 @@ def tree_has_prepared(tree) -> bool:
     return bool(found)
 
 
+def tree_has_static_scales(tree) -> bool:
+    """True iff the tree has PreparedLinear leaves and EVERY one carries
+    observer-frozen scales — the precondition for serving
+    ``act_scale_mode="static"`` (see ServingEngine's check)."""
+    leaves = [l for l in jax.tree.leaves(tree, is_leaf=is_prepared)
+              if is_prepared(l)]
+    return bool(leaves) and all(
+        l.static_smooth is not None or l.act_scale is not None
+        for l in leaves)
+
+
 __all__ = ["PreparedLinear", "QuantMethod", "register_method",
            "get_method", "available_methods", "offline_prepared",
-           "is_prepared", "tree_has_prepared"]
+           "is_prepared", "tree_has_prepared", "tree_has_static_scales",
+           "set_observer_hook", "static_fake_quant"]

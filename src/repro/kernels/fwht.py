@@ -157,6 +157,37 @@ def fwht_rotate(x: jnp.ndarray, *, bn: int = 128,
     return kernel(x, jnp.asarray(plan.ha), jnp.asarray(plan.hb))
 
 
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret",
+                                             "out_dtype"))
+def fwht_rotate_cast(x: jnp.ndarray, *, block: int = 0, bn: int = 128,
+                     interpret: bool = True, out_dtype=jnp.bfloat16):
+    """Rotation WITHOUT the absmax reduction — kernel A of the STATIC
+    pipeline (``act_scale_mode="static"``): the channel maxima are
+    frozen calibration constants, so the cross-row reduction (and its
+    (1, K) f32 output) is skipped entirely.  Same rotation plan coverage
+    and ``out_dtype`` cast as :func:`fwht_absmax`."""
+    n, k = x.shape
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    plan = rotation_plan(k, block)
+    if not plan.supported:
+        raise ValueError(f"rotation (K={k}, block={block}) not "
+                         f"kernel-expressible; use the XLA fallback")
+    kernel = pl.pallas_call(
+        _fwht_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec(plan.ha.shape, lambda i: (0, 0)),
+            pl.BlockSpec(plan.hb.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), out_dtype),
+        interpret=interpret,
+    )
+    return kernel(x, jnp.asarray(plan.ha), jnp.asarray(plan.hb))
+
+
 # ---------------------------------------------------------------------------
 # kernel A: rotation (or identity) fused with the channel-absmax reduction
 # ---------------------------------------------------------------------------

@@ -113,6 +113,8 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
                             rotate_block: int = 0,
                             rotate: bool = True,
                             perm: Optional[jnp.ndarray] = None,
+                            static_sg: Optional[jnp.ndarray] = None,
+                            act_absmax: Optional[jnp.ndarray] = None,
                             interpret: Optional[bool] = None,
                             out_dtype=jnp.float32,
                             intermediate_dtype=jnp.bfloat16) -> jnp.ndarray:
@@ -133,6 +135,17 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
     (static reorder): the runtime cost is one bf16 activation gather
     between the launches plus a (K,) gather on the channel maxes; the
     smoothing *scales* stay runtime (the paper's key property).
+
+    STATIC mode (``act_scale_mode="static"``): ``static_sg`` feeds the
+    observer-frozen grouped smooth scales (K//group,), ALREADY in the
+    post-perm channel order, and kernel A's cross-row absmax reduction
+    is skipped — rotation becomes a rotation-only launch
+    (``fwht.fwht_rotate_cast``), and the unrotated "rs" branch needs no
+    kernel A at all (the dtype cast rides into kernel B's operand):
+    ONE Pallas launch total.  ``act_absmax`` additionally freezes the
+    per-tensor quant absmax so kernel B's per-token reduction goes too
+    (the static kernel-B variant).  Both drops show up in
+    :func:`modeled_linear_bytes`'s ``static2_*`` keys.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -144,6 +157,29 @@ def rrs_linear_fused_fields(x: jnp.ndarray, *, w_packed: jnp.ndarray,
     if pad:
         x2 = jnp.concatenate(
             [x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
+    if static_sg is not None:
+        # STATIC path — no online Eq. 1 reduction anywhere
+        if not rotate:
+            x_rot = x2.astype(intermediate_dtype)     # no kernel A at all
+        elif kfwht.rotation_plan(k, rotate_block).supported:
+            x_rot = kfwht.fwht_rotate_cast(x2, block=rotate_block, bn=bn,
+                                           interpret=interpret,
+                                           out_dtype=intermediate_dtype)
+        else:
+            x_rot = hadamard.rotate(x2.astype(jnp.float32),
+                                    block=rotate_block)
+            x_rot = x_rot.astype(intermediate_dtype)
+        if perm is not None:
+            # frozen scales were observed post-perm: gather x only
+            x_rot = jnp.take(x_rot, perm, axis=-1)
+        s_g = static_sg.astype(jnp.float32)
+        bm = 128 if m % 128 == 0 else _largest_div_pow2(m, 128)
+        y = rrs_smooth_gemm(x_rot, w_packed, s_g, w_scale,
+                            a_absmax=act_absmax, bn=bn, bm=bm, bk=group,
+                            out_dtype=out_dtype, interpret=interpret)
+        if pad:
+            y = y[:n]
+        return y.reshape(*lead, m)
     # launch 1: (rotation ⊕) channel absmax — ONE read of X
     if not rotate:
         x_rot, cmax = fwht_absmax(x2, rotate=False, bn=bn,
@@ -267,8 +303,13 @@ def modeled_linear_bytes(n: int, k: int, m: int, *, group: int = 128,
     (read x_rot) + act_smooth_quant (read x_rot, write x_q int8 + α_x) +
     rrs_gemm (read x_q + α_x).  fused2: kernel A (read X, write bf16
     x_rot + (K,) maxes) + kernel B (read bf16 x_rot); α_x/x_q never leave
-    VMEM.  Weights (packed nibbles + scales) and the output are common to
-    both.
+    VMEM.  static2 (``act_scale_mode="static"``): the frozen grouped
+    scales replace kernel A's cross-row reduction, so the (K,) f32 max
+    vector's write + read-back disappear and the only extra operand is
+    the tiny (K//group,) frozen vector (already counted in ``weights``-
+    style side data) — the headline static win is the eliminated online
+    PASS (one fewer launch/reduction), the HBM delta is the O(K) terms.
+    Weights (packed nibbles + scales) and the output are common to all.
     """
     weights = m * k / 2 + m * 4 + (k // group) * 4
     out = n * m * out_bytes
@@ -281,8 +322,12 @@ def modeled_linear_bytes(n: int, k: int, m: int, *, group: int = 128,
     fused_act = (n * k * in_bytes           # kernel A read
                  + n * k * mid_bytes + k * 4  # bf16 x_rot + channel maxes
                  + n * k * mid_bytes + k * 4)  # kernel B reads them back
+    static_act = (n * k * in_bytes          # rotate-only kernel A read
+                  + n * k * mid_bytes       # bf16 x_rot (no max vector)
+                  + n * k * mid_bytes)      # kernel B reads it back
     legacy = legacy_act + weights + out
     fused = fused_act + weights + out
+    static = static_act + weights + out
     return {
         "legacy3_bytes": float(legacy),
         "fused2_bytes": float(fused),
@@ -290,6 +335,9 @@ def modeled_linear_bytes(n: int, k: int, m: int, *, group: int = 128,
         "legacy3_act_bytes": float(legacy_act),
         "fused2_act_bytes": float(fused_act),
         "act_bytes_drop": float(1.0 - fused_act / legacy_act),
+        "static2_bytes": float(static),
+        "static2_act_bytes": float(static_act),
+        "static_vs_fused_bytes_drop": float(1.0 - static / fused),
     }
 
 

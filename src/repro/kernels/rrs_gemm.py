@@ -188,18 +188,72 @@ def _rrs_smooth_gemm_kernel(sg_ref,        # SMEM: (K//bk,) f32 smooth scales
         o_ref[...] = y.astype(o_ref.dtype)
 
 
+def _rrs_smooth_gemm_static_kernel(sg_ref,   # SMEM: (K//bk,) FROZEN s_g
+                                   x_ref,    # VMEM: (bn, K) bf16 strip
+                                   w_ref,    # VMEM: (bm, bk//2) packed
+                                   aw_ref,   # VMEM: (1, bm) f32
+                                   ax_ref,   # VMEM: (1, 1) f32 FROZEN absmax
+                                   o_ref,    # VMEM out: (bn, bm)
+                                   xq_ref,   # VMEM scratch: (bn, K) int8
+                                   acc_ref):  # VMEM scratch: (bn, bm) f32
+    """Kernel B, static-α variant (``act_scale_mode="static"``): the
+    per-token absmax reduction disappears — α is the frozen calibration
+    absmax / QMAX, a (1, 1) operand — so the prologue is divide + round
+    only and the (bn, 1) α scratch is gone."""
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    alpha = jnp.maximum(ax_ref[0, 0], 1e-8) / QMAX
+
+    @pl.when((j == 0) & (l == 0))
+    def _prologue():
+        x = x_ref[...].astype(jnp.float32)               # (bn, K)
+        k = x.shape[-1]
+        g = k // sg_ref.shape[0]
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) // g
+        s = sg_ref[col[0]]                               # (K,) from SMEM
+        x_sm = x / s[None, :]
+        q = jnp.clip(jnp.round(x_sm / alpha), -QMAX, QMAX)
+        xq_ref[...] = q.astype(jnp.int8)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_q = _unpack_nibbles(w_ref[...])                    # (bm, bk) int8
+    bk = 2 * w_ref.shape[1]
+    x_q = xq_ref[:, pl.ds(pl.multiple_of(l * bk, bk), bk)]
+    part = jax.lax.dot_general(                          # MXU int8 path
+        x_q, w_q,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                # (bn, bm)
+    acc_ref[...] += part.astype(jnp.float32) * sg_ref[l]
+
+    @pl.when(l == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] * alpha * aw_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "bk", "out_dtype",
                                              "interpret"))
 def rrs_smooth_gemm(x: jnp.ndarray,         # (N, K) rotated activation
                     w_packed: jnp.ndarray,  # (M, K//2) uint8 packed
                     s_g: jnp.ndarray,       # (K//bk,) f32 smooth scales
                     w_scale: jnp.ndarray,   # (M,) or (M, 1) f32
+                    a_absmax: Optional[jnp.ndarray] = None,  # (1,) frozen
                     *, bn: int = 128, bm: int = 128, bk: int = 128,
                     out_dtype=jnp.float32,
                     interpret: bool = True) -> jnp.ndarray:
-    """Pallas-call wrapper for kernel B.  K-block size bk == smooth group;
-    the per-token quant scale α_x is computed in the prologue and never
-    materialized in HBM."""
+    """Pallas-call wrapper for kernel B.  K-block size bk == smooth group.
+
+    ``a_absmax=None`` (dynamic): the per-token quant scale α_x is
+    computed in the prologue and never materialized in HBM.  With a
+    frozen per-tensor absmax (static mode) the prologue's per-token
+    reduction is skipped too — see the static kernel variant.  Either
+    way ``s_g`` may itself be frozen (calibration) or kernel A's live
+    reduction; the contract is identical."""
     n, k = x.shape
     m = w_packed.shape[0]
     if k % bk or n % bn or m % bm:
@@ -213,6 +267,31 @@ def rrs_smooth_gemm(x: jnp.ndarray,         # (N, K) rotated activation
     w_scale_row = w_scale.reshape(1, m).astype(jnp.float32)
 
     grid = (n // bn, m // bm, k // bk)
+    if a_absmax is not None:
+        kernel = pl.pallas_call(
+            _rrs_smooth_gemm_static_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((bn, k), lambda i, j, l, s: (i, 0)),
+                    pl.BlockSpec((bm, bk // 2),
+                                 lambda i, j, l, s: (j, l)),
+                    pl.BlockSpec((1, bm), lambda i, j, l, s: (0, j)),
+                    pl.BlockSpec((1, 1), lambda i, j, l, s: (0, 0)),
+                ],
+                out_specs=pl.BlockSpec((bn, bm),
+                                       lambda i, j, l, s: (i, j)),
+                scratch_shapes=[
+                    pltpu.VMEM((bn, k), jnp.int8),
+                    pltpu.VMEM((bn, bm), jnp.float32),
+                ],
+            ),
+            out_shape=jax.ShapeDtypeStruct((n, m), out_dtype),
+            interpret=interpret,
+        )
+        return kernel(s_g.astype(jnp.float32), x, w_packed, w_scale_row,
+                      a_absmax.astype(jnp.float32).reshape(1, 1))
     kernel = pl.pallas_call(
         _rrs_smooth_gemm_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -35,11 +35,15 @@ one slot (``PagedKVManager.rollback``).  Budget finishes are predicted
 (``len(out) + in_flight >= max_new_tokens``) so only EOS pays the lag.
 Greedy token streams are IDENTICAL to the blocking engine's — chaining
 feeds bit-equal inputs to the same jit'd graphs — with one honest
-caveat: under quantized activations the batch-global runtime-smooth
-scales couple rows, so an EOS-lagged row riding one extra step can
-perturb OTHER rows' tokens relative to ``run()`` on a non-overlapped
-engine.  fp activations (row-independent) are overlap-safe
-everywhere; quantized identity tests pin ``overlap=False``.
+caveat: under DYNAMIC quantized activations the batch-global
+runtime-smooth scales couple rows, so an EOS-lagged row riding one
+extra step can perturb OTHER rows' tokens relative to ``run()`` on a
+non-overlapped engine.  fp activations (row-independent) are
+overlap-safe everywhere, and so is ``act_scale_mode="static"``: the
+observer-frozen scales (``repro.calib``) make every row's quantized
+math row-local, so overlapped quantized decode is token-identical too
+(pinned in ``tests/test_async_serving.py``).  Only dynamic quantized
+identity tests still pin ``overlap=False``.
 
 The chain BREAKS (consume first, then a full blocking pass) whenever
 the next step needs consumed results to be scheduled correctly:
@@ -118,10 +122,11 @@ class AsyncServingEngine(ServingEngine):
         # silently serialize the double buffer
         self._merge_fn = jax.jit(lambda cur, new, m: jnp.where(m, new, cur))
         # frozen rows must feed token 0 exactly like the blocking loop's
-        # nxt buffer: padding is masked out of attention, but the
-        # batch-global runtime-smooth scales still see every row's
-        # embedding, so a stale sampled token in a frozen row would
-        # couple into LIVE rows' quantization
+        # nxt buffer: padding is masked out of attention, but DYNAMIC
+        # batch-global runtime-smooth scales see every row's embedding,
+        # so a stale sampled token in a frozen row would couple into
+        # LIVE rows' quantization (static frozen scales are row-local,
+        # but masking keeps the two modes' inputs bit-equal)
         self._mask_fn = jax.jit(lambda t, m: jnp.where(m, t, 0))
         # (live rows, (B,) device sample, launch wall-clock) or None
         self._inflight: Optional[tuple] = None

@@ -171,7 +171,7 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, qcfg: QuantConfig,
                  max_batch: int = 4, max_len: int = 512,
-                 prepare: bool = True, calib=None,
+                 prepare: bool = True, calib=None, calib_tokens=None,
                  scheduler: str = "continuous", cache: str = "dense",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
@@ -184,6 +184,12 @@ class ServingEngine:
         :func:`~repro.serve.prepare.load_prepared` — detected, never
         re-prepared).  ``calib`` is forwarded to ``prepare_params`` to
         enable GPTQ weights / static reorder at engine construction.
+        ``calib_tokens``: calibration token batches (an (B, S) array or
+        an iterable of them) — when ``qcfg.act_scale_mode == "static"``
+        and the tree carries no frozen scales yet, the engine runs the
+        observe→freeze pass here (``repro.calib.calibrate``); a
+        static-mode engine whose tree has neither frozen scales nor
+        calibration data fails loudly at construction.
         ``scheduler``: "continuous" (slot-level, default) or "wave"
         (legacy gang-scheduled reference).  ``cache``: "dense" (reference
         per-slot rows) or "paged" (pooled block arena + radix prefix
@@ -254,6 +260,13 @@ class ServingEngine:
         self.params = (prepare_params(params, qcfg, calib=calib,
                                       keep_dense=spec is not None)
                        if prepare and not already else params)
+        if qcfg.static_acts:
+            if calib_tokens is not None \
+                    and not methods.tree_has_static_scales(self.params):
+                from repro.calib import calibrate
+                self.params = calibrate(model, self.params, qcfg,
+                                        calib_tokens)
+            _require_static_scales(self.params)
         if spec is not None:
             _require_dense_copy(self.params)
         self.max_batch = max_batch
@@ -269,6 +282,13 @@ class ServingEngine:
                                  and self.telemetry_every > 0):
             telemetry = Telemetry()
         self.telemetry: Optional[Telemetry] = telemetry or None
+        if self.telemetry is not None and qcfg.static_acts:
+            # static-scale drift monitor: hand the probe the frozen
+            # embedding-width reference so /metrics can expose live
+            # Eq. 1 absmax over the observed (calibration) scale
+            ref = _static_smooth_reference(self.params, self.cfg.d_model)
+            if ref is not None:
+                self.telemetry.set_quant_static_reference(ref)
         # step-timeline scratch the step_once wrapper reads; the async
         # loop fills the launch/consume stamps and chain-break reason
         self._chain_break_reason: Optional[str] = None
@@ -1354,6 +1374,36 @@ def _require_dense_copy(params) -> None:
             "spec decoding needs the dense w_dq copy on every prepared "
             "leaf (the fp target path reads it); re-prepare with "
             "prepare_params(..., keep_dense=True)")
+
+
+def _require_static_scales(params) -> None:
+    """``act_scale_mode="static"`` with an uncalibrated tree would
+    silently fall back to the dynamic Eq. 1 path leaf-by-leaf — the
+    engine would serve, but with none of static mode's invariance
+    guarantees.  Fail loudly at construction instead."""
+    if not methods.tree_has_static_scales(params):
+        raise ValueError(
+            "act_scale_mode='static' needs observer-frozen scales on "
+            "every prepared leaf; run repro.calib.calibrate (or pass "
+            "calib_tokens=...) — or serve a calibrated artifact via "
+            "from_artifact")
+
+
+def _static_smooth_reference(params, d_model: int):
+    """First frozen per-channel absmax vector at the embedding width —
+    the quant-health drift monitor's reference (live Eq. 1 maxima over
+    the embed rows divide by this).  None when nothing matches."""
+    found = []
+
+    def one(leaf):
+        if (not found and methods.is_prepared(leaf)
+                and leaf.static_smooth is not None
+                and leaf.static_smooth.shape[-1] == d_model):
+            found.append(np.asarray(
+                leaf.static_smooth, np.float32).reshape(-1, d_model)[0])
+
+    jax.tree.map(one, params, is_leaf=methods.is_prepared)
+    return found[0] if found else None
 
 
 def _paged_set_rows(cache, pos_mask, pos_vals, table_mask, tables):

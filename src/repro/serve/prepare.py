@@ -18,7 +18,10 @@ quant → matmul).
 plus a JSON manifest (structure, per-leaf static metadata, and the
 QuantConfig via the ``configs.base.config_to_json`` machinery shared
 with ckpt/), so a model can be prepared once offline and served from the
-artifact.
+artifact.  Observer-frozen static activation scales (``static_smooth`` /
+``act_scale``, written by ``repro.calib``) are ordinary PreparedLinear
+array fields, so calibrate-once → freeze → serve-anywhere round-trips
+through the same artifact with no extra plumbing.
 
 Memory: for ``exec_path == "kernel"`` artifacts the runtime-smooth
 methods drop the dense fake-quant ``w_dq`` copy at prepare time — the

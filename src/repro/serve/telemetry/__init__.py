@@ -80,6 +80,7 @@ class Telemetry:
         self.timeline = StepTimeline(maxlen=timeline_len)
         self._spike_factor = spike_factor
         self._quant = None              # lazy QuantHealthProbe
+        self._quant_static_ref = None   # frozen observer scales (K,)
         r = self.registry
         self._c_submitted = r.counter(
             "repro_requests_submitted_total",
@@ -196,12 +197,23 @@ class Telemetry:
 
     # -- quant health ------------------------------------------------------
 
+    def set_quant_static_reference(self, ref) -> None:
+        """Frozen observer scales for the first quantized GEMM's input;
+        the quant-health probe divides live Eq. 1 absmax by these to
+        emit ``repro_quant_static_scale_drift``.  Survives the probe's
+        lazy construction."""
+        self._quant_static_ref = ref
+        if self._quant is not None:
+            self._quant.set_static_reference(ref)
+
     def quant_health(self, params, tokens, qcfg,
                      emb_scale: float = 1.0) -> Optional[Dict[str, float]]:
         if self._quant is None:
             from repro.serve.telemetry.quant_health import QuantHealthProbe
             self._quant = QuantHealthProbe(self.registry,
                                            spike_factor=self._spike_factor)
+            if self._quant_static_ref is not None:
+                self._quant.set_static_reference(self._quant_static_ref)
         return self._quant.sample(params, tokens, qcfg,
                                   emb_scale=emb_scale)
 

@@ -16,6 +16,12 @@ visible on ``/metrics`` instead of only in offline figures:
   construction), a drifting one climbs
 * ``spike_outliers``     — channels with s_j > ``spike_factor`` × median
   (the paper's spike-outlier population, Fig. 2)
+* ``static_scale_drift`` — (static mode only) max over channels of the
+  live Eq. 1 absmax divided by the observer-frozen calibration scale.
+  Drift ≈ 1 means the calibration set still covers the live traffic;
+  drift ≫ 1 means live activations exceed the frozen scales (int4
+  saturation risk — recalibrate); drift ≪ 1 means the frozen scales
+  are slack (quantization coarser than needed)
 
 The probe is a SEPARATE small jitted function over the embedding rows of
 the current step's tokens — it never touches the decode graph, so
@@ -66,6 +72,22 @@ def _probe(embed: jnp.ndarray, tokens: jnp.ndarray, emb_scale: float,
     return smooth_max, spread, spikes, clip
 
 
+@partial(jax.jit, static_argnames=("use_rotation", "rotate_block"))
+def _drift_probe(embed: jnp.ndarray, tokens: jnp.ndarray,
+                 emb_scale: float, s_ref: jnp.ndarray, *,
+                 use_rotation: bool, rotate_block: int):
+    """max_j of live Eq. 1 absmax over the frozen observed scale —
+    calibration-staleness in one number (same activation tensor as
+    :func:`_probe`, same rotation)."""
+    x = jnp.take(embed, tokens.reshape(-1), axis=0).astype(jnp.float32)
+    x = x * emb_scale
+    if use_rotation:
+        blk = hadamard.pick_rotate_block(x.shape[-1], rotate_block)
+        x = hadamard.rotate(x, block=blk)
+    s = smooth.runtime_scales(x)                       # Eq. 1, (K,)
+    return jnp.max(s / jnp.maximum(s_ref, 1e-8))
+
+
 class QuantHealthProbe:
     """Samples Eq. 1 health numbers into registry histograms + gauges.
 
@@ -77,6 +99,7 @@ class QuantHealthProbe:
     def __init__(self, registry, spike_factor: float = SPIKE_FACTOR):
         self.spike_factor = float(spike_factor)
         self.samples = 0
+        self._static_ref = None           # frozen observer scales (K,)
         r = registry
         from repro.serve.telemetry.metrics import log_buckets
         self._h_max = r.histogram(
@@ -95,6 +118,15 @@ class QuantHealthProbe:
             "repro_quant_spike_outliers",
             "channels with scale > spike_factor x median, sampled steps",
             bounds=log_buckets(1.0, 4096.0, 25)).default
+        # log buckets centered on 1.0 spanning 2^-6 .. 2^6: drift >> 1
+        # means live absmax exceeds the frozen calibration scales
+        self._h_drift = r.histogram(
+            "repro_quant_static_scale_drift",
+            "live Eq.1 absmax / observer-frozen scale, max over channels",
+            bounds=log_buckets(2.0 ** -6, 2.0 ** 6, 25)).default
+        self._g_drift = r.gauge(
+            "repro_quant_static_scale_drift_last",
+            "most recent sampled static-scale drift ratio").default
         self._g_last: Dict[str, object] = {
             "smooth_scale_max": r.gauge(
                 "repro_quant_smooth_scale_max_last",
@@ -109,6 +141,16 @@ class QuantHealthProbe:
                 "repro_quant_spike_outliers_last",
                 "most recent sampled spike-outlier count").default,
         }
+
+    def set_static_reference(self, s_ref) -> None:
+        """Install the observer-frozen per-channel scales (K,) so
+        :meth:`sample` also records ``static_scale_drift`` — live Eq. 1
+        absmax over these frozen values.  Pass None to disable."""
+        if s_ref is None:
+            self._static_ref = None
+            return
+        ref = jnp.asarray(s_ref, jnp.float32).reshape(-1)
+        self._static_ref = ref
 
     def sample(self, params, tokens, qcfg, emb_scale: float = 1.0
                ) -> Optional[Dict[str, float]]:
@@ -136,6 +178,15 @@ class QuantHealthProbe:
             "spike_outliers": float(spikes),
             "int4_clip_rate": float(clip),
         }
+        ref = self._static_ref
+        if ref is not None and ref.shape[0] == embed.shape[-1]:
+            drift = float(_drift_probe(
+                embed, tokens, float(emb_scale), ref,
+                use_rotation=bool(qcfg.uses_rotation),
+                rotate_block=int(qcfg.rotate_block)))
+            out["static_scale_drift"] = drift
+            self._h_drift.observe(max(drift, 1e-9))
+            self._g_drift.set(drift)
         self._h_max.observe(max(out["smooth_scale_max"], 1e-9))
         self._h_spread.observe(max(out["smooth_scale_spread"], 1.0))
         self._h_clip.observe(max(out["int4_clip_rate"], 1e-9))

@@ -6,10 +6,13 @@ SSE/HTTP front-end smoke.
 
 Identity pins run fp activations (``QuantConfig()``): rows are
 independent, so the chained launch is overlap-safe everywhere.  Under
-quantized activations the batch-global runtime-smooth scales couple
-rows — an EOS-lagged row riding one extra chained step can perturb
-OTHER rows' tokens — so the quantized identity pin runs
-``overlap=False`` (documented in the async_core docstring)."""
+DYNAMIC quantized activations the batch-global runtime-smooth scales
+couple rows — an EOS-lagged row riding one extra chained step can
+perturb OTHER rows' tokens — so the dynamic quantized identity pin
+runs ``overlap=False`` (documented in the async_core docstring).
+``act_scale_mode="static"`` (observer-frozen scales, ``repro.calib``)
+removes the coupling: every row's quantized math is row-local, so the
+static quantized pin runs the full double-buffered chain."""
 import dataclasses
 
 import numpy as np
@@ -96,6 +99,25 @@ def test_quantized_identity_overlap_off(tiny):
     eng.run()
     assert [h.result(timeout=5) for h in handles] == ref_out
     assert eng.stats["overlapped_steps"] == 0
+
+
+def test_quantized_identity_overlap_on_static_scales(tiny):
+    """With observer-frozen static scales every row's quantized math is
+    row-local — no batch-global Eq. 1 coupling — so the double-buffered
+    chain (``overlap=True``) is token-identical to the blocking engine
+    even under int4 activations.  This is the restriction the dynamic
+    pin above works around; calibration lifts it."""
+    model, params = tiny
+    qstat = dataclasses.replace(QRRS, act_scale_mode="static")
+    calib = 1 + np.random.default_rng(7).integers(0, 200, size=(4, 24))
+    kw = dict(max_batch=2, max_len=96, calib_tokens=calib)
+    ref_out = _ref_outputs(model, params, qstat, kw)
+    eng = AsyncServingEngine(model, params, qstat, overlap=True, **kw)
+    handles = [eng.stream(p, max_new_tokens=b)
+               for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run()
+    assert [h.result(timeout=5) for h in handles] == ref_out
+    assert eng.stats["overlapped_steps"] > 0
 
 
 def test_overlap_stats_and_server_stats(tiny):

@@ -1,0 +1,246 @@
+"""Calibration observer subsystem: host-side reductions, the observe →
+freeze lifecycle through a real model forward (jit + lax.scan), static
+vs dynamic apply semantics, artifact round-trip of the frozen scales,
+config validation, and the serving-engine integration (calibrate-at-
+construction, fail-loud on an uncalibrated static config, serve from a
+frozen artifact)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.calib import (ObserverContext, calibrate, freeze, observing,
+                         run_observers, tag_params, untag_params)
+from repro.calib.observers import (EMAObserver, MinMaxObserver,
+                                   ReservoirSampler)
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import methods
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.prepare import (load_prepared, prepare_params,
+                                 save_prepared)
+
+TINY = ModelConfig(name="t32", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=260,
+                   max_seq_len=256, dtype="float32")
+QRRS = QuantConfig(4, 4, 4, method="rrs", group_size=32)
+QSTATIC = dataclasses.replace(QRRS, act_scale_mode="static")
+CALIB = 1 + np.random.default_rng(0).integers(0, 200, size=(4, 16))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = build_model(TINY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def frozen_tree(tiny):
+    model, params = tiny
+    return calibrate(model, params, QSTATIC, CALIB)
+
+
+# ---------------------------------------------------------------------------
+# host-side reduction primitives
+# ---------------------------------------------------------------------------
+
+def test_minmax_and_ema_observers():
+    mm = MinMaxObserver()
+    mm.update(np.array([1.0, 5.0]))
+    mm.update(np.array([3.0, 2.0]))
+    np.testing.assert_array_equal(mm.value, [3.0, 5.0])
+    assert mm.count == 2
+    ema = EMAObserver(decay=0.5)
+    ema.update(np.array([4.0]))            # first update seeds
+    ema.update(np.array([8.0]))
+    np.testing.assert_allclose(ema.value, [6.0])
+    with pytest.raises(ValueError):
+        EMAObserver(decay=1.5)
+
+
+def test_reservoir_sampler_quantile_and_cap():
+    rs = ReservoirSampler(cap=8, seed=0)
+    for i in range(100):
+        rs.update(np.array([float(i)]))
+    assert rs.seen == 100 and len(rs._items) == 8
+    q = rs.quantile(1.0)
+    assert 0.0 <= float(q) <= 99.0
+    # under-cap: quantile is exact
+    small = ReservoirSampler(cap=64, seed=0)
+    small.update(np.arange(11, dtype=np.float64))
+    np.testing.assert_allclose(small.quantile(0.5), 5.0)
+
+
+def test_observer_context_validation():
+    with pytest.raises(ValueError):
+        ObserverContext(smooth_reduction="bogus")
+    with pytest.raises(ValueError):
+        ObserverContext(act_quantile=0.0)
+    ctx = ObserverContext()
+    with observing(ctx):
+        with pytest.raises(RuntimeError):   # nesting rejected
+            with observing(ObserverContext()):
+                pass
+    assert methods._OBSERVER_HOOK is None   # always uninstalled
+
+
+# ---------------------------------------------------------------------------
+# observe -> freeze through a real model (jit + scanned layer stack)
+# ---------------------------------------------------------------------------
+
+def test_run_observers_collects_per_leaf_stats(tiny):
+    model, params = tiny
+    prepared = prepare_params(params, QSTATIC)
+    ctx = run_observers(model, prepared, QSTATIC, CALIB)
+    scales = ctx.scales()
+    assert scales                            # every quantized leaf seen
+    for tag, s in scales.items():
+        assert s.channel_absmax.ndim == 1
+        assert np.all(s.channel_absmax >= 0)
+        assert s.act_absmax > 0
+        assert s.n_observations > 0 and s.n_tokens > 0
+    # a raw (unprepared) tree is rejected up front
+    with pytest.raises(ValueError):
+        run_observers(model, params, QSTATIC, CALIB)
+
+
+def test_tag_untag_roundtrip(tiny):
+    model, params = tiny
+    prepared = prepare_params(params, QSTATIC)
+    tagged = tag_params(prepared)
+    tags = [l.obs_tag for l in jax.tree.leaves(
+        tagged, is_leaf=methods.is_prepared) if methods.is_prepared(l)]
+    assert tags and all(t is not None for t in tags)
+    assert len(set(tags)) == len(tags)       # unique per leaf
+    clean = untag_params(tagged)
+    assert all(l.obs_tag is None for l in jax.tree.leaves(
+        clean, is_leaf=methods.is_prepared) if methods.is_prepared(l))
+
+
+def test_freeze_broadcasts_over_stacked_leaves(frozen_tree):
+    saw_stacked = False
+    for leaf in jax.tree.leaves(frozen_tree,
+                                is_leaf=methods.is_prepared):
+        if not methods.is_prepared(leaf):
+            continue
+        assert leaf.static_smooth is not None
+        assert leaf.act_scale is not None
+        assert leaf.obs_tag is None          # freeze clears the tag
+        ref = leaf.w_packed if leaf.w_packed is not None else leaf.w_dq
+        lead = ref.shape[:-2]
+        assert leaf.static_smooth.shape[:len(lead)] == lead
+        assert leaf.act_scale.shape == lead + (1,)
+        saw_stacked = saw_stacked or bool(lead)
+    assert saw_stacked                       # the scanned layer stack
+
+
+def test_freeze_strict_on_unobserved_leaves(tiny):
+    model, params = tiny
+    prepared = prepare_params(params, QSTATIC)
+    ctx = run_observers(model, prepared, QSTATIC, CALIB)
+    partial = dict(list(ctx.scales().items())[:1])
+    with pytest.raises(ValueError):
+        freeze(prepared, partial, QSTATIC)
+    relaxed = freeze(prepared, partial, QSTATIC, strict=False)
+    froz = [l.static_smooth is not None for l in jax.tree.leaves(
+        relaxed, is_leaf=methods.is_prepared) if methods.is_prepared(l)]
+    assert any(froz) and not all(froz)
+    assert not methods.tree_has_static_scales(relaxed)
+
+
+@pytest.mark.parametrize("reduction", ["minmax", "ema", "quantile"])
+def test_smooth_reductions_all_freeze(tiny, reduction):
+    model, params = tiny
+    frozen = calibrate(model, params, QSTATIC, CALIB,
+                       smooth_reduction=reduction)
+    assert methods.tree_has_static_scales(frozen)
+
+
+def test_static_apply_differs_from_dynamic_and_is_row_local(frozen_tree,
+                                                            tiny):
+    """The frozen scales actually change the math (dynamic vs static
+    outputs differ on a batch whose Eq. 1 maxes differ from the
+    calibration set) and static is row-local: a row's output is
+    bit-identical whatever the other rows contain."""
+    model, _ = tiny
+    toks = jnp.asarray(1 + np.random.default_rng(5).integers(
+        0, 200, size=(2, 8)))
+    dyn = model.forward(frozen_tree, {"tokens": toks}, QRRS)[0]
+    sta = model.forward(frozen_tree, {"tokens": toks}, QSTATIC)[0]
+    assert not np.array_equal(np.asarray(dyn), np.asarray(sta))
+    other = toks.at[1].set(jnp.roll(toks[1], 3))
+    sta2 = model.forward(frozen_tree, {"tokens": other}, QSTATIC)[0]
+    np.testing.assert_array_equal(np.asarray(sta[0]), np.asarray(sta2[0]))
+    # dynamic batch-global scales are NOT row-local on the same pair
+    dyn2 = model.forward(frozen_tree, {"tokens": other}, QRRS)[0]
+    assert not np.array_equal(np.asarray(dyn[0]), np.asarray(dyn2[0]))
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trip (CI: calibration round-trip smoke)
+# ---------------------------------------------------------------------------
+
+def test_frozen_scales_survive_save_load(tmp_path, frozen_tree, tiny):
+    model, _ = tiny
+    path = str(tmp_path / "static_artifact")
+    save_prepared(path, frozen_tree, QSTATIC)
+    loaded, qcfg = load_prepared(path)
+    assert qcfg.act_scale_mode == "static"
+    assert methods.tree_has_static_scales(loaded)
+    orig = [l for l in jax.tree.leaves(frozen_tree,
+                                       is_leaf=methods.is_prepared)
+            if methods.is_prepared(l)]
+    back = [l for l in jax.tree.leaves(loaded,
+                                       is_leaf=methods.is_prepared)
+            if methods.is_prepared(l)]
+    assert len(orig) == len(back)
+    for a, b in zip(orig, back):
+        np.testing.assert_array_equal(np.asarray(a.static_smooth),
+                                      np.asarray(b.static_smooth))
+        np.testing.assert_array_equal(np.asarray(a.act_scale),
+                                      np.asarray(b.act_scale))
+    toks = jnp.asarray(CALIB[:1])
+    y0 = model.forward(frozen_tree, {"tokens": toks}, QSTATIC)[0]
+    y1 = model.forward(loaded, {"tokens": toks}, QSTATIC)[0]
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_engine_from_frozen_artifact_serves_static(tmp_path, frozen_tree,
+                                                   tiny):
+    """ServingEngine.from_artifact on a frozen artifact decodes the same
+    tokens as an engine that calibrated at construction — the
+    calibrate-once → serve-anywhere path."""
+    model, params = tiny
+    path = str(tmp_path / "static_artifact")
+    save_prepared(path, frozen_tree, QSTATIC)
+    eng_a = ServingEngine.from_artifact(model, path, max_batch=2,
+                                        max_len=96)
+    eng_b = ServingEngine(model, params, QSTATIC, max_batch=2,
+                          max_len=96, calib_tokens=CALIB)
+    outs = []
+    for eng in (eng_a, eng_b):
+        eng.submit("abcdef", max_new_tokens=6)
+        outs.append(eng.run()[0].out_tokens)
+    assert outs[0] == outs[1] and len(outs[0]) == 6
+
+
+# ---------------------------------------------------------------------------
+# config + engine guards
+# ---------------------------------------------------------------------------
+
+def test_act_scale_mode_validation():
+    with pytest.raises(ValueError):
+        QuantConfig(4, 4, act_scale_mode="sometimes")
+    assert QSTATIC.static_acts
+    assert not QRRS.static_acts
+    # fp activations never take the static path, whatever the knob says
+    assert not QuantConfig(act_scale_mode="static").static_acts
+
+
+def test_uncalibrated_static_engine_raises(tiny):
+    model, params = tiny
+    with pytest.raises(ValueError, match="static"):
+        ServingEngine(model, params, QSTATIC, max_batch=2, max_len=96)

@@ -211,6 +211,135 @@ def test_legacy_f32_intermediate_oracle_mode():
 
 
 # ---------------------------------------------------------------------------
+# static pipeline (act_scale_mode="static"): the absmax pass is GONE
+# ---------------------------------------------------------------------------
+
+def _pallas_out_avals(jaxpr, acc):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            for ov in eqn.outvars:
+                acc.append((tuple(ov.aval.shape), ov.aval.dtype))
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                _pallas_out_avals(v.jaxpr, acc)
+            elif isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        _pallas_out_avals(vv.jaxpr, acc)
+    return acc
+
+
+def test_static_rrs_skips_absmax_reduction():
+    """rrs static: still two launches (rotation-only kernel A + kernel
+    B), but NO pallas output carries the (1, K) f32 channel-max vector —
+    the cross-row Eq. 1 reduction is provably absent from the jaxpr.
+    The dynamic counterpart on the same shapes DOES emit it."""
+    k = 512
+    x, w = _mk(64, 128, k)
+    weights = ops.RRSWeights(w, group=128)
+    sg = jnp.full((k // 128,), 2.0, jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda xx: ops.rrs_linear_fused_fields(
+        xx, w_packed=weights.w_packed, w_scale=weights.w_scale,
+        m=weights.m, group=128, static_sg=sg))(x)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 2
+    outs = _pallas_out_avals(jaxpr.jaxpr, [])
+    assert not any(s == (1, k) and dt == jnp.float32 for s, dt in outs)
+    dyn = jax.make_jaxpr(lambda xx: ops.rrs_linear_fused(xx, weights))(x)
+    douts = _pallas_out_avals(dyn.jaxpr, [])
+    assert any(s == (1, k) and dt == jnp.float32 for s, dt in douts)
+
+
+def test_static_rs_is_single_launch():
+    """Unrotated rs static needs no kernel A at all — the dtype cast
+    rides into kernel B's operand: ONE Pallas launch total (vs two
+    dynamic)."""
+    k, m, g = 512, 128, 128
+    x, _ = _mk(32, m, k)
+    w = jnp.asarray(np.random.default_rng(2).standard_normal((m, k))
+                    * 0.05, jnp.float32)
+    codes, scale = quant.quantize_per_channel(w, 4, axis=-1)
+    w_packed = ops.pack_int4_kblocks(codes, g)
+    w_scale = scale.reshape(-1)
+    sg = jnp.full((k // g,), 2.0, jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda xx: ops.rrs_linear_fused_fields(
+        xx, w_packed=w_packed, w_scale=w_scale, m=m, group=g,
+        rotate=False, static_sg=sg))(x)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+    dyn = jax.make_jaxpr(lambda xx: ops.rrs_linear_fused_fields(
+        xx, w_packed=w_packed, w_scale=w_scale, m=m, group=g,
+        rotate=False))(x)
+    assert _count_pallas_calls(dyn.jaxpr) == 2
+
+
+def test_static_equals_dynamic_when_frozen_at_runtime_scales():
+    """Numerics pin: feeding the static path the EXACT runtime grouped
+    scales of this batch (what kernel A would have reduced) reproduces
+    the dynamic pipeline bit-for-bit — the static kernels change where
+    the scales come from, not what kernel B computes."""
+    from repro.core import smooth
+    from repro.kernels.fwht import fwht_absmax
+    n, m, k, g = 64, 128, 512, 128
+    x, w = _mk(n, m, k, seed=9)
+    weights = ops.RRSWeights(w, group=g)
+    _, cmax = fwht_absmax(x, bn=ops._row_geometry(n)[0])
+    sg = smooth.group_smooth_scales(jnp.maximum(cmax, 1e-6), g)
+    y_dyn = ops.rrs_linear_fused(x, weights)
+    y_sta = ops.rrs_linear_fused_fields(
+        x, w_packed=weights.w_packed, w_scale=weights.w_scale,
+        m=weights.m, group=g, static_sg=sg)
+    np.testing.assert_array_equal(np.asarray(y_dyn), np.asarray(y_sta))
+
+
+def test_static_frozen_alpha_kernel_sane():
+    """The fully static kernel-B variant (frozen per-tensor α absmax —
+    no per-token reduction either) stays close to the dynamic result
+    when the frozen absmax covers the batch, and exactly matches it on
+    a single row whose absmax IS the frozen value."""
+    from repro.core import smooth
+    from repro.kernels.fwht import fwht_absmax
+    m, k, g = 128, 512, 128
+    x, w = _mk(1, m, k, seed=4)
+    weights = ops.RRSWeights(w, group=g)
+    x_rot, cmax = fwht_absmax(x, bn=1)
+    sg = smooth.group_smooth_scales(jnp.maximum(cmax, 1e-6), g)
+    x_sm = x_rot.astype(jnp.float32) / jnp.repeat(sg, g)
+    a_absmax = jnp.max(jnp.abs(x_sm))
+    y_dyn = ops.rrs_linear_fused(x, weights)
+    y_sta = ops.rrs_linear_fused_fields(
+        x, w_packed=weights.w_packed, w_scale=weights.w_scale,
+        m=weights.m, group=g, static_sg=sg, act_absmax=a_absmax)
+    np.testing.assert_array_equal(np.asarray(y_dyn), np.asarray(y_sta))
+
+
+def test_method_seam_static_artifact_launch_counts():
+    """Through the registry: a frozen kernel artifact under
+    act_scale_mode="static" lowers to the reduced launch counts (rrs: 2
+    launches, none emitting the (1, K) reduction; rs: 1 launch), while
+    the SAME artifact under dynamic config still runs the dynamic
+    pipeline — the config knob alone flips the path."""
+    k, m, g = 256, 128, 128
+    x, w = _mk(32, m, k)
+    for name, n_static in (("rrs", 2), ("rs", 1)):
+        cfg_d = QuantConfig(4, 4, method=name, group_size=g,
+                            exec_path="kernel")
+        cfg_s = QuantConfig(4, 4, method=name, group_size=g,
+                            exec_path="kernel", act_scale_mode="static")
+        meth = methods.get_method(name)
+        pl_ = meth.prepare_weight(w, cfg_d)
+        frozen = meth.freeze_scales(pl_, cfg_s, np.full(k, 2.0), 1.0)
+        jx = jax.make_jaxpr(
+            lambda xx: meth.apply(xx, frozen, cfg_s))(x)
+        assert _count_pallas_calls(jx.jaxpr) == n_static, name
+        assert not any(s == (1, k) and dt == jnp.float32
+                       for s, dt in _pallas_out_avals(jx.jaxpr, [])), name
+        jd = jax.make_jaxpr(
+            lambda xx: meth.apply(xx, frozen, cfg_d))(x)
+        assert _count_pallas_calls(jd.jaxpr) == 2, name
+        y = meth.apply(x, frozen, cfg_s)
+        assert not bool(jnp.any(jnp.isnan(y)))
+
+
+# ---------------------------------------------------------------------------
 # property test (hypothesis): random shapes through the full pipeline
 # ---------------------------------------------------------------------------
 

@@ -417,6 +417,63 @@ def test_paged_wave_scheduler_parity():
 
 
 # ---------------------------------------------------------------------------
+# static scales: batch-composition invariance (calibration acceptance)
+# ---------------------------------------------------------------------------
+
+QSTATIC = QuantConfig(4, 4, 4, method="rrs", group_size=32,
+                      act_scale_mode="static")
+CALIB = 1 + np.random.default_rng(11).integers(0, 200, size=(4, 24))
+
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+def test_static_int4_batch_composition_invariance(cache):
+    """Under ``act_scale_mode="static"`` the observer-frozen scales make
+    every row's quantized math row-local, so the SAME request decodes
+    token-IDENTICALLY alone vs co-batched with a stranger — the
+    composition that legitimately perturbs tokens under dynamic
+    batch-global Eq. 1 scales (every engine graph is max_batch-shaped,
+    so the jitted program is literally the same; only the other row's
+    content differs)."""
+    prompt = list(range(40, 60))
+    stranger = list(range(100, 117))
+
+    def mk():
+        return _mk_engine(QSTATIC, cache=cache, cfg=TINY32, max_batch=2,
+                          max_len=96, calib_tokens=CALIB)
+
+    eng = mk()
+    eng.submit(prompt, max_new_tokens=8)
+    alone = eng.run()[0].out_tokens
+    assert len(alone) == 8
+
+    eng2 = mk()
+    eng2.submit(prompt, max_new_tokens=8)
+    eng2.submit(stranger, max_new_tokens=8)
+    done = sorted(eng2.run(), key=lambda r: r.rid)
+    assert done[0].out_tokens == alone
+
+
+def test_static_int4_invariant_across_paged_prefix_hit():
+    """The third composition: the same prompt resubmitted after its
+    chain is radix-cached admits via prefix reuse (blocks carried over
+    from the earlier prefill, only the partial tail recomputed) AND
+    co-batched with a stranger — still token-identical to the cold,
+    alone decode under static int4."""
+    prompt = list(range(40, 60))
+    stranger = list(range(100, 117))
+    eng = _mk_engine(QSTATIC, cache="paged", cfg=TINY32, max_batch=2,
+                     max_len=96, calib_tokens=CALIB)
+    eng.submit(prompt, max_new_tokens=8)
+    alone = eng.run()[0].out_tokens
+    assert eng.stats["prefix_hit_tokens"] == 0
+    eng.submit(prompt, max_new_tokens=8)
+    eng.submit(stranger, max_new_tokens=8)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert eng.stats["prefix_hit_tokens"] > 0     # reuse actually engaged
+    assert done[0].out_tokens == alone
+
+
+# ---------------------------------------------------------------------------
 # submit truncation flag (satellite)
 # ---------------------------------------------------------------------------
 
